@@ -1,0 +1,41 @@
+"""Roofline table from the dry-run artifacts (launch/dryrun.py emits one
+JSON per arch x shape x mesh into artifacts/dryrun)."""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks.common import report
+
+ARTIFACT_DIR = os.environ.get("REPRO_ARTIFACTS", "/root/repo/artifacts/dryrun")
+
+
+def run():
+    files = sorted(glob.glob(os.path.join(ARTIFACT_DIR, "*.json")))
+    if not files:
+        report("roofline/none", 0.0, "no dry-run artifacts; run "
+               "`python -m repro.launch.dryrun --all` first")
+        return {}
+    rows = {}
+    for f in files:
+        with open(f) as fh:
+            d = json.load(fh)
+        key = f"{d['arch']}|{d['shape']}|{d['mesh']}"
+        tdom = max(d["t_compute_s"], d["t_memory_s"], d["t_collective_s"])
+        rows[key] = d
+        report(
+            f"roofline/{d['arch']}/{d['shape']}/{d['mesh']}"
+            + (f"/{d['variant']}" if d.get("variant", "faithful") != "faithful" else ""),
+            tdom * 1e6,
+            f"bottleneck={d['bottleneck']};tc_ms={d['t_compute_s']*1e3:.2f};"
+            f"tm_ms={d['t_memory_s']*1e3:.2f};tcoll_ms={d['t_collective_s']*1e3:.2f};"
+            f"useful={d['useful_flops_ratio']:.3f};"
+            f"mem_gib={(d.get('memory_per_device_bytes') or 0)/2**30:.1f}",
+        )
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,44 @@
+"""Guarantee validation bench: measured wall-clock speed-up vs the
+guaranteed factor 1/(1 - t0) across a t0 grid (fixed trained model, so the
+ONLY variable is the warm-start step count — the paper's structural claim).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import moons_model_config, report, timed_generate, train_dfm
+from repro.core import CorruptionDraft
+from repro.core.guarantees import warm_nfe
+from repro.data import moons_dataset
+
+
+def run(steps: int = 150, num: int = 2048, seed: int = 0):
+    cfg = moons_model_config()
+    data = moons_dataset(4096, seed=seed)
+    rng = np.random.default_rng(seed)
+    src = rng.integers(0, 128, size=data.shape).astype(np.int32)
+    model, state = train_dfm(cfg, src, data, t0=0.0, steps=steps, seed=seed)
+    cold_nfe = 64
+
+    _, t_cold, _ = timed_generate(model, state.params, cfg, t0=0.0,
+                                  cold_nfe=cold_nfe, num=num, seed=seed)
+    report("speedup/cold", t_cold / num * 1e6, f"nfe={cold_nfe}")
+
+    draft = CorruptionDraft(data=data, vocab_size=128, corruption=0.1)
+    rows = {}
+    for t0 in (0.25, 0.5, 0.75, 0.8, 0.9):
+        _, t_warm, rep = timed_generate(model, state.params, cfg, t0=t0,
+                                        cold_nfe=cold_nfe, num=num,
+                                        draft=draft, seed=seed)
+        measured = t_cold / t_warm
+        guaranteed = cold_nfe / warm_nfe(cold_nfe, t0)
+        rows[t0] = (measured, guaranteed)
+        report(f"speedup/t0={t0}", t_warm / num * 1e6,
+               f"measured={measured:.2f}x;nfe_guaranteed={guaranteed:.2f}x;"
+               f"nfe={warm_nfe(cold_nfe, t0)}")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

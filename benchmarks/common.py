@@ -1,0 +1,71 @@
+"""Shared benchmark utilities: model/trainer builders at CPU scale and the
+CSV reporting contract (name,us_per_call,derived)."""
+
+from __future__ import annotations
+
+import time
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig, RunConfig
+from repro.core import WarmStartPath, WarmStartPipeline, pair_iterator
+from repro.models import build_model
+from repro.training import Trainer
+
+ROWS = []
+
+
+def report(name: str, us_per_call: float, derived: str):
+    row = f"{name},{us_per_call:.1f},{derived}"
+    ROWS.append(row)
+    print(row, flush=True)
+
+
+def moons_model_config() -> ModelConfig:
+    """The paper's §4.1 velocity network: 4-layer MLP-ish transformer over
+    N=2 tokens, h=128 (we use attention blocks of the same width — the
+    2-token attention degenerates to an MLP with token mixing)."""
+    return ModelConfig(
+        name="moons-mlp", family="dense", num_layers=4, d_model=128,
+        num_heads=4, num_kv_heads=4, d_ff=512, vocab_size=128,
+        pattern=("attn",), norm="layernorm", mlp_gated=False, act="gelu",
+        tie_embeddings=False, dtype="float32", max_seq_len=8,
+    )
+
+
+def train_dfm(cfg: ModelConfig, src: np.ndarray, tgt: np.ndarray, *,
+              t0: float, steps: int, batch_size: int = 256,
+              lr: float = 1e-3, seed: int = 0, init_state=None):
+    model = build_model(cfg)
+    run = RunConfig(total_steps=steps, batch_size=batch_size,
+                    learning_rate=lr, warmup_steps=max(10, steps // 20),
+                    log_every=max(50, steps // 4), seed=seed)
+    trainer = Trainer(model, cfg, run, path=WarmStartPath(t0=t0))
+    state = init_state if init_state is not None else trainer.init_state(
+        jax.random.key(seed))
+    rng = np.random.default_rng(seed)
+    state = trainer.fit(state, pair_iterator(src, tgt, batch_size, rng), steps=steps)
+    return model, state
+
+
+def timed_generate(model, params, cfg, *, t0: float, cold_nfe: int, num: int,
+                   draft=None, seed: int = 0, temperature: float = 1.0,
+                   argmax_final: bool = False):
+    pipe = WarmStartPipeline(
+        model_fn=lambda toks, t: model.dfm_apply(params, toks, t),
+        draft=draft, path=WarmStartPath(t0=t0), cold_nfe=cold_nfe,
+        vocab_size=cfg.vocab_size, seq_len=cfg.max_seq_len,
+        temperature=temperature, argmax_final=argmax_final,
+    )
+    gen = jax.jit(lambda rng: pipe.generate(rng, num)[0])
+    compiled = gen.lower(jax.random.key(seed)).compile()  # AOT: no warm-up run
+    t0_w = time.perf_counter()
+    x = jax.block_until_ready(compiled(jax.random.key(seed + 1)))
+    dt = time.perf_counter() - t0_w
+    from repro.core import guarantees
+    rep = guarantees.speedup_report(
+        cold_nfe, t0, draft.cost_ratio if draft is not None else 0.0)
+    return np.asarray(x), dt, rep

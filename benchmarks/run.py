@@ -1,0 +1,64 @@
+"""Benchmark harness — one function per paper table/figure plus the
+roofline, guarantee, and kernel benches. Prints ``name,us_per_call,derived``
+CSV rows.
+
+Usage:  PYTHONPATH=src python -m benchmarks.run [--fast] [--only table1,...]
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true",
+                    help="reduced steps/eval sizes (CI mode)")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated subset: table1,table2,table3,"
+                         "table4,speedup,kernels,roofline")
+    args = ap.parse_args()
+    only = set(args.only.split(",")) if args.only else None
+
+    from benchmarks import (bench_kernels, bench_roofline, bench_speedup,
+                            table1_moons, table2_text, table3_wikitext,
+                            table4_images)
+
+    fast = args.fast
+    jobs = {
+        "table1": lambda: table1_moons.run(steps=150 if fast else 250,
+                                           n_eval=1500 if fast else 2500),
+        "table2": lambda: table2_text.run(steps=120 if fast else 200,
+                                          n_eval=32 if fast else 48),
+        "table3": lambda: table3_wikitext.run(steps=120 if fast else 200,
+                                              n_eval=32 if fast else 48),
+        "table4": lambda: table4_images.run(steps=150 if fast else 220,
+                                            n_eval=128 if fast else 192),
+        "speedup": lambda: bench_speedup.run(steps=80 if fast else 100,
+                                             num=1024 if fast else 2048),
+        "kernels": bench_kernels.run,
+        "roofline": bench_roofline.run,
+    }
+
+    print("name,us_per_call,derived")
+    failures = []
+    for name, job in jobs.items():
+        if only and name not in only:
+            continue
+        t0 = time.time()
+        try:
+            job()
+            print(f"# {name} done in {time.time()-t0:.1f}s", flush=True)
+        except Exception:
+            failures.append(name)
+            traceback.print_exc()
+    if failures:
+        print(f"# FAILED: {failures}")
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

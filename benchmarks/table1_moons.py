@@ -1,0 +1,61 @@
+"""Paper Table 1 (two moons): SKL + NFE for DFM vs WS-DFM at three draft
+quality tiers x t0 grid. Exact paper setting: 128x128 grid, N=2 tokens,
+V=128, h=128 velocity net, cold NFE = 20 (step 0.05).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import moons_model_config, report, timed_generate, train_dfm
+from repro.core import CorruptionDraft, KNNRefinementCoupling
+from repro.core.guarantees import warm_nfe
+from repro.data import draft_tier_dataset, moons_dataset, symmetric_kl
+
+TIERS = {"pretty_good": 0.05, "fair": 0.3, "poor": 0.6}
+T0_GRID = {"pretty_good": (0.9, 0.8), "fair": (0.8, 0.5), "poor": (0.5, 0.35)}
+COLD_NFE = 20
+
+
+def run(steps: int = 400, n_train: int = 8192, n_eval: int = 4000, seed: int = 0):
+    cfg = moons_model_config()
+    data = moons_dataset(n_train, seed=seed)
+    eval_ref = moons_dataset(n_eval, seed=seed + 123)
+    rng = np.random.default_rng(seed)
+    results = {}
+
+    # ---- baseline cold-start DFM -------------------------------------
+    src = rng.integers(0, 128, size=data.shape).astype(np.int32)
+    model, state = train_dfm(cfg, src, data, t0=0.0, steps=steps, seed=seed)
+    x, dt, rep = timed_generate(model, state.params, cfg, t0=0.0,
+                                cold_nfe=COLD_NFE, num=n_eval, seed=seed)
+    skl0 = symmetric_kl(x, eval_ref)
+    results["dfm"] = (skl0, COLD_NFE)
+    report("table1/moons_dfm_t0=0.0", dt / n_eval * 1e6,
+           f"skl={skl0:.3f};nfe={COLD_NFE}")
+
+    # ---- WS-DFM per draft tier ----------------------------------------
+    for tier, corr in TIERS.items():
+        draft = CorruptionDraft(data=data, vocab_size=128, corruption=corr,
+                                jitter={"pretty_good": 2, "fair": 8, "poor": 20}[tier])
+        import jax
+        drafts = np.asarray(draft.generate(jax.random.key(seed + 7), 4096))
+        coupling = KNNRefinementCoupling(k=3, k_inject=2, max_candidates=4096)
+        src_w, tgt_w = coupling.build(data, drafts, rng)
+        for t0 in T0_GRID[tier]:
+            model_w, state_w = train_dfm(cfg, src_w, tgt_w, t0=t0,
+                                         steps=steps, seed=seed + 1)
+            x, dt, rep = timed_generate(model_w, state_w.params, cfg, t0=t0,
+                                        cold_nfe=COLD_NFE, num=n_eval,
+                                        draft=draft, seed=seed)
+            skl = symmetric_kl(x, eval_ref)
+            nfe = warm_nfe(COLD_NFE, t0)
+            ok = "pass" if skl <= skl0 * 1.05 else "worse"
+            results[f"{tier}_t0={t0}"] = (skl, nfe)
+            report(f"table1/moons_ws_{tier}_t0={t0}", dt / n_eval * 1e6,
+                   f"skl={skl:.3f};nfe={nfe};speedup={COLD_NFE/nfe:.1f}x;{ok}")
+    return results
+
+
+if __name__ == "__main__":
+    run()

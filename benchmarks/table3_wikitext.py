@@ -1,0 +1,135 @@
+"""Paper Table 3 (Wikitext-103 analog): WORD-level generation (larger
+vocab, the paper's GPT-2-tokenizer setting scaled down), perplexity by a
+word-bigram proxy LM, LSTM draft vs DFM vs WS-DFM at t0 in {0.5, 0.8}.
+"""
+
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+from benchmarks.common import report, timed_generate, train_dfm
+from repro.configs.dfm_dit import tiny_config
+from repro.core import ARDraft, OracleRefinementCoupling
+from repro.core.guarantees import warm_nfe
+from repro.data import SyntheticCorpus
+from benchmarks.table2_text import train_lstm
+from repro.models import LSTMConfig, LSTMModel
+from repro.optim import AdamW
+
+SEQ = 48
+COLD_NFE = 64
+
+
+class WordProxy:
+    """Bigram word LM with add-k smoothing -> perplexity."""
+
+    def __init__(self, vocab: int, k: float = 0.1):
+        self.v = vocab
+        self.k = k
+
+    def fit(self, seqs: np.ndarray):
+        c = np.full((self.v, self.v), self.k)
+        for s in seqs:
+            np.add.at(c, (s[:-1], s[1:]), 1.0)
+        self.p = c / c.sum(-1, keepdims=True)
+        return self
+
+    def perplexity(self, seqs: np.ndarray) -> float:
+        ll, n = 0.0, 0
+        for s in seqs:
+            ll += np.log(self.p[s[:-1], s[1:]]).sum()
+            n += len(s) - 1
+        return float(np.exp(-ll / max(n, 1)))
+
+    def entropy(self, seqs: np.ndarray) -> float:
+        ent, n = 0.0, 0
+        for s in seqs:
+            rows = self.p[s[:-1]]
+            ent += -(rows * np.log(np.maximum(rows, 1e-12))).sum(-1).sum()
+            n += len(s) - 1
+        return float(ent / max(n, 1))
+
+
+def word_sequences(corpus: SyntheticCorpus, num: int, seq: int, seed: int):
+    rng = np.random.default_rng(seed)
+    out = np.empty((num, seq), np.int32)
+    for i in range(num):
+        w = int(rng.choice(corpus.num_words, p=corpus.unigram))
+        for j in range(seq):
+            out[i, j] = w
+            w = int(rng.choice(corpus.num_words, p=corpus.trans[w]))
+    return out
+
+
+def run(steps: int = 300, n_eval: int = 64, seed: int = 0):
+    corpus = SyntheticCorpus(seed=seed)
+    vocab = corpus.num_words
+    data = word_sequences(corpus, 3072, SEQ, seed + 1)
+    held = word_sequences(corpus, 1024, SEQ, seed + 2)
+    proxy = WordProxy(vocab).fit(held)
+    cfg = tiny_config(vocab_size=vocab, seq_len=SEQ)
+    rng = np.random.default_rng(seed)
+
+    # draft LSTM (1-layer, the paper's wikitext draft shape)
+    lstm = LSTMModel(LSTMConfig(vocab_size=vocab, hidden=192, num_layers=1,
+                                embed_dim=96))
+    lparams = lstm.init(jax.random.key(seed))
+    opt = AdamW(learning_rate=5e-3)
+    ostate = opt.init(lparams)
+    grad = jax.jit(jax.value_and_grad(lstm.loss))
+    for _ in range(steps):
+        idx = rng.integers(0, data.shape[0], size=32)
+        loss, g = grad(lparams, data[idx])
+        lparams, ostate = opt.update(g, ostate, lparams)
+    drafts_eval = np.asarray(lstm.generate(lparams, jax.random.key(5), n_eval, SEQ))
+    report("table3/lstm_draft", 0.0,
+           f"ppl={proxy.perplexity(drafts_eval):.2f};"
+           f"entropy={proxy.entropy(drafts_eval):.3f}")
+
+    # cold DFM
+    src = rng.integers(0, vocab, size=data.shape, dtype=np.int32)
+    model, state = train_dfm(cfg, src, data, t0=0.0, steps=steps,
+                             batch_size=32, seed=seed)
+    x, dt, _ = timed_generate(model, state.params, cfg, t0=0.0,
+                              cold_nfe=COLD_NFE, num=n_eval, seed=seed)
+    ppl0 = proxy.perplexity(x)
+    report("table3/dfm_t0=0.0", dt / n_eval * 1e6,
+           f"ppl={ppl0:.2f};nfe={COLD_NFE};time_per_sentence_s={dt/n_eval:.4f}")
+
+    # WS-DFM: oracle = most-likely bigram continuation smoother
+    def bigram_oracle(drafts: np.ndarray) -> np.ndarray:
+        out = drafts.copy()
+        for i in range(out.shape[0]):
+            for j in range(1, out.shape[1]):
+                # re-sample tokens that are improbable given the previous
+                if proxy.p[out[i, j - 1], out[i, j]] < 1.0 / vocab:
+                    out[i, j] = int(np.argmax(proxy.p[out[i, j - 1]]))
+        return out
+
+    drafts = np.asarray(lstm.generate(lparams, jax.random.key(8), 1024, SEQ))
+    coupling = OracleRefinementCoupling(oracle=bigram_oracle, inject_prob=0.15)
+    src_w, tgt_w = coupling.build(data, drafts, rng)
+
+    results = {"dfm": ppl0}
+    for t0 in (0.5, 0.8):
+        model_w, state_w = train_dfm(cfg, src_w, tgt_w, t0=t0,
+                                     steps=max(steps // 2, 100), batch_size=32,
+                                     lr=3e-4, seed=seed + 1, init_state=state)
+        draft_obj = ARDraft(
+            decode_fn=lambda p, key, num, s: lstm.generate(p, key, num, s),
+            params=lparams, seq_len=SEQ)
+        x, dt, _ = timed_generate(model_w, state_w.params, cfg, t0=t0,
+                                  cold_nfe=COLD_NFE, num=n_eval,
+                                  draft=draft_obj, seed=seed)
+        ppl = proxy.perplexity(x)
+        nfe = warm_nfe(COLD_NFE, t0)
+        results[f"ws_t0={t0}"] = ppl
+        report(f"table3/ws_dfm_t0={t0}", dt / n_eval * 1e6,
+               f"ppl={ppl:.2f};nfe={nfe};speedup={COLD_NFE/nfe:.1f}x;"
+               f"time_per_sentence_s={dt/n_eval:.4f}")
+    return results
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,83 @@
+"""Quickstart: warm-start discrete flow matching on two moons (paper §4.1).
+
+Trains a cold-start DFM baseline and a WS-DFM (t0=0.8) on the 128x128
+two-moons grid, then generates from both and compares SKL + NFE —
+reproducing the structure of the paper's Table 1 in ~2 minutes on CPU.
+
+Run:  PYTHONPATH=src python examples/quickstart.py
+"""
+
+import jax
+import numpy as np
+
+from repro.configs.base import ModelConfig, RunConfig
+from repro.core import (
+    CorruptionDraft, KNNRefinementCoupling, WarmStartPath, WarmStartPipeline,
+    pair_iterator,
+)
+from repro.data import draft_tier_dataset, moons_dataset, symmetric_kl
+from repro.models import build_model
+from repro.training import Trainer
+
+GRID = 128
+STEPS = 300
+COLD_NFE = 20   # paper: step size 0.05
+
+
+def make_cfg() -> ModelConfig:
+    return ModelConfig(
+        name="moons", family="dense", num_layers=4, d_model=128,
+        num_heads=4, num_kv_heads=4, d_ff=512, vocab_size=GRID,
+        pattern=("attn",), norm="layernorm", mlp_gated=False, act="gelu",
+        tie_embeddings=False, dtype="float32", max_seq_len=2,
+    )
+
+
+def train(cfg, src, tgt, t0, seed=0):
+    run = RunConfig(total_steps=STEPS, batch_size=256, learning_rate=1e-3,
+                    warmup_steps=20, log_every=100, seed=seed)
+    trainer = Trainer(build_model(cfg), cfg, run, path=WarmStartPath(t0=t0))
+    state = trainer.init_state(jax.random.key(seed))
+    rng = np.random.default_rng(seed)
+    state = trainer.fit(state, pair_iterator(src, tgt, 256, rng),
+                        log_fn=lambda i, m: print(f"  step {i}: ce={m['ce']:.3f}"))
+    return trainer.model, state
+
+
+def main():
+    data = moons_dataset(8192, seed=0)
+    eval_ref = moons_dataset(4000, seed=42)
+    rng = np.random.default_rng(0)
+
+    print("=== cold-start DFM baseline (t0=0, NFE=20) ===")
+    src = rng.integers(0, GRID, size=data.shape).astype(np.int32)
+    model, state = train(make_cfg(), src, data, t0=0.0)
+    pipe = WarmStartPipeline(
+        model_fn=lambda x, t: model.dfm_apply(state.params, x, t),
+        draft=None, path=WarmStartPath(t0=0.0), cold_nfe=COLD_NFE,
+        vocab_size=GRID, seq_len=2)
+    x_cold, rep = pipe.generate(jax.random.key(1), 4000)
+    skl_cold = symmetric_kl(np.asarray(x_cold), eval_ref)
+    print(f"cold DFM: SKL={skl_cold:.3f}  {rep.as_row()}")
+
+    print("\n=== WS-DFM with a pretty-good draft model (t0=0.8, NFE=4) ===")
+    draft = CorruptionDraft(data=data, vocab_size=GRID, corruption=0.05, jitter=2)
+    drafts = np.asarray(draft.generate(jax.random.key(2), 4096))
+    src_w, tgt_w = KNNRefinementCoupling(k=3, k_inject=2).build(data, drafts, rng)
+    model_w, state_w = train(make_cfg(), src_w, tgt_w, t0=0.8, seed=1)
+    pipe_w = WarmStartPipeline(
+        model_fn=lambda x, t: model_w.dfm_apply(state_w.params, x, t),
+        draft=draft, path=WarmStartPath(t0=0.8), cold_nfe=COLD_NFE,
+        vocab_size=GRID, seq_len=2)
+    x_warm, rep_w = pipe_w.generate(jax.random.key(3), 4000)
+    skl_warm = symmetric_kl(np.asarray(x_warm), eval_ref)
+    print(f"WS-DFM:  SKL={skl_warm:.3f}  {rep_w.as_row()}")
+
+    print(f"\nguaranteed speed-up: x{rep_w.guaranteed_factor:.1f} "
+          f"({rep.cold_nfe} -> {rep_w.warm_nfe} NFE); "
+          f"quality {'preserved' if skl_warm <= skl_cold * 1.1 else 'degraded'} "
+          f"(SKL {skl_cold:.3f} -> {skl_warm:.3f})")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,116 @@
+"""End-to-end text generation driver (paper §4.2 pipeline at CPU scale):
+
+  1. train an LSTM draft model on the synthetic char corpus;
+  2. train the cold-start DFM baseline (~tiny DiT);
+  3. build the refinement coupling (offline word-oracle rewriter + data
+     injection) from LSTM drafts;
+  4. fine-tune into WS-DFM at t0 = 0.8;
+  5. generate from all three and score NLL with the proxy LM.
+
+This is the repo's end-to-end training driver: a ~1.5M-param backbone
+trained for a few hundred steps.
+
+Run:  PYTHONPATH=src python examples/text_generation.py [--steps 300]
+"""
+
+import argparse
+
+import jax
+import numpy as np
+
+from repro.configs.base import RunConfig
+from repro.configs.dfm_dit import tiny_config
+from repro.core import (
+    ARDraft, OracleRefinementCoupling, WarmStartPath, WarmStartPipeline,
+    pair_iterator,
+)
+from repro.data import NGramProxyLM, SyntheticCorpus, TEXT_VOCAB, WordOracle, decode
+from repro.models import LSTMConfig, LSTMModel, build_model
+from repro.optim import AdamW
+from repro.training import Trainer
+
+SEQ = 64
+COLD_NFE = 64
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--t0", type=float, default=0.8)
+    args = ap.parse_args()
+
+    corpus = SyntheticCorpus(seed=0)
+    data = corpus.sequences(4096, SEQ, seed=1)
+    proxy = NGramProxyLM(order=3).fit(corpus.sequences(1024, SEQ, seed=2))
+    rng = np.random.default_rng(0)
+
+    # -- 1. draft LSTM ----------------------------------------------------
+    print("[1/5] training LSTM draft model (paper: 2-layer LSTM)")
+    lstm = LSTMModel(LSTMConfig(vocab_size=TEXT_VOCAB, hidden=128,
+                                num_layers=2, embed_dim=64))
+    lparams = lstm.init(jax.random.key(7))
+    opt = AdamW(learning_rate=5e-3)
+    ostate = opt.init(lparams)
+    grad = jax.jit(jax.value_and_grad(lstm.loss))
+    for i in range(args.steps):
+        idx = rng.integers(0, data.shape[0], size=32)
+        loss, g = grad(lparams, data[idx])
+        lparams, ostate = opt.update(g, ostate, lparams)
+        if (i + 1) % 100 == 0:
+            print(f"   lstm step {i+1}: nll={float(loss):.3f}")
+
+    # -- 2. cold-start DFM -------------------------------------------------
+    print("[2/5] training cold-start DFM baseline")
+    cfg = tiny_config(vocab_size=TEXT_VOCAB, seq_len=SEQ)
+    model = build_model(cfg)
+    run = RunConfig(total_steps=args.steps, batch_size=32, learning_rate=1e-3,
+                    warmup_steps=20, log_every=100)
+    trainer = Trainer(model, cfg, run, path=WarmStartPath(t0=0.0))
+    src = rng.integers(0, TEXT_VOCAB, size=data.shape, dtype=np.int32)
+    state = trainer.init_state(jax.random.key(0))
+    state = trainer.fit(state, pair_iterator(src, data, 32, rng),
+                        log_fn=lambda i, m: print(f"   dfm step {i}: ce={m['ce']:.3f}"))
+
+    # -- 3. refinement coupling --------------------------------------------
+    print("[3/5] building refinement pairs (LSTM drafts -> word oracle)")
+    drafts = np.asarray(lstm.generate(lparams, jax.random.key(3), 1024, SEQ))
+    coupling = OracleRefinementCoupling(oracle=WordOracle(corpus), inject_prob=0.15)
+    src_w, tgt_w = coupling.build(data, drafts, rng)
+
+    # -- 4. WS-DFM fine-tune -----------------------------------------------
+    print(f"[4/5] fine-tuning WS-DFM at t0={args.t0}")
+    run_w = RunConfig(total_steps=max(args.steps // 2, 100), batch_size=32,
+                      learning_rate=3e-4, warmup_steps=10, log_every=50)
+    trainer_w = Trainer(model, cfg, run_w, path=WarmStartPath(t0=args.t0))
+    state_w = trainer_w.fit(state, pair_iterator(src_w, tgt_w, 32, rng),
+                            log_fn=lambda i, m: print(f"   ws step {i}: ce={m['ce']:.3f}"))
+
+    # -- 5. generate + evaluate ---------------------------------------------
+    print("[5/5] generation")
+    n = 32
+    lstm_out = np.asarray(lstm.generate(lparams, jax.random.key(9), n, SEQ))
+    pipe_cold = WarmStartPipeline(
+        model_fn=lambda x, t: model.dfm_apply(state.params, x, t),
+        draft=None, path=WarmStartPath(t0=0.0), cold_nfe=COLD_NFE,
+        vocab_size=TEXT_VOCAB, seq_len=SEQ)
+    cold_out, rep_c = pipe_cold.generate(jax.random.key(10), n)
+    draft_obj = ARDraft(decode_fn=lambda p, k, num, s: lstm.generate(p, k, num, s),
+                        params=lparams, seq_len=SEQ)
+    pipe_warm = WarmStartPipeline(
+        model_fn=lambda x, t: model.dfm_apply(state_w.params, x, t),
+        draft=draft_obj, path=WarmStartPath(t0=args.t0), cold_nfe=COLD_NFE,
+        vocab_size=TEXT_VOCAB, seq_len=SEQ)
+    warm_out, rep_w = pipe_warm.generate(jax.random.key(11), n)
+
+    print(f"\nLSTM draft  NLL={proxy.nll(lstm_out):.3f}")
+    print(f"cold DFM    NLL={proxy.nll(np.asarray(cold_out)):.3f}  NFE={rep_c.cold_nfe}")
+    print(f"WS-DFM      NLL={proxy.nll(np.asarray(warm_out)):.3f}  "
+          f"NFE={rep_w.warm_nfe}  (guaranteed x{rep_w.guaranteed_factor:.1f})")
+    print("\nsamples:")
+    print("  lstm :", decode(lstm_out[0]))
+    print("  cold :", decode(np.asarray(cold_out[0])))
+    print("  warm :", decode(np.asarray(warm_out[0])))
+
+
+if __name__ == "__main__":
+    main()

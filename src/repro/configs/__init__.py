@@ -1,0 +1,58 @@
+"""Architecture registry: ``--arch <id>`` ids map to full configs and
+reduced smoke variants."""
+
+from __future__ import annotations
+
+from typing import Callable, Dict, Tuple
+
+from repro.configs.base import INPUT_SHAPES, InputShape, ModelConfig, RunConfig
+
+from repro.configs import (
+    arctic_480b,
+    command_r_plus_104b,
+    deepseek_v3_671b,
+    dfm_dit,
+    gemma3_1b,
+    minitron_4b,
+    qwen2_vl_72b,
+    starcoder2_3b,
+    whisper_medium,
+    xlstm_1_3b,
+    zamba2_2_7b,
+)
+
+_MODULES = {
+    "gemma3-1b": gemma3_1b,
+    "xlstm-1.3b": xlstm_1_3b,
+    "deepseek-v3-671b": deepseek_v3_671b,
+    "starcoder2-3b": starcoder2_3b,
+    "qwen2-vl-72b": qwen2_vl_72b,
+    "arctic-480b": arctic_480b,
+    "minitron-4b": minitron_4b,
+    "whisper-medium": whisper_medium,
+    "zamba2-2.7b": zamba2_2_7b,
+    "command-r-plus-104b": command_r_plus_104b,
+    "dfm-dit": dfm_dit,
+}
+
+ASSIGNED_ARCHS: Tuple[str, ...] = tuple(k for k in _MODULES if k != "dfm-dit")
+
+
+def get_config(arch: str) -> ModelConfig:
+    if arch not in _MODULES:
+        raise KeyError(f"unknown arch {arch!r}; available: {sorted(_MODULES)}")
+    return _MODULES[arch].CONFIG
+
+
+def get_smoke_config(arch: str) -> ModelConfig:
+    return _MODULES[arch].smoke_config()
+
+
+def list_archs():
+    return sorted(_MODULES)
+
+
+__all__ = [
+    "ASSIGNED_ARCHS", "INPUT_SHAPES", "InputShape", "ModelConfig", "RunConfig",
+    "get_config", "get_smoke_config", "list_archs",
+]

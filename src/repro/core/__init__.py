@@ -1,0 +1,30 @@
+"""Core warm-start flow matching (WS-FM / WS-DFM) library — the paper's
+contribution as composable JAX modules."""
+
+from repro.core.paths import WarmStartPath, cold_start_path, uniform_noise, mask_noise
+from repro.core.losses import dfm_cross_entropy, ws_dfm_loss
+from repro.core.sampler import (
+    EulerSampler,
+    euler_step_probs,
+    categorical_from_probs,
+    make_refine_step,
+)
+from repro.core.guarantees import warm_nfe, speedup_report, check_guarantee
+from repro.core.coupling import (
+    IndependentCoupling,
+    KNNRefinementCoupling,
+    OracleRefinementCoupling,
+    pair_iterator,
+)
+from repro.core.draft import DraftModel, CorruptionDraft, HistogramDraft, ARDraft
+from repro.core.pipeline import WarmStartPipeline
+
+__all__ = [
+    "WarmStartPath", "cold_start_path", "uniform_noise", "mask_noise",
+    "dfm_cross_entropy", "ws_dfm_loss",
+    "EulerSampler", "euler_step_probs", "categorical_from_probs", "make_refine_step",
+    "warm_nfe", "speedup_report", "check_guarantee",
+    "IndependentCoupling", "KNNRefinementCoupling", "OracleRefinementCoupling", "pair_iterator",
+    "DraftModel", "CorruptionDraft", "HistogramDraft", "ARDraft",
+    "WarmStartPipeline",
+]

@@ -1,0 +1,106 @@
+"""Lightweight draft models supplying the warm-start initial distribution.
+
+The paper uses: contrived quality tiers for two-moons (Fig. 4c-e), a small
+LSTM LM for text (§4.2), and a DC-GAN for images (§4.3). The common
+contract is: *negligible generation cost* relative to one backbone NFE.
+
+Implemented drafts:
+  * ``CorruptionDraft`` — sample true data, corrupt a fraction of tokens;
+    the corruption rate directly realises the paper's pretty-good / fair /
+    poor tiers for the two-moons study.
+  * ``ARDraft``          — wraps any zoo model in AR mode (the LSTM of the
+    paper, or a tiny transformer) with temperature sampling.
+  * ``HistogramDraft``   — per-position categorical fitted to data
+    (image-domain stand-in for the DC-GAN: cheap, blurry marginals).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class DraftModel:
+    """Interface: generate (num, N) int32 draft samples."""
+
+    def generate(self, rng: jax.Array, num: int) -> jax.Array:  # pragma: no cover
+        raise NotImplementedError
+
+    @property
+    def cost_ratio(self) -> float:
+        """Draft cost / one backbone NFE (for guarantees.py accounting)."""
+        return 0.0
+
+
+@dataclasses.dataclass
+class CorruptionDraft(DraftModel):
+    """Draw a data sample and re-randomise each token w.p. ``corruption``.
+
+    corruption ~ 0.05 -> 'pretty good', 0.3 -> 'fair', 0.6 -> 'poor'
+    (paper Fig. 4 tiers for the two-moons study).
+    """
+
+    data: np.ndarray           # (M, N) int
+    vocab_size: int
+    corruption: float = 0.3
+    jitter: int = 0            # optional +-jitter on token values (grid data)
+
+    def generate(self, rng: jax.Array, num: int) -> jax.Array:
+        k1, k2, k3, k4 = jax.random.split(rng, 4)
+        idx = jax.random.randint(k1, (num,), 0, self.data.shape[0])
+        x = jnp.asarray(self.data, jnp.int32)[idx]
+        if self.jitter:
+            dx = jax.random.randint(k4, x.shape, -self.jitter, self.jitter + 1)
+            x = jnp.clip(x + dx, 0, self.vocab_size - 1)
+        corrupt = jax.random.uniform(k2, x.shape) < self.corruption
+        rand = jax.random.randint(k3, x.shape, 0, self.vocab_size, dtype=jnp.int32)
+        return jnp.where(corrupt, rand, x)
+
+
+@dataclasses.dataclass
+class HistogramDraft(DraftModel):
+    """Independent per-position categorical fitted to the data — the
+    cheapest possible draft; models marginals only (blurry, GAN-like
+    low quality tier for images)."""
+
+    probs: np.ndarray  # (N, V) float, rows sum to 1
+
+    @staticmethod
+    def fit(data: np.ndarray, vocab_size: int, smoothing: float = 1.0) -> "HistogramDraft":
+        n = data.shape[1]
+        counts = np.full((n, vocab_size), smoothing, np.float64)
+        for i in range(n):
+            np.add.at(counts[i], data[:, i], 1.0)
+        return HistogramDraft(probs=(counts / counts.sum(-1, keepdims=True)).astype(np.float32))
+
+    def generate(self, rng: jax.Array, num: int) -> jax.Array:
+        logits = jnp.log(jnp.asarray(self.probs))  # (N, V)
+        return jax.random.categorical(
+            rng, jnp.broadcast_to(logits, (num,) + logits.shape), axis=-1
+        ).astype(jnp.int32)
+
+
+@dataclasses.dataclass
+class ARDraft(DraftModel):
+    """Autoregressive draft: the paper's LSTM role.
+
+    ``decode_fn(params, rng, num, seq_len) -> (num, seq_len) int32`` is the
+    model-zoo AR sampling entry point (see serving/engine.py); cost_ratio
+    reports the measured/estimated relative cost.
+    """
+
+    decode_fn: Callable
+    params: object
+    seq_len: int
+    _cost_ratio: float = 0.02
+
+    def generate(self, rng: jax.Array, num: int) -> jax.Array:
+        return self.decode_fn(self.params, rng, num, self.seq_len)
+
+    @property
+    def cost_ratio(self) -> float:
+        return self._cost_ratio

@@ -1,0 +1,70 @@
+"""End-to-end warm-start generation pipeline (paper Fig. 1, bottom).
+
+    drafts = draft_model.generate(...)          # negligible cost
+    x_1    = EulerSampler(path(t0)).sample(...) # ceil(N*(1-t0)) NFEs
+
+with NFE accounting asserting the guarantee. This is the object the
+serving layer wraps for batched requests.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import guarantees
+from repro.core.draft import DraftModel
+from repro.core.paths import WarmStartPath, uniform_noise
+from repro.core.sampler import EulerSampler
+
+
+@dataclasses.dataclass
+class WarmStartPipeline:
+    """Draft -> flow-refine generation.
+
+    Attributes:
+      model_fn: ``(tokens (B,N), t (B,)) -> logits`` of the trained v_theta.
+      draft: the lightweight draft model (None -> cold start from noise).
+      path: warm-start path (t0 = 0 with draft None reproduces DFM).
+      cold_nfe: steps the cold-start baseline uses (defines step size h).
+    """
+
+    model_fn: Callable
+    draft: Optional[DraftModel]
+    path: WarmStartPath
+    cold_nfe: int
+    vocab_size: int
+    seq_len: int
+    temperature: float = 1.0
+    argmax_final: bool = False
+    step_fn: Optional[Callable] = None
+
+    def sampler(self) -> EulerSampler:
+        return EulerSampler(
+            path=self.path,
+            num_steps=self.cold_nfe,
+            temperature=self.temperature,
+            argmax_final=self.argmax_final,
+            step_fn=self.step_fn,
+        )
+
+    def generate(self, rng: jax.Array, num: int):
+        """Returns (samples (num, N), guarantees.SpeedupReport)."""
+        k_draft, k_flow = jax.random.split(rng)
+        if self.draft is None:
+            x_init = uniform_noise(k_draft, (num, self.seq_len), self.vocab_size)
+            draft_cost = 0.0
+        else:
+            x_init = self.draft.generate(k_draft, num)
+            draft_cost = self.draft.cost_ratio
+        smp = self.sampler()
+        x, stats = smp.sample(k_flow, self.model_fn, x_init)
+        assert guarantees.check_guarantee(self.cold_nfe, self.path.t0, int(stats.nfe)), (
+            f"NFE guarantee violated: expected "
+            f"{guarantees.warm_nfe(self.cold_nfe, self.path.t0)}, got {int(stats.nfe)}"
+        )
+        report = guarantees.speedup_report(self.cold_nfe, self.path.t0, draft_cost)
+        return x, report

@@ -1,0 +1,14 @@
+from repro.data.moons import (
+    moons_dataset, draft_tier_dataset, symmetric_kl, sample_moons, quantize,
+)
+from repro.data.text import (
+    CHARS, VOCAB as TEXT_VOCAB, SyntheticCorpus, WordOracle, NGramProxyLM,
+    encode, decode,
+)
+from repro.data.images import images_dataset, frechet_distance, SEQ as IMAGE_SEQ
+
+__all__ = [
+    "moons_dataset", "draft_tier_dataset", "symmetric_kl", "sample_moons", "quantize",
+    "CHARS", "TEXT_VOCAB", "SyntheticCorpus", "WordOracle", "NGramProxyLM",
+    "encode", "decode", "images_dataset", "frechet_distance", "IMAGE_SEQ",
+]

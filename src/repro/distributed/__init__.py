@@ -1,0 +1,11 @@
+from repro.distributed.sharding import (
+    TRAIN_RULES, SERVE_RULES, LONG_RULES,
+    axis_rules, constrain, current_mesh, logical_to_spec,
+    param_specs, param_shardings,
+)
+
+__all__ = [
+    "TRAIN_RULES", "SERVE_RULES", "LONG_RULES",
+    "axis_rules", "constrain", "current_mesh", "logical_to_spec",
+    "param_specs", "param_shardings",
+]

@@ -1,0 +1,217 @@
+"""Logical-axis sharding rules (MaxText-style) and helpers.
+
+Models annotate activations with *logical* axes ("batch", "seq", "embed",
+"heads", "expert", ...). The launcher installs a rule set mapping logical
+axes to mesh axes; outside a mesh context everything is a no-op, so the
+same model code runs single-device on CPU and fully sharded on the pod.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Dict, Optional, Sequence, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_state = threading.local()
+
+
+# ---------------------------------------------------------------------------
+# rule sets
+# ---------------------------------------------------------------------------
+
+# Training layout: TP over `model`, FSDP over `data` (embed dim), batch over
+# pod+data. Expert-parallel over `model`.
+TRAIN_RULES: Dict[str, Optional[Tuple[str, ...]]] = {
+    "batch": ("pod", "data"),
+    "seq": None,
+    "embed": ("data",),          # FSDP shard of d_model-sized param dims
+    "ffn": ("model",),
+    "heads": ("model",),
+    "kv_heads": ("model",),
+    "vocab": ("model",),
+    "expert": ("model",),
+    "layers": None,
+    "time": None,
+    "state": None,
+}
+
+# Serving layout: weights TP over `model` only (replicated over data so that
+# decode batches shard over data), no FSDP.
+SERVE_RULES: Dict[str, Optional[Tuple[str, ...]]] = {
+    "batch": ("pod", "data"),
+    "seq": None,
+    "embed": None,
+    "ffn": ("model",),
+    "heads": ("model",),
+    "kv_heads": ("model",),
+    "vocab": ("model",),
+    # big-MoE serving shards experts across the whole pod (EP-256 for
+    # deepseek's 256 experts); param_specs falls back to a prefix of the
+    # tuple when the expert count doesn't divide the full product
+    "expert": ("data", "model"),
+    "layers": None,
+    "time": None,
+    "state": None,
+}
+
+# Long-context decode (batch=1): context parallelism — shard the cache
+# sequence dim over `data`.
+LONG_RULES: Dict[str, Optional[Tuple[str, ...]]] = dict(
+    SERVE_RULES, batch=None, cache_seq=("data",), seq=("data",)
+)
+
+
+@contextlib.contextmanager
+def axis_rules(rules: Dict[str, Optional[Tuple[str, ...]]], mesh: Optional[Mesh] = None):
+    prev = getattr(_state, "rules", None), getattr(_state, "mesh", None)
+    _state.rules, _state.mesh = rules, mesh
+    try:
+        yield
+    finally:
+        _state.rules, _state.mesh = prev
+
+
+def current_mesh() -> Optional[Mesh]:
+    return getattr(_state, "mesh", None)
+
+
+def logical_to_spec(axes: Sequence[Optional[str]],
+                    rules: Optional[Dict] = None,
+                    mesh: Optional[Mesh] = None) -> P:
+    """Map logical axis names to a PartitionSpec under the current rules,
+    dropping mesh axes that don't exist in the mesh (e.g. `pod` single-pod)."""
+    rules = rules if rules is not None else getattr(_state, "rules", None)
+    mesh = mesh if mesh is not None else current_mesh()
+    if rules is None:
+        return P()
+    mesh_axes = set(mesh.axis_names) if mesh is not None else None
+    parts = []
+    for a in axes:
+        if a is None:
+            parts.append(None)
+            continue
+        m = rules.get(a)
+        if m is None:
+            parts.append(None)
+            continue
+        if isinstance(m, str):
+            m = (m,)
+        m = tuple(x for x in m if mesh_axes is None or x in mesh_axes)
+        parts.append(m if len(m) > 1 else (m[0] if m else None))
+    # trim trailing Nones
+    while parts and parts[-1] is None:
+        parts.pop()
+    return P(*parts)
+
+
+def constrain(x: jax.Array, axes: Sequence[Optional[str]]) -> jax.Array:
+    """with_sharding_constraint by logical axes; no-op without rules/mesh."""
+    mesh = current_mesh()
+    rules = getattr(_state, "rules", None)
+    if mesh is None or rules is None:
+        return x
+    spec = logical_to_spec(axes, rules, mesh)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+# ---------------------------------------------------------------------------
+# parameter partition specs
+# ---------------------------------------------------------------------------
+
+def _param_logical_axes(path: str, shape: Tuple[int, ...]) -> Tuple[Optional[str], ...]:
+    """Heuristic logical axes for a parameter given its tree path + shape.
+
+    Conventions (see models/*): dense kernels are (in, out); stacked scan
+    params get a leading `layers` dim; MoE expert weights are (E, ., .).
+    """
+    p = path.lower()
+    nd = len(shape)
+    lead: Tuple[Optional[str], ...] = ()
+    if "/blocks/" in p or p.startswith("blocks/"):
+        lead, shape, nd = ("layers",), shape[1:], nd - 1
+
+    def out(*axes):
+        return lead + axes
+
+    if "embed" in p and "table" in p:
+        return out("vocab", "embed")
+    if "router" in p:
+        return out("embed", None)
+    if p.endswith("/b") or nd == 1:
+        return out(*([None] * nd))
+    last = p.rstrip("/").split("/")[-1]
+    if last in ("up", "gate", "down") and nd == 3 and "/moe/" in p:
+        # MoE expert stacks (E, d, ff) / (E, ff, d): expert-parallel over
+        # `model`, FSDP over `data` on the d_model dim (the ff dim stays
+        # whole — `model` is already consumed by the expert dim)
+        if last == "down":
+            return out("expert", None, "embed")
+        return out("expert", "embed", None)
+    if "/up/" in p or "/gate/" in p or "w1" in p:
+        return out("embed", "ffn")
+    if "/down/" in p or "w2" in p:
+        return out("ffn", "embed")
+    if any(k in p for k in ("wq", "wk", "wv", "wkv_b", "wq_b")):
+        return out("embed", "heads")
+    if "wo" in p:
+        return out("heads", "embed")
+    if any(k in p for k in ("wq_a", "wkv_a")):
+        return out("embed", None)
+    if nd == 2:
+        return out("embed", "ffn")
+    if nd == 3:
+        return out("embed", None, "ffn")
+    return out(*([None] * nd))
+
+
+def param_specs(params, rules: Dict, mesh: Mesh):
+    """PartitionSpec pytree for a parameter tree under the given rules."""
+
+    flat = jax.tree_util.tree_flatten_with_path(params)[0]
+
+    def spec_for(path, leaf):
+        name = "/".join(
+            str(getattr(k, "key", getattr(k, "idx", k))) for k in path
+        )
+        axes = _param_logical_axes("/" + name, leaf.shape)
+        # never shard a dim that is not divisible by its mesh axes; for
+        # multi-axis rules fall back to the longest divisible prefix
+        parts = []
+        for dim, ax in zip(leaf.shape, axes):
+            if ax is None:
+                parts.append(None)
+                continue
+            m = rules.get(ax)
+            if m is None:
+                parts.append(None)
+                continue
+            if isinstance(m, str):
+                m = (m,)
+            m = tuple(x for x in m if x in mesh.axis_names)
+            chosen = None
+            for end in range(len(m), 0, -1):
+                sz = 1
+                for x in m[:end]:
+                    sz *= mesh.shape[x]
+                if dim % sz == 0:
+                    chosen = m[:end]
+                    break
+            parts.append(None if not chosen else
+                         (chosen if len(chosen) > 1 else chosen[0]))
+        while parts and parts[-1] is None:
+            parts.pop()
+        return P(*parts)
+
+    specs = {tuple(path): spec_for(path, leaf) for path, leaf in flat}
+    treedef = jax.tree_util.tree_structure(params)
+    ordered = [specs[tuple(p)] for p, _ in flat]
+    return jax.tree_util.tree_unflatten(treedef, ordered)
+
+
+def param_shardings(params, rules: Dict, mesh: Mesh):
+    specs = param_specs(params, rules, mesh)
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), specs,
+                        is_leaf=lambda x: isinstance(x, P))

@@ -1,0 +1,14 @@
+"""Pallas TPU kernels for the performance-critical hot spots:
+  ws_step    — fused warm-start Euler sampling step (the paper's inner loop)
+  flash_attn — blockwise attention with sliding-window block skipping
+
+Each kernel ships kernel.py (pl.pallas_call + BlockSpec), ops.py (jit'd
+wrapper) and ref.py (pure-jnp oracle); tests sweep shapes/dtypes in
+interpret mode. On this CPU container kernels run interpret=True; on TPU
+set interpret=False.
+"""
+from repro.kernels.ws_step import ws_step, make_ws_step_fn, ws_step_ref
+from repro.kernels.flash_attn import flash_attention, flash_attention_ref
+
+__all__ = ["ws_step", "make_ws_step_fn", "ws_step_ref",
+           "flash_attention", "flash_attention_ref"]

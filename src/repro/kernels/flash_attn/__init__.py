@@ -1,0 +1,3 @@
+from repro.kernels.flash_attn.ops import flash_attention
+from repro.kernels.flash_attn.ref import flash_attention_ref
+__all__ = ["flash_attention", "flash_attention_ref"]

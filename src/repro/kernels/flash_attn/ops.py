@@ -1,0 +1,53 @@
+"""Jit'd wrapper for the Pallas flash attention kernel: GQA head expansion,
+seq padding to block multiples, head folding, and the interpret switch
+(CPU validation vs TPU execution)."""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attn.kernel import flash_attention_pallas
+
+
+def flash_attention(
+    q: jax.Array,            # (B, S, H, D)
+    k: jax.Array,            # (B, T, KH, D)
+    v: jax.Array,            # (B, T, KH, D)
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    scale: Optional[float] = None,
+    block_q: int = 128,
+    block_k: int = 128,
+    interpret: bool = True,
+) -> jax.Array:
+    b, s, h, d = q.shape
+    t, kh = k.shape[1], k.shape[2]
+    if kh != h:                      # GQA: expand kv heads to query heads
+        g = h // kh
+        k = jnp.repeat(k, g, axis=2)
+        v = jnp.repeat(v, g, axis=2)
+
+    bq = min(block_q, max(8, s))
+    bk = min(block_k, max(8, t))
+    sp = -(-s // bq) * bq
+    tp = -(-t // bk) * bk
+    if sp != s:
+        q = jnp.pad(q, ((0, 0), (0, sp - s), (0, 0), (0, 0)))
+    if tp != t:
+        k = jnp.pad(k, ((0, 0), (0, tp - t), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, tp - t), (0, 0), (0, 0)))
+
+    qf = q.transpose(0, 2, 1, 3).reshape(b * h, sp, d)
+    kf = k.transpose(0, 2, 1, 3).reshape(b * h, tp, d)
+    vf = v.transpose(0, 2, 1, 3).reshape(b * h, tp, d)
+
+    out = flash_attention_pallas(
+        qf, kf, vf, causal=causal, window=window, scale=scale,
+        block_q=bq, block_k=bk, seq_q=s, seq_k=t, interpret=interpret,
+    )
+    out = out.reshape(b, h, sp, d).transpose(0, 2, 1, 3)
+    return out[:, :s]

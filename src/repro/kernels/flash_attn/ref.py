@@ -1,0 +1,38 @@
+"""Pure-jnp oracle for blockwise flash attention (causal / bidirectional /
+sliding-window), matching models/attention.py semantics."""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -2.3819763e38
+
+
+def flash_attention_ref(
+    q: jax.Array,            # (B, S, H, D)
+    k: jax.Array,            # (B, T, H, D)
+    v: jax.Array,            # (B, T, H, D)
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    scale: Optional[float] = None,
+) -> jax.Array:
+    d = q.shape[-1]
+    scale = scale if scale is not None else 1.0 / (d ** 0.5)
+    s, t = q.shape[1], k.shape[1]
+    qi = jnp.arange(s)[:, None]
+    ki = jnp.arange(t)[None, :]
+    m = jnp.ones((s, t), bool)
+    if causal:
+        m = m & (ki <= qi)
+        if window is not None:
+            m = m & (ki > qi - window)
+    elif window is not None:
+        m = m & (jnp.abs(ki - qi) < window)
+    scores = jnp.einsum("bshd,bthd->bhst", q, k).astype(jnp.float32) * scale
+    scores = jnp.where(m[None, None], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+    return jnp.einsum("bhst,bthd->bshd", probs, v)

@@ -1,0 +1,3 @@
+from repro.kernels.ws_step.ops import ws_step, make_ws_step_fn
+from repro.kernels.ws_step.ref import ws_step_ref
+__all__ = ["ws_step", "make_ws_step_fn", "ws_step_ref"]

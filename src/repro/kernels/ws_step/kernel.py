@@ -1,0 +1,84 @@
+"""Pallas TPU kernel: fused warm-start Euler sampling step.
+
+Fuses softmax + velocity mixing + Gumbel-max categorical sampling into a
+single pass over the vocabulary so the (R, V) logits are read exactly once
+from HBM and no (R, V) probability tensor is ever materialised — on the
+262k-vocab architectures this is the dominant per-step overhead of the
+sampler beyond the backbone itself (the paper's inner loop, Fig. 3).
+
+Tiling: grid over row blocks; each program handles a (BR, V) tile resident
+in VMEM. ops.py picks BR so that the logits + gumbel tiles fit the VMEM
+budget (BR * V * 8 bytes <= ~8 MB), falling back to BR=1 for 262k vocabs.
+The vocab axis is padded to a multiple of 128 lanes by ops.py.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+MIN_PROB = 1e-30
+NEG = -1e30
+
+
+def _ws_step_kernel(logits_ref, x_ref, a_ref, gumbel_ref, out_ref, *,
+                    temperature: float, valid_v: int):
+    """One (BR, V) tile: next-token sampling.
+
+    logits_ref: (BR, V) f32/bf16; x_ref: (BR, 1) i32; a_ref: (BR, 1) f32;
+    gumbel_ref: (BR, V) f32; out_ref: (BR, 1) i32.
+    """
+    lg = logits_ref[...].astype(jnp.float32) / temperature
+    br, v = lg.shape
+    col = jax.lax.broadcasted_iota(jnp.int32, (br, v), 1)
+    valid = col < valid_v
+    lg = jnp.where(valid, lg, NEG)
+
+    # softmax over the vocab tile (numerically stable)
+    m = jnp.max(lg, axis=-1, keepdims=True)
+    e = jnp.exp(lg - m)
+    p1 = e / jnp.sum(e, axis=-1, keepdims=True)
+
+    x = x_ref[...]                     # (BR, 1)
+    a = a_ref[...].astype(jnp.float32)  # (BR, 1)
+    onehot = (col == x).astype(jnp.float32)
+    probs = (1.0 - a) * onehot + a * p1
+
+    score = jnp.log(jnp.maximum(probs, MIN_PROB)) + gumbel_ref[...]
+    score = jnp.where(valid, score, NEG)
+    out_ref[...] = jnp.argmax(score, axis=-1).astype(jnp.int32)[:, None]
+
+
+def ws_step_pallas(
+    logits: jax.Array,      # (R, Vp) — V padded to 128 lanes
+    x_t: jax.Array,         # (R, 1) int32
+    a: jax.Array,           # (R, 1) float32
+    gumbel: jax.Array,      # (R, Vp) float32
+    *,
+    valid_v: int,
+    row_block: int = 8,
+    temperature: float = 1.0,
+    interpret: bool = False,
+) -> jax.Array:
+    r, vp = logits.shape
+    assert r % row_block == 0, (r, row_block)
+    grid = (r // row_block,)
+    kernel = functools.partial(
+        _ws_step_kernel, temperature=temperature, valid_v=valid_v
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((row_block, vp), lambda i: (i, 0)),
+            pl.BlockSpec((row_block, 1), lambda i: (i, 0)),
+            pl.BlockSpec((row_block, 1), lambda i: (i, 0)),
+            pl.BlockSpec((row_block, vp), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((row_block, 1), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((r, 1), jnp.int32),
+        interpret=interpret,
+    )(logits, x_t, a, gumbel)

@@ -1,0 +1,87 @@
+"""Jit'd wrapper for the fused warm-start Euler step kernel.
+
+``ws_step(rng, logits, x_t, t, h, path)`` matches the ``step_fn`` plug-in
+signature of core/sampler.py — drop it into EulerSampler/WarmStartServer
+to fuse the per-step sampling on TPU. ``interpret=True`` (default on CPU)
+runs the kernel body in Python for validation.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.paths import WarmStartPath
+from repro.kernels.ws_step.kernel import ws_step_pallas
+
+VMEM_BUDGET_BYTES = 8 * 1024 * 1024
+
+
+def _pick_row_block(v_padded: int) -> int:
+    # logits f32 + gumbel f32 resident per row: 8 bytes per vocab entry
+    rows = max(1, VMEM_BUDGET_BYTES // (8 * v_padded))
+    for cand in (128, 64, 32, 16, 8, 4, 2, 1):
+        if cand <= rows:
+            return cand
+    return 1
+
+
+def ws_step(
+    rng: jax.Array,
+    logits: jax.Array,          # (B, N, V) or (R, V)
+    x_t: jax.Array,             # (B, N) or (R,)
+    t: jax.Array,               # (B,) / (R,) or scalar
+    h: jax.Array,               # scalar step
+    path: WarmStartPath,
+    *,
+    temperature: float = 1.0,
+    interpret: bool = True,
+) -> jax.Array:
+    """Fused next-token draw for one Euler step. Returns tokens shaped
+    like ``x_t``."""
+    squeeze = logits.ndim == 3
+    if squeeze:
+        b, n, v = logits.shape
+        r = b * n
+        lg = logits.reshape(r, v)
+        x = x_t.reshape(r)
+        tt = jnp.broadcast_to(jnp.asarray(t, jnp.float32).reshape(-1, 1), (b, n)).reshape(r)
+    else:
+        r, v = logits.shape
+        lg, x = logits, x_t
+        tt = jnp.broadcast_to(jnp.asarray(t, jnp.float32), (r,))
+
+    a = jnp.clip(jnp.asarray(h, jnp.float32) * path.velocity_scale(tt), 0.0, 1.0)
+
+    vp = -(-v // 128) * 128
+    if vp != v:
+        lg = jnp.pad(lg, ((0, 0), (0, vp - v)))
+    row_block = _pick_row_block(vp)
+    rp = -(-r // row_block) * row_block
+    if rp != r:
+        lg = jnp.pad(lg, ((0, rp - r), (0, 0)))
+        x = jnp.pad(x, (0, rp - r))
+        a = jnp.pad(a, (0, rp - r))
+
+    gumbel = jax.random.gumbel(rng, (rp, vp), dtype=jnp.float32)
+    out = ws_step_pallas(
+        lg, x[:, None].astype(jnp.int32), a[:, None], gumbel,
+        valid_v=v, row_block=row_block, temperature=temperature,
+        interpret=interpret,
+    )[:, 0]
+    out = out[:r]
+    return out.reshape(x_t.shape)
+
+
+def make_ws_step_fn(path: WarmStartPath, *, temperature: float = 1.0,
+                    interpret: bool = True):
+    """Returns step_fn(rng, logits, x_t, t, h) for EulerSampler(step_fn=...)."""
+
+    def step_fn(rng, logits, x_t, t, h):
+        return ws_step(rng, logits, x_t, t, h, path,
+                       temperature=temperature, interpret=interpret)
+
+    return step_fn

@@ -1,0 +1,38 @@
+"""Pure-jnp oracle for the fused warm-start Euler sampling step.
+
+Given backbone logits, the current token, the mixing weight
+``a = clip(h * velocity_scale(t), 0, 1)`` and pre-drawn Gumbel noise,
+produce the next token of the CTMC Euler step (paper Fig. 3 right):
+
+    p1     = softmax(logits / temperature)
+    p_next = (1 - a) * onehot(x_t) + a * p1
+    x_next = argmax_v log(p_next[v]) + gumbel[v]
+
+The kernel (kernel.py) computes the same thing in one fused VMEM pass;
+this reference defines bit-level semantics for the allclose sweeps.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+MIN_PROB = 1e-30
+
+
+def ws_step_ref(
+    logits: jax.Array,      # (R, V) float
+    x_t: jax.Array,         # (R,) int32
+    a: jax.Array,           # (R,) float32  mixing weight in [0, 1]
+    gumbel: jax.Array,      # (R, V) float32
+    *,
+    temperature: float = 1.0,
+) -> jax.Array:
+    lf = logits.astype(jnp.float32) / temperature
+    m = jnp.max(lf, axis=-1, keepdims=True)
+    p1 = jnp.exp(lf - m)
+    p1 = p1 / jnp.sum(p1, axis=-1, keepdims=True)
+    onehot = jax.nn.one_hot(x_t, logits.shape[-1], dtype=jnp.float32)
+    probs = (1.0 - a[:, None]) * onehot + a[:, None] * p1
+    score = jnp.log(jnp.maximum(probs, MIN_PROB)) + gumbel
+    return jnp.argmax(score, axis=-1).astype(jnp.int32)

@@ -1,0 +1,426 @@
+"""Multi-pod dry-run: lower + compile every (arch x input-shape) pair on
+the production meshes, print memory/cost analysis, and emit roofline
+artifacts.
+
+MUST set the placeholder device count before ANY jax-touching import:
+"""
+
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+# ruff: noqa: E402
+import argparse
+import json
+import time
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs import ASSIGNED_ARCHS, INPUT_SHAPES, get_config
+from repro.configs.base import InputShape, ModelConfig, RunConfig
+from repro.core.paths import WarmStartPath
+from repro.distributed import sharding as shd
+from repro.launch import hlo_analysis
+from repro.launch import roofline as rl
+from repro.launch.mesh import make_production_mesh
+from repro.models.model import VISION_DIM, build_model
+from repro.optim import build_optimizer
+from repro.serving.engine import make_serve_step
+from repro.training.state import TrainState
+from repro.training.train_step import make_train_step
+
+ARTIFACT_DIR = os.environ.get("REPRO_ARTIFACTS", "/root/repo/artifacts/dryrun")
+
+# Archs whose faithful config is sub-quadratic at 500k decode. All others
+# run the documented sliding-window long-context VARIANT (DESIGN.md §4).
+LONG_FAITHFUL = {"gemma3-1b", "xlstm-1.3b", "zamba2-2.7b"}
+
+# Optimizer policy for the dry-run training configs (HBM budget, see
+# EXPERIMENTS.md §Dry-run notes).
+BIG_MOE = {"deepseek-v3-671b", "arctic-480b"}
+BIG_DENSE = {"command-r-plus-104b", "qwen2-vl-72b"}
+
+
+def run_config_for(arch: str) -> RunConfig:
+    if arch in BIG_MOE:
+        return RunConfig(arch=arch, optimizer="adafactor", remat="block")
+    if arch in BIG_DENSE:
+        return RunConfig(arch=arch, optimizer="adamw", moments_dtype="bfloat16",
+                         remat="block")
+    return RunConfig(arch=arch, remat="block")
+
+
+# ---------------------------------------------------------------------------
+# input specs (ShapeDtypeStruct stand-ins; no allocation)
+# ---------------------------------------------------------------------------
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def input_specs(cfg: ModelConfig, shape: InputShape) -> Dict[str, Any]:
+    """Model inputs for one global batch of the given input shape."""
+    b, s = shape.global_batch, shape.seq_len
+    kind = shape.kind
+    specs: Dict[str, Any] = {}
+    if kind == "train":
+        specs["x_src"] = _sds((b, s), jnp.int32)
+        specs["x_tgt"] = _sds((b, s), jnp.int32)
+    else:
+        specs["tokens"] = _sds((b, s), jnp.int32)
+    if cfg.family == "audio":
+        specs["frames"] = _sds((b, cfg.num_audio_frames, cfg.d_model), jnp.float32)
+    if cfg.family == "vlm":
+        p = cfg.num_vision_tokens
+        specs["patches"] = _sds((b, p, VISION_DIM), jnp.float32)
+        specs["positions"] = _sds((3, b, s + p), jnp.int32)
+    return specs
+
+
+def batch_specs_shardings(specs, rules, mesh):
+    def spec_for(key, sds):
+        if key in ("x_src", "x_tgt", "tokens"):
+            axes = ("batch", None)
+        elif key == "frames":
+            axes = ("batch", None, None)
+        elif key == "patches":
+            axes = ("batch", None, None)
+        elif key == "positions":
+            axes = (None, "batch", None)
+        else:
+            axes = (None,) * len(sds.shape)
+        # drop batch sharding if not divisible
+        pspec = shd.logical_to_spec(axes, rules, mesh)
+        parts = list(pspec)
+        for i, part in enumerate(parts):
+            if part is None:
+                continue
+            names = part if isinstance(part, tuple) else (part,)
+            sz = 1
+            for nm in names:
+                sz *= mesh.shape[nm]
+            if sds.shape[i] % sz != 0:
+                parts[i] = None
+        return NamedSharding(mesh, P(*parts))
+
+    return {k: spec_for(k, v) for k, v in specs.items()}
+
+
+def cache_shardings(cache_abs, rules, mesh, *, long_context: bool):
+    """Shardings for KV/state caches: batch over (pod,data) [regular decode]
+    or sequence over data [long-context, batch=1]; kv-heads over model when
+    divisible."""
+
+    def spec_for(path, leaf):
+        name = "/".join(str(getattr(k, "key", getattr(k, "idx", k))) for k in path)
+        nd = len(leaf.shape)
+        axes = [None] * nd
+        if leaf.shape == ():
+            return NamedSharding(mesh, P())
+        # identify dims: stacked caches lead with the layer/rep dim when the
+        # tree path goes through blocks/...; whisper cross is (L,B,F,H,hd)
+        lead = 1 if ("blocks" in name or name.startswith("self") or
+                     name.startswith("cross")) else 0
+        bdim = lead
+        if nd >= bdim + 1:
+            axes[bdim] = ("pod", "data")
+        if nd >= bdim + 3 and ("k" in name.split("/")[-1] or
+                               "v" in name.split("/")[-1] or "c_kv" in name or
+                               "k_pe" in name):
+            # (.., B, S, [KH, HD]) attention caches
+            if long_context:
+                axes[bdim] = None
+                axes[bdim + 1] = ("data",)
+            if nd >= bdim + 4:
+                axes[bdim + 2] = ("model",)
+        parts = []
+        for i, ax in enumerate(axes):
+            if ax is None:
+                parts.append(None)
+                continue
+            names = tuple(n for n in (ax if isinstance(ax, tuple) else (ax,))
+                          if n in mesh.axis_names)
+            sz = 1
+            for nm in names:
+                sz *= mesh.shape[nm]
+            if names and leaf.shape[i] % sz == 0:
+                parts.append(names if len(names) > 1 else names[0])
+            else:
+                parts.append(None)
+        return NamedSharding(mesh, P(*parts))
+
+    flat = jax.tree_util.tree_flatten_with_path(cache_abs)
+    leaves = [spec_for(p, l) for p, l in flat[0]]
+    return jax.tree_util.tree_unflatten(flat[1], leaves)
+
+
+# ---------------------------------------------------------------------------
+# parameter counting (for MODEL_FLOPS)
+# ---------------------------------------------------------------------------
+
+def param_counts(cfg: ModelConfig, abstract_params) -> Tuple[int, int]:
+    """(total, active) param counts; active discounts routed experts to the
+    per-token top-k (+ shared/residual, which always run)."""
+    total = 0
+    routed = 0
+    flat = jax.tree_util.tree_flatten_with_path(abstract_params)[0]
+    for path, leaf in flat:
+        name = "/".join(str(getattr(k, "key", getattr(k, "idx", k))) for k in path)
+        n = rl.np_prod(leaf.shape)
+        total += n
+        if "/moe/" in "/" + name + "/" and any(
+            t in name for t in ("up", "gate", "down")
+        ) and "shared" not in name and "residual" not in name:
+            routed += n
+    if cfg.moe.num_experts:
+        keep = cfg.moe.num_experts_per_tok / cfg.moe.num_experts
+        active = total - routed * (1.0 - keep)
+    else:
+        active = total
+    return int(total), int(active)
+
+
+# ---------------------------------------------------------------------------
+# lowering units
+# ---------------------------------------------------------------------------
+
+def build_train_lowering(arch: str, cfg: ModelConfig, shape: InputShape,
+                         mesh: Mesh, rules) -> Tuple[Any, dict]:
+    model = build_model(cfg)
+    run = run_config_for(arch)
+    optimizer = build_optimizer(run)
+    path = WarmStartPath(t0=run.t0)
+    step_fn = make_train_step(model, cfg, run, optimizer, path)
+
+    params_abs = jax.eval_shape(lambda: model.init(jax.random.key(0)))
+    state_abs = jax.eval_shape(
+        lambda: TrainState.create(
+            jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), params_abs),
+            optimizer,
+        )
+    )
+    pshard = shd.param_shardings(params_abs, rules, mesh)
+
+    def state_shardings(state_abs):
+        """Optimizer moment trees inherit the param spec where the leaf
+        SHAPE matches the param (mu/nu/nu_max); factored or scalar state
+        (Adafactor vr/vc, step) is replicated."""
+        reps = NamedSharding(mesh, P())
+        opt = state_abs.opt_state
+
+        def field_shard(f_abs):
+            if f_abs is None:
+                return None
+            if (jax.tree_util.tree_structure(f_abs)
+                    == jax.tree_util.tree_structure(pshard)):
+                return jax.tree.map(
+                    lambda leaf, p_abs, s: s if leaf.shape == p_abs.shape else reps,
+                    f_abs, params_abs, pshard,
+                )
+            return jax.tree.map(lambda _: reps, f_abs)
+
+        opt_shard = type(opt)(*[
+            reps if i == 0 else field_shard(f) for i, f in enumerate(opt)
+        ])
+        return TrainState(params=pshard, opt_state=opt_shard, step=reps)
+
+    sshard = state_shardings(state_abs)
+    specs = input_specs(cfg, shape)
+    bshard = batch_specs_shardings(specs, rules, mesh)
+    rng_abs = jax.eval_shape(lambda: jax.random.key(0))
+
+    jitted = jax.jit(step_fn, in_shardings=(sshard, bshard, NamedSharding(mesh, P())))
+    lowered = jitted.lower(state_abs, specs, rng_abs)
+    meta = {"params_abs": params_abs, "tokens": shape.global_batch * shape.seq_len}
+    return lowered, meta
+
+
+def build_decode_lowering(arch: str, cfg: ModelConfig, shape: InputShape,
+                          mesh: Mesh, rules, *, long_context: bool,
+                          donate_cache: bool = False):
+    model = build_model(cfg)
+    b, s = shape.global_batch, shape.seq_len
+    global_window = None
+    variant = "faithful"
+    if long_context and arch not in LONG_FAITHFUL:
+        global_window = cfg.long_context_window
+        variant = f"sliding_window_{global_window}"
+    serve_step = make_serve_step(model, cfg, global_window=global_window)
+
+    params_abs = jax.eval_shape(lambda: model.init(jax.random.key(0)))
+    pshard = shd.param_shardings(params_abs, rules, mesh)
+    cache_len = s + (cfg.num_vision_tokens if cfg.family == "vlm" else 0)
+    cache_abs = jax.eval_shape(lambda: model.init_cache(b, cache_len, jnp.bfloat16))
+    cshard = cache_shardings(cache_abs, rules, mesh, long_context=long_context)
+    rng_abs = jax.eval_shape(lambda: jax.random.key(0))
+    tok_abs = _sds((b, 1), jnp.int32)
+    tok_shard = batch_specs_shardings({"tokens": tok_abs}, rules, mesh)["tokens"]
+    pos_abs = _sds((), jnp.int32)
+
+    jitted = jax.jit(
+        serve_step,
+        in_shardings=(pshard, NamedSharding(mesh, P()), tok_shard, cshard,
+                      NamedSharding(mesh, P())),
+        donate_argnums=(3,) if donate_cache else (),
+    )
+    lowered = jitted.lower(params_abs, rng_abs, tok_abs, cache_abs, pos_abs)
+    meta = {"params_abs": params_abs, "tokens": b, "variant": variant}
+    if donate_cache:
+        meta["variant"] = variant + "+donate"
+    return lowered, meta
+
+
+def build_prefill_lowering(arch: str, cfg: ModelConfig, shape: InputShape,
+                           mesh: Mesh, rules):
+    model = build_model(cfg)
+    b, s = shape.global_batch, shape.seq_len
+
+    def prefill(params, batch, cache):
+        return model.prefill(params, batch, cache)
+
+    params_abs = jax.eval_shape(lambda: model.init(jax.random.key(0)))
+    pshard = shd.param_shardings(params_abs, rules, mesh)
+    cache_len = s + (cfg.num_vision_tokens if cfg.family == "vlm" else 0)
+    cache_abs = jax.eval_shape(lambda: model.init_cache(b, cache_len, jnp.bfloat16))
+    cshard = cache_shardings(cache_abs, rules, mesh, long_context=False)
+    specs = input_specs(cfg, shape)
+    bshard = batch_specs_shardings(specs, rules, mesh)
+
+    jitted = jax.jit(prefill, in_shardings=(pshard, bshard, cshard))
+    lowered = jitted.lower(params_abs, specs, cache_abs)
+    meta = {"params_abs": params_abs, "tokens": b * s}
+    return lowered, meta
+
+
+# ---------------------------------------------------------------------------
+# one combo end-to-end
+# ---------------------------------------------------------------------------
+
+def run_combo(arch: str, shape_name: str, *, multi_pod: bool = False,
+              save: bool = True, verbose: bool = True,
+              cfg_override=None, tag: str = "",
+              donate_cache: bool = False) -> rl.Roofline:
+    cfg = cfg_override if cfg_override is not None else get_config(arch)
+    shape = INPUT_SHAPES[shape_name]
+    if shape.kind != "train":
+        # serving runs with bf16 weights (standard practice)
+        cfg = cfg.replace(param_dtype="bfloat16", dtype="bfloat16")
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    chips = rl.np_prod(tuple(mesh.shape.values()))
+    long_context = shape_name == "long_500k"
+    kind = shape.kind
+
+    if kind == "train":
+        rules = shd.TRAIN_RULES
+    elif long_context:
+        rules = shd.LONG_RULES
+    else:
+        rules = shd.SERVE_RULES
+
+    t0 = time.time()
+    with shd.axis_rules(rules, mesh):
+        if kind == "train":
+            lowered, meta = build_train_lowering(arch, cfg, shape, mesh, rules)
+        elif kind == "prefill":
+            lowered, meta = build_prefill_lowering(arch, cfg, shape, mesh, rules)
+        else:
+            lowered, meta = build_decode_lowering(
+                arch, cfg, shape, mesh, rules, long_context=long_context,
+                donate_cache=donate_cache)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis() or {}
+    hlo = compiled.as_text()
+    # Static HLO analysis with correct while-loop multipliers (XLA's
+    # cost_analysis counts scan bodies once — see hlo_analysis.py).
+    stats = hlo_analysis.analyze_module(hlo)
+    coll = {k: float(v) for k, v in stats.collective_breakdown.items()}
+    coll_total = stats.collective_bytes
+
+    total_p, active_p = param_counts(cfg, meta["params_abs"])
+    model_flops = rl.model_flops_estimate(
+        total_p, active_p, meta["tokens"], "train" if kind == "train" else "serve")
+
+    mem_per_dev = None
+    if mem is not None:
+        try:
+            mem_per_dev = (mem.temp_size_in_bytes + mem.argument_size_in_bytes +
+                           mem.output_size_in_bytes - mem.alias_size_in_bytes)
+        except Exception:
+            mem_per_dev = None
+
+    roof = rl.Roofline(
+        arch=arch, shape=shape_name, mesh=mesh_name, chips=chips,
+        flops_per_device=float(stats.flops),
+        bytes_per_device=float(stats.bytes_accessed),
+        collective_bytes_per_device=float(coll_total),
+        collective_breakdown=coll,
+        model_flops=model_flops,
+        memory_per_device_bytes=mem_per_dev,
+    )
+    if verbose:
+        print(roof.row())
+        print(f"    params={total_p/1e9:.2f}B active={active_p/1e9:.2f}B "
+              f"lower={t_lower:.1f}s compile={t_compile:.1f}s "
+              f"variant={meta.get('variant','faithful')}")
+
+    if save:
+        payload = roof.to_dict()
+        payload.update(
+            total_params=total_p, active_params=active_p,
+            lower_s=t_lower, compile_s=t_compile,
+            variant=meta.get("variant", "faithful"),
+            memory_analysis=str(mem),
+            xla_cost_analysis={k: float(v) for k, v in cost.items()
+                               if isinstance(v, (int, float))},
+            top_dots=[(f, s, c) for f, s, c in stats.top_dots],
+            top_bytes=[(f, s, c) for f, s, c in stats.top_bytes],
+        )
+        suffix = f"__{tag}" if tag else ""
+        rl.save_artifact(
+            os.path.join(ARTIFACT_DIR,
+                         f"{arch}__{shape_name}__{mesh_name}{suffix}.json"),
+            payload,
+        )
+    return roof
+
+
+def main():
+    ap = argparse.ArgumentParser(description="multi-pod dry-run")
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    args = ap.parse_args()
+
+    archs = [args.arch] if args.arch else list(ASSIGNED_ARCHS)
+    shapes = [args.shape] if args.shape else list(INPUT_SHAPES)
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+
+    failures = []
+    for mp in meshes:
+        for arch in archs:
+            for shape in shapes:
+                try:
+                    run_combo(arch, shape, multi_pod=mp)
+                except Exception as e:  # noqa: BLE001
+                    failures.append((arch, shape, mp, repr(e)))
+                    print(f"FAIL {arch} {shape} multi_pod={mp}: {e}")
+    if failures:
+        print(f"\n{len(failures)} failures:")
+        for f in failures:
+            print("  ", f)
+        raise SystemExit(1)
+    print("\nall dry-run combos lowered + compiled OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,22 @@
+"""Fill EXPERIMENTS.md placeholders from the dry-run artifacts."""
+
+from repro.launch.report import roofline_table, variant_table
+
+PATH = "/root/repo/EXPERIMENTS.md"
+
+
+def main():
+    text = open(PATH).read()
+    text = text.replace("<!-- ROOFLINE_TABLE -->", roofline_table("16x16"))
+    text = text.replace("<!-- VARIANTS_TRAIN -->",
+                        variant_table("deepseek-v3-671b", "train_4k"))
+    text = text.replace("<!-- VARIANTS_DECODE -->",
+                        variant_table("deepseek-v3-671b", "decode_32k"))
+    text = text.replace("<!-- VARIANTS_PREFILL -->",
+                        variant_table("deepseek-v3-671b", "prefill_32k"))
+    open(PATH, "w").write(text)
+    print("EXPERIMENTS.md tables filled")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,366 @@
+"""Static analyzer for optimized HLO text — the dry-run 'profiler'.
+
+XLA's ``compiled.cost_analysis()`` counts a ``while`` body ONCE, so any
+scan-over-layers model under-reports FLOPs/bytes/collectives by ~depth.
+This module re-derives the three roofline inputs from the HLO text with
+correct loop multipliers:
+
+  * parse the module into computations and ops (result shape, opcode,
+    operand shapes, called computations, attributes);
+  * propagate execution multipliers from ENTRY (while body x trip-count,
+    trip count recovered from the largest integer constant in the loop
+    condition; call/fusion/conditional x1);
+  * FLOPs: dots = 2 * prod(result) * K (K from lhs contracting dims),
+    elementwise = prod(result);
+  * bytes: operands + result at fusion/op boundaries (not inside fusion
+    bodies — post-fusion HLO keeps fused intermediates in registers);
+  * collective bytes: result sizes of all-gather / all-reduce /
+    reduce-scatter / all-to-all / collective-permute (async pairs counted
+    once at -start).
+
+Also reports the top-k heaviest dots with their computation multipliers —
+the 'profile' consumed by the §Perf hypothesis loop.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s2": 1, "u2": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1,
+    "s16": 2, "u16": 2, "s32": 4, "u32": 4, "s64": 8, "u64": 8,
+    "f4e2m1fn": 1, "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3": 1, "f8e3m4": 1,
+    "f8e8m0fnu": 1, "f8e4m3b11fnz": 1, "f8e5m2fnuz": 1, "f8e4m3fnuz": 1,
+    "bf16": 2, "f16": 2, "f32": 4, "f64": 8, "c64": 8, "c128": 16,
+    "u1": 1, "s1": 1,
+}
+
+_SHAPE_RE = re.compile(r"\b([a-z]\d*[a-z0-9]*)\[([0-9,]*)\]")
+_COMP_HDR = re.compile(r"^(ENTRY\s+)?%?([\w.\-]+)\s*\(")
+_TRIP_RE = re.compile(r'"known_trip_count"\s*:\s*\{\s*"n"\s*:\s*"?(\d+)')
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(.*?)\s+([\w\-]+)\((.*)$"
+)
+_CALL_ATTRS = ("body=", "condition=", "to_apply=", "calls=",
+               "branch_computations=")
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute", "ragged-all-to-all")
+
+_SKIP_BYTES_OPS = {
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+    "bitcast-convert", "after-all", "custom-call", "partition-id",
+    "replica-id", "iota",
+}
+
+
+def _shape_elems_bytes(shape_str: str) -> Tuple[int, int]:
+    """(elements, bytes) summed over all array shapes in the string."""
+    elems = 0
+    byts = 0
+    for dt, dims in _SHAPE_RE.findall(shape_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        elems += n
+        byts += n * _DTYPE_BYTES[dt]
+    return elems, byts
+
+
+def _first_paren_group(s: str) -> Tuple[str, str]:
+    """Split 'operands), attrs...' at the balanced closing paren (the open
+    paren was already consumed by the op regex)."""
+    depth = 1
+    for i, ch in enumerate(s):
+        if ch == "(":
+            depth += 1
+        elif ch == ")":
+            depth -= 1
+            if depth == 0:
+                return s[:i], s[i + 1:]
+    return s, ""
+
+
+_NAME_RE = re.compile(r"%([\w.\-]+)")
+
+
+@dataclasses.dataclass
+class Op:
+    name: str
+    opcode: str
+    result_shape: str
+    operand_str: str
+    attr_str: str
+
+    def operand_names(self) -> List[str]:
+        return _NAME_RE.findall(self.operand_str)
+
+    def callees(self) -> List[str]:
+        out = []
+        for attr in _CALL_ATTRS:
+            idx = self.attr_str.find(attr)
+            if idx < 0:
+                continue
+            rest = self.attr_str[idx + len(attr):]
+            if rest.startswith("{"):
+                inner = rest[1 : rest.index("}")]
+                out.extend(
+                    (attr, c.strip().lstrip("%")) for c in inner.split(",") if c.strip()
+                )
+            else:
+                m = re.match(r"%?([\w.\-]+)", rest)
+                if m:
+                    out.append((attr, m.group(1)))
+        return out
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    ops: List[Op]
+    is_entry: bool = False
+
+
+def parse_hlo(text: str) -> Dict[str, Computation]:
+    comps: Dict[str, Computation] = {}
+    cur: Optional[Computation] = None
+    for raw in text.splitlines():
+        line = raw.rstrip()
+        if cur is None:
+            stripped = line.strip()
+            m = _COMP_HDR.match(stripped)
+            # a computation header is "%name (params) -> shape {" and is NOT
+            # an op line ("%name = shape opcode(..."); note params may
+            # contain "/*index=N*/" comments with '=' in them.
+            name_part = stripped.split("(")[0]
+            if (m and stripped.endswith("{") and "->" in stripped
+                    and "=" not in name_part):
+                cur = Computation(name=m.group(2), ops=[], is_entry=bool(m.group(1)))
+            continue
+        if line.strip() == "}":
+            comps[cur.name] = cur
+            cur = None
+            continue
+        m = _OP_RE.match(line)
+        if not m:
+            continue
+        name, shape, opcode, rest = m.groups()
+        operands, attrs = _first_paren_group(rest)
+        cur.ops.append(Op(name=name, opcode=opcode, result_shape=shape,
+                          operand_str=operands, attr_str=attrs))
+    return comps
+
+
+def _trip_count(cond: Computation) -> int:
+    """Largest integer constant in the loop condition ~= trip count."""
+    best = 1
+    for op in cond.ops:
+        if op.opcode == "constant":
+            m = re.search(r"constant\((-?\d+)\)", "constant(" + op.operand_str + ")")
+            if m:
+                best = max(best, int(m.group(1)))
+    return best
+
+
+def _dot_flops(op: Op, shape_of: Dict[str, str]) -> int:
+    out_elems, _ = _shape_elems_bytes(op.result_shape)
+    # contracted size: lhs shape dims listed in lhs_contracting_dims
+    names = op.operand_names()
+    m = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", op.attr_str)
+    if not names or not m:
+        return 2 * out_elems
+    lhs_shape = shape_of.get(names[0], "")
+    sm = _SHAPE_RE.search(lhs_shape)
+    if not sm:
+        return 2 * out_elems
+    lhs_dims = [int(d) for d in sm.group(2).split(",") if d]
+    k = 1
+    for di in m.group(1).split(","):
+        if di and int(di) < len(lhs_dims):
+            k *= lhs_dims[int(di)]
+    return 2 * out_elems * max(k, 1)
+
+
+@dataclasses.dataclass
+class HloStats:
+    flops: float = 0.0
+    bytes_accessed: float = 0.0
+    collective_bytes: float = 0.0
+    collective_breakdown: Dict[str, float] = dataclasses.field(
+        default_factory=lambda: defaultdict(float))
+    top_dots: List[Tuple[float, str, str]] = dataclasses.field(default_factory=list)
+    top_bytes: List[Tuple[float, str, str]] = dataclasses.field(default_factory=list)
+
+    def finalize(self, k: int = 12):
+        self.top_dots = sorted(self.top_dots, reverse=True)[:k]
+        self.top_bytes = sorted(self.top_bytes, reverse=True)[:k]
+        self.collective_breakdown = dict(self.collective_breakdown)
+        return self
+
+
+def analyze_module(text: str) -> HloStats:
+    comps = parse_hlo(text)
+    entry = next((c for c in comps.values() if c.is_entry), None)
+    if entry is None:
+        return HloStats().finalize()
+
+    # accumulate execution multiplier per computation
+    mult: Dict[str, float] = defaultdict(float)
+    in_fusion: Dict[str, bool] = defaultdict(bool)
+    stack: List[Tuple[str, float, bool]] = [(entry.name, 1.0, False)]
+    seen_guard = 0
+    while stack:
+        seen_guard += 1
+        if seen_guard > 200000:
+            break
+        cname, m, fus = stack.pop()
+        comp = comps.get(cname)
+        if comp is None:
+            continue
+        mult[cname] += m
+        in_fusion[cname] = in_fusion[cname] or fus
+        for op in comp.ops:
+            callees = op.callees()
+            if not callees:
+                continue
+            if op.opcode == "while":
+                body = next((c for a, c in callees if a == "body="), None)
+                cond = next((c for a, c in callees if a == "condition="), None)
+                tm = _TRIP_RE.search(op.attr_str)
+                if tm:
+                    trip = int(tm.group(1))
+                else:
+                    trip = _trip_count(comps[cond]) if cond in comps else 1
+                if body:
+                    stack.append((body, m * trip, fus))
+                if cond:
+                    stack.append((cond, m * (trip + 1), fus))
+            elif op.opcode == "fusion":
+                for _, c in callees:
+                    stack.append((c, m, True))
+            elif op.opcode in ("sort", "scatter", "reduce", "reduce-window",
+                               "select-and-scatter", "map", "reduce-scatter",
+                               "all-reduce"):
+                # comparator/combiner bodies: tiny, run per element; skip
+                continue
+            else:  # call, conditional, custom-call with computations
+                for _, c in callees:
+                    stack.append((c, m, fus))
+
+    _CONTROL = {"while", "conditional", "call"}
+    _WINDOW_OPS = {"gather", "dynamic-slice"}
+
+    def _fusion_operand_bytes(op: Op, shape_of: Dict[str, str]) -> int:
+        """Bytes a fusion op reads. A fusion parameter consumed ONLY by
+        gather/dynamic-slice ops inside the body touches just the gathered
+        window, not the whole buffer (critical for MoE weight-gather and
+        scan-sliced stacks)."""
+        callees = [c for a, c in op.callees() if a == "calls="]
+        body = comps.get(callees[0]) if callees else None
+        operands = op.operand_names()
+        total = 0
+        if body is None:
+            for nm in operands:
+                _, b2 = _shape_elems_bytes(shape_of.get(nm, ""))
+                total += b2
+            return total
+        # map body parameter index -> windowed or full
+        param_ops = {}
+        for bop in body.ops:
+            if bop.opcode == "parameter":
+                mnum = re.search(r"parameter\((\d+)\)", "parameter(" + bop.operand_str + ")")
+                if mnum:
+                    param_ops[bop.name] = int(mnum.group(1))
+        window_bytes: Dict[int, int] = {}
+        full: Dict[int, bool] = {i: False for i in param_ops.values()}
+        for bop in body.ops:
+            if bop.opcode == "parameter":
+                continue
+            for j, nm in enumerate(bop.operand_names()):
+                if nm not in param_ops:
+                    continue
+                idx = param_ops[nm]
+                if bop.opcode in _WINDOW_OPS and j == 0:
+                    _, rb = _shape_elems_bytes(bop.result_shape)
+                    window_bytes[idx] = window_bytes.get(idx, 0) + rb
+                else:
+                    full[idx] = True
+        for j, nm in enumerate(operands):
+            _, b2 = _shape_elems_bytes(shape_of.get(nm, ""))
+            if j in full and not full[j] and j in window_bytes:
+                total += min(b2, window_bytes[j])
+            else:
+                total += b2
+        return total
+
+    stats = HloStats()
+    for cname, m in mult.items():
+        comp = comps[cname]
+        fus = in_fusion[cname]
+        shape_of = {op.name: op.result_shape for op in comp.ops}
+        for op in comp.ops:
+            oc = op.opcode
+            if oc in ("dot", "dot-general"):
+                f = _dot_flops(op, shape_of) * m
+                stats.flops += f
+                stats.top_dots.append((f, op.result_shape.strip(), cname))
+            elif oc == "convolution":
+                out_e, _ = _shape_elems_bytes(op.result_shape)
+                stats.flops += 2 * out_e * m  # lower bound; convs are stubs here
+            elif oc not in _SKIP_BYTES_OPS and oc != "fusion" and oc not in _CONTROL:
+                out_e, _ = _shape_elems_bytes(op.result_shape)
+                stats.flops += out_e * m  # elementwise ~1 flop/elem
+
+            base = oc.split("-start")[0].split("-done")[0]
+            if base in _COLLECTIVES and not oc.endswith("-done"):
+                _, b = _shape_elems_bytes(op.result_shape)
+                if oc.endswith("-start") and op.result_shape.strip().startswith("("):
+                    b //= 2
+                stats.collective_bytes += b * m
+                stats.collective_breakdown[base] += b * m
+
+            # bytes: only at unfused op boundaries (operands resolved
+            # through the computation's symbol table). Ops that touch only
+            # a window of their operand (slice/gather family) are charged
+            # for the window, not the whole buffer.
+            if not fus and oc not in _SKIP_BYTES_OPS and oc not in _CONTROL:
+                _, rb = _shape_elems_bytes(op.result_shape)
+                if oc in ("dynamic-slice", "gather", "slice", "broadcast",
+                          "reshape", "transpose"):
+                    stats.bytes_accessed += 2 * rb * m   # read window + write
+                elif oc == "dynamic-update-slice":
+                    names = op.operand_names()
+                    ub = 0
+                    if len(names) >= 2:
+                        _, ub = _shape_elems_bytes(shape_of.get(names[1], ""))
+                    stats.bytes_accessed += 2 * ub * m   # read + write window
+                elif oc == "scatter":
+                    names = op.operand_names()
+                    ub = 0
+                    if len(names) >= 3:
+                        _, ub = _shape_elems_bytes(shape_of.get(names[2], ""))
+                    stats.bytes_accessed += 3 * ub * m   # read+modify+write
+                elif oc == "fusion":
+                    ob = _fusion_operand_bytes(op, shape_of)
+                    stats.bytes_accessed += (rb + ob) * m
+                    if (rb + ob) * m > 1e9:
+                        stats.top_bytes.append(
+                            ((rb + ob) * m, f"{op.opcode} {op.result_shape.strip()[:48]}",
+                             cname))
+                else:
+                    ob = 0
+                    for nm in op.operand_names():
+                        _, b2 = _shape_elems_bytes(shape_of.get(nm, ""))
+                        ob += b2
+                    stats.bytes_accessed += (rb + ob) * m
+                    if (rb + ob) * m > 1e9:
+                        stats.top_bytes.append(
+                            ((rb + ob) * m, f"{op.opcode} {op.result_shape.strip()[:48]}",
+                             cname))
+
+    return stats.finalize()

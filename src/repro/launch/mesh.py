@@ -1,0 +1,31 @@
+"""Production meshes. IMPORTANT: functions, not module-level constants —
+importing this module never touches jax device state. The dry-run sets
+XLA_FLAGS=--xla_force_host_platform_device_count=512 before any jax import
+(see dryrun.py); everything else sees the real single CPU device.
+
+Target hardware: TPU v5e pods, 16x16 = 256 chips per pod; multi-pod = 2.
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_local_mesh(model_parallel: int = 1):
+    """Debug mesh over whatever devices exist (tests use subprocesses with
+    a small forced host device count)."""
+    n = len(jax.devices())
+    assert n % model_parallel == 0
+    return jax.make_mesh((n // model_parallel, model_parallel), ("data", "model"))
+
+
+# v5e hardware constants for the roofline terms (per chip)
+PEAK_FLOPS_BF16 = 197e12        # FLOP/s
+HBM_BW = 819e9                  # bytes/s
+ICI_BW = 50e9                   # bytes/s per link

@@ -1,0 +1,63 @@
+"""§Perf hillclimb driver: re-lower the three chosen (arch x shape) pairs
+with each optimization variant and record before/after roofline terms.
+
+Hillclimb targets (chosen per the brief from the 40 baselines):
+  A. deepseek-v3-671b x train_4k    — most collective-bound pair
+  B. deepseek-v3-671b x decode_32k  — paper-representative serving unit,
+                                       worst useful-flops fraction
+  C. deepseek-v3-671b x prefill_32k — worst memory blow-up (5.6 TiB/dev)
+
+Each variant is saved as artifacts/dryrun/<arch>__<shape>__16x16__<tag>.json;
+EXPERIMENTS.md §Perf narrates the hypothesis -> change -> before/after.
+"""
+
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+# ruff: noqa: E402
+import dataclasses
+
+from repro.configs import get_config
+from repro.launch.dryrun import run_combo
+
+ARCH = "deepseek-v3-671b"
+
+
+def main():
+    cfg = get_config(ARCH)
+
+    runs = [
+        # C: prefill — chunked flash-style attention (H: memory term drops
+        # ~S/chunk for the score tensor; compute unchanged)
+        ("prefill_32k", cfg.replace(attn_impl="chunked", attn_chunk=1024),
+         "chunked", {}),
+        # B: decode — absorbed MLA (H: removes the (S,H,nd+vd) expansion:
+        # memory term ~ (nd+vd)*H/r ≈ 64x smaller; flops drop similarly)
+        ("decode_32k", cfg.replace(mla_absorb=True), "absorb", {}),
+        # B+: absorbed MLA + cache donation (H: removes the double-buffered
+        # cache from live memory: mem/dev -~cache size)
+        ("decode_32k", cfg.replace(mla_absorb=True), "absorb_donate",
+         {"donate_cache": True}),
+        # A: train — capacity-sharded MoE dispatch (H: GSPMD stops
+        # gathering the full token buffer to every expert shard; collective
+        # term drops toward the all-to-all payload)
+        ("train_4k",
+         cfg.replace(moe=dataclasses.replace(cfg.moe, capacity_sharding="data")),
+         "dispatch_capdata", {}),
+        # A+: dispatch fix + chunked attention together
+        ("train_4k",
+         cfg.replace(attn_impl="chunked", attn_chunk=1024,
+                     moe=dataclasses.replace(cfg.moe, capacity_sharding="data")),
+         "dispatch_capdata_chunked", {}),
+    ]
+
+    for shape, cfg_v, tag, kw in runs:
+        print(f"=== {ARCH} {shape} [{tag}] ===", flush=True)
+        try:
+            run_combo(ARCH, shape, cfg_override=cfg_v, tag=tag, **kw)
+        except Exception as e:  # noqa: BLE001
+            print(f"FAIL {tag}: {e!r}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,65 @@
+"""Regenerate all dry-run artifacts with the final analyzer + sharding
+rules: 40 single-pod baselines, the §Perf variants, then 40 multi-pod."""
+
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+# ruff: noqa: E402
+import dataclasses
+import sys
+
+from repro.configs import ASSIGNED_ARCHS, INPUT_SHAPES, get_config
+from repro.launch.dryrun import run_combo
+
+
+def main():
+    which = sys.argv[1] if len(sys.argv) > 1 else "all"
+    failures = []
+
+    if which in ("all", "single"):
+        for arch in ASSIGNED_ARCHS:
+            for shape in INPUT_SHAPES:
+                try:
+                    run_combo(arch, shape)
+                except Exception as e:  # noqa: BLE001
+                    failures.append((arch, shape, "single", repr(e)[:200]))
+                    print("FAIL", arch, shape, repr(e)[:200], flush=True)
+
+    if which in ("all", "variants"):
+        cfg = get_config("deepseek-v3-671b")
+        variants = [
+            ("prefill_32k", cfg.replace(attn_impl="chunked", attn_chunk=1024),
+             "chunked", {}),
+            ("decode_32k", cfg.replace(mla_absorb=True), "absorb", {}),
+            ("train_4k", cfg.replace(
+                moe=dataclasses.replace(cfg.moe, capacity_sharding="data")),
+             "dispatch_capdata", {}),
+            ("train_4k", cfg.replace(
+                attn_impl="chunked", attn_chunk=1024,
+                moe=dataclasses.replace(cfg.moe, dispatch_impl="shardmap")),
+             "shardmap_v4", {}),
+        ]
+        for shape, cfg_v, tag, kw in variants:
+            try:
+                run_combo("deepseek-v3-671b", shape, cfg_override=cfg_v,
+                          tag=tag, **kw)
+            except Exception as e:  # noqa: BLE001
+                failures.append(("deepseek", shape, tag, repr(e)[:200]))
+                print("FAIL", tag, repr(e)[:200], flush=True)
+
+    if which in ("all", "multi"):
+        for arch in ASSIGNED_ARCHS:
+            for shape in INPUT_SHAPES:
+                try:
+                    run_combo(arch, shape, multi_pod=True)
+                except Exception as e:  # noqa: BLE001
+                    failures.append((arch, shape, "multi", repr(e)[:200]))
+                    print("FAIL", arch, shape, "multi", repr(e)[:200], flush=True)
+
+    print(f"regen done; {len(failures)} failures")
+    for f in failures:
+        print("  ", f)
+
+
+if __name__ == "__main__":
+    main()

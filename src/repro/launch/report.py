@@ -1,0 +1,98 @@
+"""Render the EXPERIMENTS.md §Dry-run/§Roofline tables from artifacts."""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+ARTIFACT_DIR = os.environ.get("REPRO_ARTIFACTS", "/root/repo/artifacts/dryrun")
+
+ARCH_ORDER = [
+    "gemma3-1b", "xlstm-1.3b", "deepseek-v3-671b", "starcoder2-3b",
+    "qwen2-vl-72b", "arctic-480b", "minitron-4b", "whisper-medium",
+    "zamba2-2.7b", "command-r-plus-104b",
+]
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def load(mesh: str, tagged: bool = False):
+    rows = {}
+    for f in sorted(glob.glob(os.path.join(ARTIFACT_DIR, "*.json"))):
+        base = os.path.basename(f)[:-5]
+        parts = base.split("__")
+        if len(parts) == 3 and not tagged:
+            arch, shape, m = parts
+            if m != mesh:
+                continue
+            rows[(arch, shape)] = json.load(open(f))
+        elif len(parts) == 4 and tagged:
+            arch, shape, m, tag = parts
+            if m != mesh:
+                continue
+            rows[(arch, shape, tag)] = json.load(open(f))
+    return rows
+
+
+def fmt_ms(s):
+    return f"{s*1e3:,.1f}"
+
+
+def roofline_table(mesh: str = "16x16") -> str:
+    rows = load(mesh)
+    out = [
+        "| arch | shape | t_compute (ms) | t_memory (ms) | t_collective (ms) "
+        "| bottleneck | useful FLOPs | mem/dev (GiB) | variant |",
+        "|---|---|---:|---:|---:|---|---:|---:|---|",
+    ]
+    for arch in ARCH_ORDER:
+        for shape in SHAPE_ORDER:
+            d = rows.get((arch, shape))
+            if d is None:
+                out.append(f"| {arch} | {shape} | — | — | — | MISSING | | | |")
+                continue
+            mem = (d.get("memory_per_device_bytes") or 0) / 2**30
+            var = d.get("variant", "faithful")
+            var = "" if var == "faithful" else var
+            out.append(
+                f"| {arch} | {shape} | {fmt_ms(d['t_compute_s'])} | "
+                f"{fmt_ms(d['t_memory_s'])} | {fmt_ms(d['t_collective_s'])} | "
+                f"**{d['bottleneck']}** | {d['useful_flops_ratio']:.3f} | "
+                f"{mem:,.1f} | {var} |")
+    return "\n".join(out)
+
+
+def variant_table(arch: str, shape: str, mesh: str = "16x16") -> str:
+    base = load(mesh).get((arch, shape))
+    tagged = load(mesh, tagged=True)
+    out = [
+        "| variant | t_compute (ms) | t_memory (ms) | t_collective (ms) | "
+        "bottleneck | useful | collective breakdown (GB/dev) |",
+        "|---|---:|---:|---:|---|---:|---|",
+    ]
+
+    def row(name, d):
+        cb = d.get("collective_breakdown", {})
+        cbs = " ".join(f"{k.split('-')[-1] if k.startswith('all') else k}"
+                       f"={v/1e9:,.0f}" for k, v in cb.items() if v > 1e8)
+        return (f"| {name} | {fmt_ms(d['t_compute_s'])} | "
+                f"{fmt_ms(d['t_memory_s'])} | {fmt_ms(d['t_collective_s'])} | "
+                f"{d['bottleneck']} | {d['useful_flops_ratio']:.3f} | {cbs} |")
+
+    if base:
+        out.append(row("baseline (paper-faithful impl)", base))
+    for (a, s, tag), d in sorted(tagged.items()):
+        if a == arch and s == shape:
+            out.append(row(tag, d))
+    return "\n".join(out)
+
+
+if __name__ == "__main__":
+    import sys
+    mesh = sys.argv[1] if len(sys.argv) > 1 else "16x16"
+    print(roofline_table(mesh))
+    print()
+    for shape in ("train_4k", "prefill_32k", "decode_32k"):
+        print(f"### deepseek-v3-671b {shape}")
+        print(variant_table("deepseek-v3-671b", shape, mesh))
+        print()

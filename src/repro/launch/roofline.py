@@ -1,0 +1,168 @@
+"""Roofline-term extraction from compiled dry-run artifacts.
+
+Three terms per (arch x shape x mesh), all in seconds (v5e constants):
+
+    compute    = HLO_FLOPs / (chips * 197e12)
+    memory     = HLO_bytes / (chips * 819e9)
+    collective = collective_bytes / (chips * 50e9)
+
+HLO_FLOPs / HLO_bytes come from ``compiled.cost_analysis()`` (per-device
+after SPMD partitioning — multiplied back to global by `chips`).
+collective_bytes is parsed from the optimized HLO text: the summed result
+sizes of all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute ops (result size == operand size for all-reduce and
+permute; for all-gather the gathered result is the wire-dominant side).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import re
+from typing import Dict, Optional
+
+from repro.launch.mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "s32": 4, "u32": 4, "s64": 8, "u64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1, "bf16": 2, "f16": 2, "f32": 4, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = (
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(\(?[^=]*?\)?)\s*"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(",
+)
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(shape_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes_from_hlo(hlo_text: str) -> Dict[str, int]:
+    """Sum result bytes per collective kind from optimized HLO text.
+    `-start/-done` async pairs are counted once (on -start; tuple results
+    of starts count the payload half only)."""
+    out = {k: 0 for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        m = _OP_RE.match(line)
+        if not m:
+            continue
+        if "-done(" in line:
+            continue  # counted at -start
+        shape_str, kind = m.group(1), m.group(2)
+        b = _shape_bytes(shape_str)
+        if "-start(" in line and shape_str.startswith("("):
+            b //= 2  # (operand, result) tuple: count the result half
+        out[kind] += b
+    return out
+
+
+@dataclasses.dataclass
+class Roofline:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    flops_per_device: float
+    bytes_per_device: float
+    collective_bytes_per_device: float
+    collective_breakdown: Dict[str, int]
+    model_flops: float                    # 6 N D (dense) / 6 N_active D (MoE)
+    memory_per_device_bytes: Optional[float] = None
+
+    @property
+    def t_compute(self) -> float:
+        return self.flops_per_device / PEAK_FLOPS_BF16
+
+    @property
+    def t_memory(self) -> float:
+        return self.bytes_per_device / HBM_BW
+
+    @property
+    def t_collective(self) -> float:
+        return self.collective_bytes_per_device / ICI_BW
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {
+            "compute": self.t_compute,
+            "memory": self.t_memory,
+            "collective": self.t_collective,
+        }
+        return max(terms, key=terms.get)
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        total = self.flops_per_device * self.chips
+        return self.model_flops / total if total else 0.0
+
+    def to_dict(self) -> dict:
+        return {
+            "arch": self.arch, "shape": self.shape, "mesh": self.mesh,
+            "chips": self.chips,
+            "flops_per_device": self.flops_per_device,
+            "bytes_per_device": self.bytes_per_device,
+            "collective_bytes_per_device": self.collective_bytes_per_device,
+            "collective_breakdown": self.collective_breakdown,
+            "model_flops": self.model_flops,
+            "memory_per_device_bytes": self.memory_per_device_bytes,
+            "t_compute_s": self.t_compute,
+            "t_memory_s": self.t_memory,
+            "t_collective_s": self.t_collective,
+            "bottleneck": self.bottleneck,
+            "useful_flops_ratio": self.useful_flops_ratio,
+        }
+
+    def row(self) -> str:
+        mem = (f"{self.memory_per_device_bytes/2**30:7.2f}GiB"
+               if self.memory_per_device_bytes else "      n/a")
+        return (
+            f"{self.arch:22s} {self.shape:12s} {self.mesh:9s} "
+            f"tc={self.t_compute*1e3:9.3f}ms tm={self.t_memory*1e3:9.3f}ms "
+            f"tcoll={self.t_collective*1e3:9.3f}ms -> {self.bottleneck:10s} "
+            f"useful={self.useful_flops_ratio:6.3f} mem/dev={mem}"
+        )
+
+
+def count_params(abstract_params) -> int:
+    import jax
+    return sum(int(np_prod(l.shape)) for l in jax.tree.leaves(abstract_params))
+
+
+def np_prod(shape):
+    n = 1
+    for s in shape:
+        n *= int(s)
+    return n
+
+
+def model_flops_estimate(n_params: int, n_active_params: int, tokens: int,
+                         kind: str) -> float:
+    """6 N D for training; 2 N D for inference forward."""
+    n = n_active_params
+    return (6.0 if kind == "train" else 2.0) * n * tokens
+
+
+def save_artifact(path: str, payload: dict):
+    import os
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=1, default=str)

@@ -1,0 +1,78 @@
+"""Training launcher: ``python -m repro.launch.train --arch dfm-dit --t0 0.8``
+
+On this CPU container it trains reduced configs on the synthetic substrate
+end-to-end (the same code path the pod would run under pjit; see dryrun.py
+for the production lowering). Produces checkpoints consumable by serve.py.
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+
+import jax
+import numpy as np
+
+from repro.configs import get_config, get_smoke_config
+from repro.configs.base import RunConfig
+from repro.core import (
+    CorruptionDraft, KNNRefinementCoupling, OracleRefinementCoupling,
+    WarmStartPath, pair_iterator,
+)
+from repro.checkpoint import save_checkpoint
+from repro.data import SyntheticCorpus, WordOracle
+from repro.models import build_model
+from repro.training import Trainer
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="dfm-dit")
+    ap.add_argument("--smoke", action="store_true", help="use reduced config")
+    ap.add_argument("--t0", type=float, default=0.8)
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch-size", type=int, default=16)
+    ap.add_argument("--seq-len", type=int, default=64)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--checkpoint-dir", default="/tmp/repro_ckpt")
+    args = ap.parse_args()
+
+    cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    cfg = cfg.replace(max_seq_len=max(cfg.max_seq_len, args.seq_len))
+    model = build_model(cfg)
+    run = RunConfig(
+        arch=args.arch, t0=args.t0, learning_rate=args.lr,
+        total_steps=args.steps, batch_size=args.batch_size, seed=args.seed,
+        checkpoint_dir=args.checkpoint_dir,
+    )
+
+    # data: synthetic corpus tokens modulo the arch's vocab
+    corpus = SyntheticCorpus(seed=args.seed)
+    data = corpus.sequences(4096, args.seq_len, seed=args.seed + 1)
+    data = (data % cfg.vocab_size).astype(np.int32)
+    rng = np.random.default_rng(args.seed)
+
+    if args.t0 > 0:
+        draft = CorruptionDraft(data=data, vocab_size=cfg.vocab_size, corruption=0.3)
+        drafts = np.asarray(draft.generate(jax.random.key(args.seed), data.shape[0]))
+        coupling = KNNRefinementCoupling(k=1, k_inject=1, max_candidates=2048)
+        src, tgt = coupling.build(data, drafts, rng)
+    else:
+        src = rng.integers(0, cfg.vocab_size, size=data.shape, dtype=np.int32)
+        tgt = data
+
+    it = pair_iterator(src, tgt, run.batch_size, rng)
+    trainer = Trainer(model, cfg, run, path=WarmStartPath(t0=args.t0))
+    state = trainer.init_state(jax.random.key(args.seed))
+    state = trainer.fit(
+        state, it, steps=args.steps,
+        log_fn=lambda i, m: print(f"step {i}: loss={m['loss']:.4f} "
+                                  f"ce={m['ce']:.4f} {m['steps_per_s']:.2f} it/s"),
+    )
+    path = save_checkpoint(run.checkpoint_dir, state, step=int(state.step))
+    print(f"checkpoint saved to {path}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,7 @@
+"""Model zoo: backbone networks usable as DFM denoisers (v_theta) and as
+AR draft/baseline models."""
+
+from repro.models.model import Model, build_model
+from repro.models.lstm import LSTMConfig, LSTMModel
+
+__all__ = ["Model", "build_model", "LSTMConfig", "LSTMModel"]

@@ -1,0 +1,170 @@
+"""Shared neural-net building blocks (framework-native, no flax).
+
+Parameters are nested dicts of jnp arrays; every block exposes
+``init_<block>(key, cfg, ...) -> params`` and ``<block>(params, x, ...)``.
+Compute dtype is cfg.dtype (bf16 on TPU), params kept in cfg.param_dtype.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+
+def _dt(name: str):
+    return {"float32": jnp.float32, "bfloat16": jnp.bfloat16, "float16": jnp.float16}[name]
+
+
+def param_dtype(cfg: ModelConfig):
+    return _dt(cfg.param_dtype)
+
+
+def compute_dtype(cfg: ModelConfig):
+    return _dt(cfg.dtype)
+
+
+# -- initializers -----------------------------------------------------------
+
+def normal_init(key, shape, dtype, stddev=0.02):
+    return (stddev * jax.random.normal(key, shape)).astype(dtype)
+
+
+def dense_init(key, in_dim, out_dim, dtype, *, bias=False, stddev=None):
+    if stddev is None:
+        stddev = 1.0 / math.sqrt(in_dim)
+    p = {"w": normal_init(key, (in_dim, out_dim), dtype, stddev)}
+    if bias:
+        p["b"] = jnp.zeros((out_dim,), dtype)
+    return p
+
+
+def dense(p, x):
+    y = x @ p["w"].astype(x.dtype)
+    if "b" in p:
+        y = y + p["b"].astype(x.dtype)
+    return y
+
+
+# -- norms ------------------------------------------------------------------
+
+def init_rmsnorm(dim, dtype):
+    return {"scale": jnp.zeros((dim,), dtype)}  # gemma-style (1 + scale)
+
+
+def rmsnorm(p, x, eps=1e-6):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * (1.0 + p["scale"].astype(jnp.float32))).astype(x.dtype)
+
+
+def init_layernorm(dim, dtype):
+    return {"scale": jnp.ones((dim,), dtype), "bias": jnp.zeros((dim,), dtype)}
+
+
+def layernorm(p, x, eps=1e-5):
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (y * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)).astype(x.dtype)
+
+
+def init_norm(cfg: ModelConfig, dim=None):
+    dim = dim or cfg.d_model
+    pd = param_dtype(cfg)
+    return init_layernorm(dim, pd) if cfg.norm == "layernorm" else init_rmsnorm(dim, pd)
+
+
+def apply_norm(cfg: ModelConfig, p, x):
+    if cfg.norm == "layernorm":
+        return layernorm(p, x, cfg.norm_eps)
+    return rmsnorm(p, x, cfg.norm_eps)
+
+
+# -- activations --------------------------------------------------------------
+
+def activation(name: str, x):
+    if name == "silu":
+        return jax.nn.silu(x)
+    if name == "gelu":
+        return jax.nn.gelu(x, approximate=True)
+    if name == "relu":
+        return jax.nn.relu(x)
+    raise ValueError(name)
+
+
+# -- embeddings ----------------------------------------------------------------
+
+def init_embedding(key, vocab, dim, dtype, stddev=0.02):
+    return {"table": normal_init(key, (vocab, dim), dtype, stddev)}
+
+
+def embed(p, tokens, *, scale=False, dtype=jnp.bfloat16):
+    t = p["table"].astype(dtype)
+    x = jnp.take(t, tokens, axis=0)
+    if scale:
+        x = x * jnp.asarray(math.sqrt(t.shape[-1]), dtype)
+    return x
+
+
+def unembed(p, x, *, tied_table=None):
+    table = tied_table if tied_table is not None else p["table"]
+    return x @ table.astype(x.dtype).T
+
+
+# -- time conditioning (DFM denoiser mode) -------------------------------------
+# Fourier features of t followed by a 2-layer MLP -> additive embedding.
+# This is the adaLN-lite adaptation described in DESIGN.md §4.
+
+def init_time_embed(key, cfg: ModelConfig):
+    pd = param_dtype(cfg)
+    k1, k2 = jax.random.split(key)
+    h = cfg.time_embed_dim
+    return {
+        "w1": dense_init(k1, h, 4 * h, pd),
+        "w2": dense_init(k2, 4 * h, cfg.d_model, pd),
+    }
+
+
+def time_embed(p, t, cfg: ModelConfig):
+    """t: (B,) in [0,1] -> (B, d_model)."""
+    h = cfg.time_embed_dim
+    half = h // 2
+    freqs = jnp.exp(-math.log(10000.0) * jnp.arange(half, dtype=jnp.float32) / half)
+    ang = t.astype(jnp.float32)[:, None] * freqs[None, :] * 1000.0
+    feats = jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+    feats = feats.astype(compute_dtype(cfg))
+    y = activation("silu", dense(p["w1"], feats))
+    return dense(p["w2"], y)
+
+
+# -- gated MLP -------------------------------------------------------------------
+
+def init_mlp(key, cfg: ModelConfig, d_ff: Optional[int] = None, d_in: Optional[int] = None):
+    d_ff = d_ff or cfg.d_ff
+    d_in = d_in or cfg.d_model
+    pd = param_dtype(cfg)
+    ks = jax.random.split(key, 3)
+    p = {
+        "up": dense_init(ks[0], d_in, d_ff, pd, bias=cfg.use_bias),
+        "down": dense_init(ks[1], d_ff, d_in, pd, bias=cfg.use_bias,
+                           stddev=0.02 / math.sqrt(2 * cfg.num_layers)),
+    }
+    if cfg.mlp_gated:
+        p["gate"] = dense_init(ks[2], d_in, d_ff, pd, bias=cfg.use_bias)
+    return p
+
+
+def mlp(p, x, cfg: ModelConfig):
+    up = dense(p["up"], x)
+    if "gate" in p:
+        up = activation(cfg.act, dense(p["gate"], x)) * up
+    else:
+        up = activation(cfg.act, up)
+    return dense(p["down"], up)

@@ -1,0 +1,220 @@
+"""Whisper-style encoder-decoder (arXiv:2212.04356), transformer backbone
+only — the mel-spectrogram + conv frontend is a STUB: the batch supplies
+precomputed frame embeddings ``frames (B, F, d_model)`` (the sanctioned
+modality carve-out, DESIGN.md §4).
+
+Encoder: bidirectional attention blocks over frames + sinusoidal pos.
+Decoder: causal self-attention + cross-attention + MLP, scanned; the
+cross-attention K/V are computed once per request at prefill and cached.
+Whisper uses LayerNorm, GELU, biases, learned decoder positions, no RoPE.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn_lib
+from repro.models.common import (
+    apply_norm, compute_dtype, dense, dense_init, embed, init_embedding,
+    init_mlp, init_norm, init_time_embed, mlp, normal_init, param_dtype,
+    time_embed, unembed,
+)
+
+
+def _sinusoids(length: int, dim: int) -> jnp.ndarray:
+    half = dim // 2
+    scale = math.log(10000.0) / max(half - 1, 1)
+    inv = jnp.exp(-scale * jnp.arange(half, dtype=jnp.float32))
+    ang = jnp.arange(length, dtype=jnp.float32)[:, None] * inv[None]
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+def _init_enc_block(key, cfg: ModelConfig) -> dict:
+    ks = jax.random.split(key, 2)
+    return {
+        "ln1": init_norm(cfg),
+        "attn": attn_lib.init_gqa(ks[0], cfg),
+        "ln2": init_norm(cfg),
+        "mlp": init_mlp(ks[1], cfg),
+    }
+
+
+def _init_dec_block(key, cfg: ModelConfig) -> dict:
+    ks = jax.random.split(key, 3)
+    return {
+        "ln1": init_norm(cfg),
+        "self_attn": attn_lib.init_gqa(ks[0], cfg),
+        "ln_x": init_norm(cfg),
+        "cross": attn_lib.init_cross_attn(ks[1], cfg),
+        "ln2": init_norm(cfg),
+        "mlp": init_mlp(ks[2], cfg),
+    }
+
+
+@dataclasses.dataclass(frozen=True)
+class EncDecModel:
+    cfg: ModelConfig
+
+    def init(self, key) -> dict:
+        cfg = self.cfg
+        ks = jax.random.split(key, 4 + cfg.num_encoder_layers + cfg.num_layers)
+        enc_blocks = [
+            _init_enc_block(ks[4 + i], cfg) for i in range(cfg.num_encoder_layers)
+        ]
+        dec_blocks = [
+            _init_dec_block(ks[4 + cfg.num_encoder_layers + i], cfg)
+            for i in range(cfg.num_layers)
+        ]
+        return {
+            "embed": init_embedding(ks[0], cfg.vocab_size, cfg.d_model, param_dtype(cfg)),
+            # NOTE: Whisper uses *learned* decoder positions; a 500k-entry
+            # learned table is not meaningful, so we use sinusoids (the same
+            # family as its encoder) — documented adaptation (DESIGN.md §4).
+            "time": init_time_embed(ks[2], cfg),
+            "enc_blocks": jax.tree.map(lambda *xs: jnp.stack(xs), *enc_blocks),
+            "enc_norm": init_norm(cfg),
+            "dec_blocks": jax.tree.map(lambda *xs: jnp.stack(xs), *dec_blocks),
+            "dec_norm": init_norm(cfg),
+        }
+
+    # ------------------------------------------------------------- encoder
+
+    def encode(self, params, frames: jax.Array, *, remat: bool = False) -> jax.Array:
+        """frames (B, F, d_model) stub embeddings -> encoder states."""
+        cfg = self.cfg
+        dt = compute_dtype(cfg)
+        b, f, _ = frames.shape
+        x = frames.astype(dt) + _sinusoids(f, cfg.d_model).astype(dt)[None]
+        q_pos = jnp.broadcast_to(jnp.arange(f, dtype=jnp.int32)[None], (b, f))
+
+        def body(h, bp):
+            a = apply_norm(cfg, bp["ln1"], h)
+            a, _ = attn_lib.gqa_attention(
+                bp["attn"], a, cfg, sin=None, cos=None, mode="bidir",
+                window=None, q_pos=q_pos,
+            )
+            h = h + a
+            return h + mlp(bp["mlp"], apply_norm(cfg, bp["ln2"], h), cfg), None
+
+        if remat:
+            body = jax.checkpoint(body, prevent_cse=False)
+        x, _ = jax.lax.scan(body, x, params["enc_blocks"])
+        return apply_norm(cfg, params["enc_norm"], x)
+
+    # ------------------------------------------------------------- decoder
+
+    def _decode_stack(self, params, x, cross_kvs, q_pos, mode,
+                      self_caches=None, remat: bool = False):
+        cfg = self.cfg
+
+        def body(carry, xs):
+            h = carry
+            bp, ckv, cin = xs
+            a = apply_norm(cfg, bp["ln1"], h)
+            a, cout = attn_lib.gqa_attention(
+                bp["self_attn"], a, cfg, sin=None, cos=None, mode=mode,
+                window=None, q_pos=q_pos, cache=cin,
+            )
+            h = h + a
+            h = h + attn_lib.cross_attention(
+                bp["cross"], apply_norm(cfg, bp["ln_x"], h), ckv, cfg)
+            h = h + mlp(bp["mlp"], apply_norm(cfg, bp["ln2"], h), cfg)
+            return h, cout
+
+        if remat:
+            body = jax.checkpoint(body, prevent_cse=False)
+        x, new_caches = jax.lax.scan(
+            body, x, (params["dec_blocks"], cross_kvs, self_caches)
+        )
+        return apply_norm(cfg, params["dec_norm"], x), new_caches
+
+    def _embed_tokens(self, params, tokens, pos_offset, t):
+        cfg = self.cfg
+        dt = compute_dtype(cfg)
+        b, s = tokens.shape
+        x = embed(params["embed"], tokens, dtype=dt)
+        half = cfg.d_model // 2
+        scale = math.log(10000.0) / max(half - 1, 1)
+        inv = jnp.exp(-scale * jnp.arange(half, dtype=jnp.float32))
+        idx = (jnp.arange(s, dtype=jnp.int32) + pos_offset).astype(jnp.float32)
+        ang = idx[:, None] * inv[None]
+        pos = jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+        x = x + pos.astype(dt)[None]
+        if t is not None:
+            x = x + time_embed(params["time"], t, cfg)[:, None, :]
+        return x
+
+    def build_cross_kvs(self, params, enc_out):
+        """Per-decoder-layer cross K/V, stacked for the scan."""
+        return jax.vmap(
+            lambda bp: attn_lib.encode_cross_kv(bp["cross"], enc_out, self.cfg)
+        )(params["dec_blocks"])
+
+    # ------------------------------------------------------------- forward
+
+    def forward(self, params, batch, t=None, *, mode=None,
+                global_window: Optional[int] = None, remat: bool = False):
+        cfg = self.cfg
+        frames = batch["frames"]
+        enc_out = self.encode(params, frames, remat=remat)
+        cross_kvs = self.build_cross_kvs(params, enc_out)
+        tokens = batch["tokens"]
+        b, s = tokens.shape
+        x = self._embed_tokens(params, tokens, 0, t)
+        q_pos = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+        if mode is None:
+            mode = "bidir" if t is not None else "causal"
+        x, _ = self._decode_stack(params, x, cross_kvs, q_pos, mode, remat=remat)
+        return unembed(params["embed"], x), jnp.zeros((), jnp.float32)
+
+    def dfm_apply(self, params, tokens, t, *, extras: Optional[dict] = None):
+        batch = {"tokens": tokens}
+        batch.update(extras or {})
+        logits, _ = self.forward(params, batch, t)
+        return logits
+
+    # ------------------------------------------------------------- serving
+
+    def init_cache(self, batch: int, max_len: int, dtype=jnp.bfloat16) -> dict:
+        cfg = self.cfg
+        one = attn_lib.init_gqa_cache(cfg, batch, max_len, dtype)
+        self_caches = jax.tree.map(
+            lambda a: jnp.broadcast_to(a, (cfg.num_layers,) + a.shape).copy(), one
+        )
+        h, hd = cfg.num_heads, cfg.head_dim
+        return {
+            "self": self_caches,
+            "cross": {
+                "k": jnp.zeros((cfg.num_layers, batch, cfg.num_audio_frames, h, hd), dtype),
+                "v": jnp.zeros((cfg.num_layers, batch, cfg.num_audio_frames, h, hd), dtype),
+            },
+        }
+
+    def prefill(self, params, batch, cache, *, global_window=None):
+        enc_out = self.encode(params, batch["frames"])
+        cross_kvs = self.build_cross_kvs(params, enc_out)
+        cache = dict(cache, cross=jax.tree.map(
+            lambda a, proto: a.astype(proto.dtype), cross_kvs, cache["cross"]))
+        tokens = batch["tokens"]
+        b, s = tokens.shape
+        x = self._embed_tokens(params, tokens, 0, None)
+        q_pos = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+        x, new_self = self._decode_stack(
+            params, x, cache["cross"], q_pos, "causal", self_caches=cache["self"])
+        logits = unembed(params["embed"], x[:, -1:])
+        return logits, {"self": new_self, "cross": cache["cross"]}
+
+    def decode_step(self, params, tokens, cache, pos, *, batch_extras=None,
+                    global_window=None):
+        b, s = tokens.shape
+        x = self._embed_tokens(params, tokens, pos, None)
+        q_pos = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s)) + pos
+        x, new_self = self._decode_stack(
+            params, x, cache["cross"], q_pos, "causal", self_caches=cache["self"])
+        return unembed(params["embed"], x), {"self": new_self, "cross": cache["cross"]}

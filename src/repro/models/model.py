@@ -1,0 +1,187 @@
+"""Model assembly: embeddings + (time conditioning) + scanned stack + head.
+
+A single ``Model`` class serves every decoder-only assigned architecture;
+``build_model(cfg)`` dispatches to the Whisper-style encoder-decoder when
+``cfg.is_encoder_decoder``.
+
+Batch dict convention (what launch/dryrun.py's input_specs produces):
+  tokens:    (B, S) int32            — always present
+  patches:   (B, P, vision_dim) f32  — qwen2-vl stub patch embeddings
+  positions: (3, B, S) int32         — qwen2-vl M-RoPE position ids
+  frames:    (B, F, d_model) f32     — whisper stub frame embeddings
+
+Modes:
+  forward(..., t=None)  t given -> DFM denoiser (bidirectional attention,
+                        additive time embedding); t None -> causal AR LM.
+  prefill/decode_step   AR serving with KV/state caches.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import constrain
+from repro.models import transformer as tf
+from repro.models.common import (
+    compute_dtype, dense, dense_init, embed, init_embedding, init_norm,
+    init_time_embed, apply_norm, param_dtype, time_embed, unembed,
+)
+from repro.models.rope import make_positions, mrope_angles, rope_angles
+
+VISION_DIM = 1280  # qwen2-vl ViT output width (stub frontend)
+
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    cfg: ModelConfig
+
+    # ------------------------------------------------------------------ init
+
+    def init(self, key) -> dict:
+        cfg = self.cfg
+        ks = jax.random.split(key, 6)
+        pd = param_dtype(cfg)
+        params: Dict[str, Any] = {
+            "embed": init_embedding(ks[0], cfg.vocab_size, cfg.d_model, pd),
+            "stack": tf.init_stack(ks[1], cfg),
+            "final_norm": init_norm(cfg),
+            "time": init_time_embed(ks[2], cfg),
+        }
+        if not cfg.tie_embeddings:
+            params["head"] = dense_init(ks[3], cfg.d_model, cfg.vocab_size, pd)
+        if cfg.family == "vlm":
+            params["patch_proj"] = dense_init(ks[4], VISION_DIM, cfg.d_model, pd)
+        return params
+
+    # ------------------------------------------------------------- internals
+
+    def _embed_inputs(self, params, batch, t):
+        cfg = self.cfg
+        dt = compute_dtype(cfg)
+        x = embed(params["embed"], batch["tokens"], scale=cfg.embed_scale, dtype=dt)
+        if cfg.family == "vlm" and "patches" in batch:
+            pv = dense(params["patch_proj"], batch["patches"].astype(dt))
+            x = jnp.concatenate([pv, x], axis=1)
+        if t is not None:
+            x = x + time_embed(params["time"], t, cfg)[:, None, :]
+        # anchor activation layout: batch sharded, d_model replicated
+        return constrain(x, ("batch", "seq", None))
+
+    def _rope_ctx(self, batch, b, s, offset=0) -> dict:
+        cfg = self.cfg
+        ctx: Dict[str, Any] = {}
+        if cfg.rope_type == "mrope" and "positions" in batch:
+            pos3 = batch["positions"]
+            q_pos = pos3[0]
+            sin, cos = mrope_angles(pos3, cfg.head_dim, cfg.rope_theta, cfg.mrope_sections)
+            ctx.update(sin=sin, cos=cos, sin_local=sin, cos_local=cos)
+        else:
+            q_pos = make_positions(b, s, offset)
+            if cfg.rope_type == "none":
+                ctx.update(sin=None, cos=None, sin_local=None, cos_local=None)
+            else:
+                sin, cos = rope_angles(q_pos, cfg.head_dim, cfg.rope_theta)
+                ctx.update(sin=sin, cos=cos)
+                if cfg.rope_type == "dual":
+                    sl, cl = rope_angles(q_pos, cfg.head_dim, cfg.local_rope_theta)
+                    ctx.update(sin_local=sl, cos_local=cl)
+                else:
+                    ctx.update(sin_local=sin, cos_local=cos)
+        ctx["q_pos"] = q_pos
+        return ctx
+
+    def _head(self, params, x):
+        cfg = self.cfg
+        x = apply_norm(cfg, params["final_norm"], x)
+        if cfg.tie_embeddings:
+            logits = unembed(params["embed"], x)
+        else:
+            logits = dense(params["head"], x)
+        return constrain(logits, ("batch", "seq", "vocab"))
+
+    # ------------------------------------------------------------- forward
+
+    def forward(
+        self,
+        params,
+        batch: Dict[str, jax.Array],
+        t: Optional[jax.Array] = None,
+        *,
+        mode: Optional[str] = None,
+        global_window: Optional[int] = None,
+        remat: bool = False,
+    ) -> Tuple[jax.Array, jax.Array]:
+        """Full-sequence forward. Returns (logits (B,S,V), aux_loss)."""
+        cfg = self.cfg
+        x = self._embed_inputs(params, batch, t)
+        b, s, _ = x.shape
+        if mode is None:
+            # DFM denoiser is bidirectional for attention archs; recurrent
+            # kinds are inherently causal (noted in DESIGN.md §4).
+            mode = "bidir" if t is not None else "causal"
+        ctx = self._rope_ctx(batch, b, s)
+        ctx.update(mode=mode, x0=x, global_window=global_window, remat=remat)
+        x, _, aux = tf.apply_stack(params["stack"], x, cfg, ctx)
+        return self._head(params, x), aux
+
+    # ------------------------------------------------------------- serving
+
+    def init_cache(self, batch: int, max_len: int, dtype=jnp.bfloat16) -> dict:
+        return tf.init_stack_cache(self.cfg, batch, max_len, dtype)
+
+    def prefill(
+        self, params, batch, cache, *, global_window: Optional[int] = None
+    ) -> Tuple[jax.Array, dict]:
+        cfg = self.cfg
+        x = self._embed_inputs(params, batch, None)
+        b, s, _ = x.shape
+        ctx = self._rope_ctx(batch, b, s)
+        ctx.update(mode="causal", x0=x, global_window=global_window)
+        x, cache, _ = tf.apply_stack(params["stack"], x, cfg, ctx, caches=cache)
+        return self._head(params, x[:, -1:]), cache
+
+    def decode_step(
+        self, params, tokens, cache, pos, *,
+        batch_extras: Optional[dict] = None,
+        global_window: Optional[int] = None,
+    ) -> Tuple[jax.Array, dict]:
+        """tokens (B,1); pos scalar int32 (current length). Returns
+        (logits (B,1,V), new cache)."""
+        cfg = self.cfg
+        batch = {"tokens": tokens}
+        if batch_extras:
+            batch.update(batch_extras)
+        x = self._embed_inputs(params, batch, None)
+        b, s, _ = x.shape
+        if cfg.rope_type == "mrope" and batch_extras and "positions" in batch_extras:
+            ctx = self._rope_ctx(batch, b, s)
+        else:
+            ctx = self._rope_ctx({}, b, s, offset=pos)
+        ctx.update(mode="causal", x0=x, global_window=global_window)
+        x, cache, _ = tf.apply_stack(params["stack"], x, cfg, ctx, caches=cache)
+        return self._head(params, x), cache
+
+    # ------------------------------------------------- DFM-denoiser adapter
+
+    def dfm_apply(self, params, tokens, t, *, extras: Optional[dict] = None):
+        """(params, tokens (B,N), t (B,)) -> logits — the v_theta signature
+        core/losses.py and core/sampler.py expect."""
+        batch = {"tokens": tokens}
+        if extras:
+            batch.update(extras)
+        logits, _ = self.forward(params, batch, t)
+        if self.cfg.family == "vlm" and extras and "patches" in extras:
+            logits = logits[:, extras["patches"].shape[1]:]
+        return logits
+
+
+def build_model(cfg: ModelConfig):
+    if cfg.is_encoder_decoder:
+        from repro.models.encdec import EncDecModel
+        return EncDecModel(cfg)
+    return Model(cfg)

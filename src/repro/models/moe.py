@@ -1,0 +1,157 @@
+"""Mixture-of-Experts FFN with capacity-based sorted dispatch.
+
+Design (TPU-native, see DESIGN.md §5):
+  * top-k softmax router with load-balance auxiliary loss;
+  * tokens are *sorted by expert id* and gathered into a dense
+    ``(E, C, d)`` buffer (capacity C = ceil(T*k/E * capacity_factor)) —
+    gathers/scatters are memory ops, so compiled FLOPs stay ~= the useful
+    ``T*k*d*ff`` (unlike one-hot einsum dispatch which is O(T^2));
+  * the expert buffer is expert-parallel over the ``model`` mesh axis
+    (sharding constraints applied by the caller's rules);
+  * DeepSeek-style shared expert(s) and Arctic-style dense residual run
+    unconditionally in parallel.
+
+Overflowed tokens (pos >= C) are dropped (standard capacity semantics);
+their router weight mass is simply not added back — tests check the
+no-drop case reproduces a dense reference exactly.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.common import activation, dense_init, normal_init, param_dtype, mlp, init_mlp
+from repro.distributed.sharding import constrain
+
+
+def init_moe(key, cfg: ModelConfig) -> dict:
+    m = cfg.moe
+    pd = param_dtype(cfg)
+    d, ff, e = cfg.d_model, m.d_ff, m.num_experts
+    ks = jax.random.split(key, 6)
+    p = {
+        "router": normal_init(ks[0], (d, e), jnp.float32, 0.02),
+        "up": normal_init(ks[1], (e, d, ff), pd, 1.0 / math.sqrt(d)),
+        "gate": normal_init(ks[2], (e, d, ff), pd, 1.0 / math.sqrt(d)),
+        "down": normal_init(ks[3], (e, ff, d), pd, 0.02 / math.sqrt(2 * cfg.num_layers)),
+    }
+    if m.num_shared_experts:
+        p["shared"] = init_mlp(ks[4], cfg, d_ff=ff * m.num_shared_experts)
+    if m.dense_residual:
+        p["residual"] = init_mlp(ks[5], cfg, d_ff=cfg.d_ff)
+    return p
+
+
+def _capacity(tokens: int, cfg: ModelConfig) -> int:
+    m = cfg.moe
+    c = int(math.ceil(tokens * m.num_experts_per_tok / m.num_experts * m.capacity_factor))
+    return max(8, -(-c // 8) * 8)  # round up to multiple of 8 (sublane)
+
+
+def moe_ffn_dropless(
+    p: dict,
+    x: jax.Array,                  # (B, S, d)
+    cfg: ModelConfig,
+) -> Tuple[jax.Array, jax.Array]:
+    """Dropless per-token MoE via expert-weight gather — used on serving
+    paths where capacity dropping would break AR causality (each token's
+    output must depend on itself only). Memory-streams k experts' weights
+    per token; the capacity/grouped path (moe_ffn) is the training/batch
+    implementation and a §Perf alternative for large-batch decode."""
+    m = cfg.moe
+    b, s, d = x.shape
+    t = b * s
+    k = m.num_experts_per_tok
+    xt = x.reshape(t, d)
+
+    logits = xt.astype(jnp.float32) @ p["router"]
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_w, gate_i = jax.lax.top_k(probs, k)
+    gate_w = gate_w / jnp.maximum(gate_w.sum(-1, keepdims=True), 1e-9)
+
+    w_up = jnp.take(p["up"], gate_i, axis=0).astype(x.dtype)      # (T,k,d,ff)
+    w_gate = jnp.take(p["gate"], gate_i, axis=0).astype(x.dtype)
+    w_down = jnp.take(p["down"], gate_i, axis=0).astype(x.dtype)  # (T,k,ff,d)
+    up = jnp.einsum("td,tkdf->tkf", xt, w_up)
+    gate = jnp.einsum("td,tkdf->tkf", xt, w_gate)
+    h = activation(cfg.act, gate) * up
+    out = jnp.einsum("tkf,tkfd->tkd", h, w_down)
+    y = jnp.einsum("tkd,tk->td", out, gate_w.astype(x.dtype)).reshape(b, s, d)
+
+    if "shared" in p:
+        y = y + mlp(p["shared"], x, cfg)
+    if "residual" in p:
+        y = y + mlp(p["residual"], x, cfg)
+    return y, jnp.zeros((), jnp.float32)
+
+
+def moe_ffn(
+    p: dict,
+    x: jax.Array,                  # (B, S, d)
+    cfg: ModelConfig,
+) -> Tuple[jax.Array, jax.Array]:
+    """Returns (output (B,S,d), aux load-balance loss scalar)."""
+    m = cfg.moe
+    b, s, d = x.shape
+    t = b * s
+    k = m.num_experts_per_tok
+    e = m.num_experts
+    xt = x.reshape(t, d)
+
+    # ---- routing (fp32) --------------------------------------------------
+    logits = (xt.astype(jnp.float32) @ p["router"])          # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_w, gate_i = jax.lax.top_k(probs, k)                 # (T, k)
+    gate_w = gate_w / jnp.maximum(gate_w.sum(-1, keepdims=True), 1e-9)
+
+    # load-balance aux (Switch-style): E * sum_e f_e * p_e
+    me = jnp.mean(probs, axis=0)
+    ce = jnp.mean(
+        jnp.sum(jax.nn.one_hot(gate_i, e, dtype=jnp.float32), axis=1), axis=0
+    ) / k
+    aux = e * jnp.sum(me * ce)
+
+    # ---- sorted capacity dispatch ----------------------------------------
+    cap = _capacity(t, cfg)
+    flat_e = gate_i.reshape(-1)                               # (T*k,)
+    flat_tok = jnp.repeat(jnp.arange(t, dtype=jnp.int32), k)  # source token
+    flat_w = gate_w.reshape(-1)
+
+    order = jnp.argsort(flat_e)                               # stable
+    se, stok, sw = flat_e[order], flat_tok[order], flat_w[order]
+    counts = jnp.bincount(se, length=e)                       # (E,)
+    starts = jnp.cumsum(counts) - counts                      # exclusive
+    pos = jnp.arange(t * k, dtype=jnp.int32) - starts[se]     # pos within expert
+    keep = pos < cap
+
+    cap_axis = "batch" if m.capacity_sharding == "data" else None
+    buf = jnp.zeros((e, cap, d), x.dtype)
+    safe_pos = jnp.where(keep, pos, cap - 1)
+    buf = buf.at[se, safe_pos].add(
+        jnp.where(keep[:, None], xt[stok], 0).astype(x.dtype)
+    )
+    buf = constrain(buf, ("expert", cap_axis, None))
+
+    # ---- expert compute ---------------------------------------------------
+    up = jnp.einsum("ecd,edf->ecf", buf, p["up"].astype(x.dtype))
+    gate = jnp.einsum("ecd,edf->ecf", buf, p["gate"].astype(x.dtype))
+    h = activation(cfg.act, gate) * up
+    out_buf = jnp.einsum("ecf,efd->ecd", h, p["down"].astype(x.dtype))
+    out_buf = constrain(out_buf, ("expert", cap_axis, None))
+
+    # ---- combine back -------------------------------------------------------
+    gathered = out_buf[se, safe_pos]                          # (T*k, d)
+    contrib = jnp.where(keep[:, None], gathered * sw[:, None].astype(x.dtype), 0)
+    y = jax.ops.segment_sum(contrib, stok, num_segments=t).astype(x.dtype)
+    y = y.reshape(b, s, d)
+
+    if "shared" in p:
+        y = y + mlp(p["shared"], x, cfg)
+    if "residual" in p:
+        y = y + mlp(p["residual"], x, cfg)
+    return y, aux

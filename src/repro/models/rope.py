@@ -1,0 +1,56 @@
+"""Rotary position embeddings: standard RoPE, Gemma3 dual-theta, and
+Qwen2-VL M-RoPE (multimodal 3-section rotary, arXiv:2409.12191)."""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def rope_angles(positions: jax.Array, head_dim: int, theta: float) -> Tuple[jax.Array, jax.Array]:
+    """positions (..., S) -> (sin, cos) each (..., S, head_dim/2)."""
+    half = head_dim // 2
+    freq = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions.astype(jnp.float32)[..., None] * freq
+    return jnp.sin(ang), jnp.cos(ang)
+
+
+def apply_rope(x: jax.Array, sin: jax.Array, cos: jax.Array) -> jax.Array:
+    """x: (B, S, H, D); sin/cos: (B, S, D/2) or (S, D/2)."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    if sin.ndim == 2:
+        sin = sin[None]
+        cos = cos[None]
+    sin = sin[:, :, None, :].astype(x.dtype)
+    cos = cos[:, :, None, :].astype(x.dtype)
+    return jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+
+
+def mrope_angles(
+    positions: jax.Array,  # (3, B, S) — temporal / height / width position ids
+    head_dim: int,
+    theta: float,
+    sections: Tuple[int, int, int],
+) -> Tuple[jax.Array, jax.Array]:
+    """Qwen2-VL M-RoPE: the rotary half-dim is split into 3 sections, each
+    rotated by its own positional stream (t, h, w). For pure-text tokens the
+    three streams coincide and M-RoPE reduces to standard RoPE."""
+    half = head_dim // 2
+    assert sum(sections) == half, f"mrope sections {sections} != head_dim/2 {half}"
+    freq = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    # section id of each frequency slot
+    sec = jnp.concatenate([
+        jnp.full((s,), i, jnp.int32) for i, s in enumerate(sections)
+    ])
+    # pick the positional stream per slot: (B, S, half)
+    pos = jnp.take(positions, sec, axis=0)           # (half, B, S) -> gather on axis0
+    pos = jnp.moveaxis(pos, 0, -1).astype(jnp.float32)  # (B, S, half)
+    ang = pos * freq
+    return jnp.sin(ang), jnp.cos(ang)
+
+
+def make_positions(batch: int, seq: int, offset: jax.Array | int = 0) -> jax.Array:
+    return jnp.arange(seq, dtype=jnp.int32)[None, :] + jnp.asarray(offset, jnp.int32) + jnp.zeros((batch, 1), jnp.int32)

@@ -1,0 +1,198 @@
+"""Mamba2 (SSD) block — chunkwise-parallel training/prefill and O(1)-state
+decode (arXiv:2405.21060, as used by Zamba2, arXiv:2411.15242).
+
+TPU adaptation: the chunkwise algorithm maps the recurrence onto dense
+(MXU-friendly) matmuls — intra-chunk quadratic attention-like products and
+an inter-chunk state recurrence via `lax.scan` over chunks. All shapes are
+padded to multiples of the chunk length.
+
+Shapes: d_inner = expand * d_model; heads H = d_inner / P (P = head_dim);
+state N per head. Single B/C group (G=1).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.common import dense, dense_init, init_rmsnorm, rmsnorm, param_dtype
+
+
+def _dims(cfg: ModelConfig):
+    s = cfg.ssm
+    d_inner = s.expand * cfg.d_model
+    heads = d_inner // s.head_dim
+    return d_inner, heads, s.head_dim, s.state_dim, s.conv_width
+
+
+def init_mamba2(key, cfg: ModelConfig) -> dict:
+    pd = param_dtype(cfg)
+    d = cfg.d_model
+    d_inner, h, p_dim, n, cw = _dims(cfg)
+    conv_ch = d_inner + 2 * n
+    ks = jax.random.split(key, 5)
+    return {
+        # in_proj -> [z (d_inner), xBC (conv channels), dt (H)]
+        "in_proj": dense_init(ks[0], d, 2 * d_inner + 2 * n + h, pd),
+        "conv_w": (0.1 * jax.random.normal(ks[1], (cw, conv_ch))).astype(pd),
+        "conv_b": jnp.zeros((conv_ch,), pd),
+        "a_log": jnp.log(jnp.arange(1, h + 1, dtype=jnp.float32)),  # (H,)
+        "dt_bias": jnp.zeros((h,), jnp.float32),
+        "d_skip": jnp.ones((h,), jnp.float32),
+        "out_norm": init_rmsnorm(d_inner, pd),
+        "out_proj": dense_init(ks[2], d_inner, d, pd,
+                               stddev=0.02 / math.sqrt(2 * cfg.num_layers)),
+    }
+
+
+def _split_proj(cfg, proj):
+    d_inner, h, p_dim, n, _ = _dims(cfg)
+    z = proj[..., :d_inner]
+    xbc = proj[..., d_inner : 2 * d_inner + 2 * n]
+    dt = proj[..., 2 * d_inner + 2 * n :]
+    return z, xbc, dt
+
+
+def _conv1d(xbc, w, b, *, state: Optional[jax.Array] = None):
+    """Causal depthwise conv. xbc (B,T,C); state (B,cw-1,C) carries context.
+    Returns (y (B,T,C), new_state)."""
+    cw = w.shape[0]
+    if state is None:
+        state = jnp.zeros((xbc.shape[0], cw - 1, xbc.shape[-1]), xbc.dtype)
+    full = jnp.concatenate([state.astype(xbc.dtype), xbc], axis=1)
+    new_state = full[:, -(cw - 1):, :] if cw > 1 else state
+    y = sum(
+        full[:, i : i + xbc.shape[1], :] * w[i][None, None].astype(xbc.dtype)
+        for i in range(cw)
+    )
+    return jax.nn.silu(y + b.astype(xbc.dtype)), new_state
+
+
+def ssd_chunked(xh, a, bmat, cmat, chunk: int):
+    """Chunkwise SSD scan.
+
+    Args:
+      xh: (B,T,H,P) inputs already scaled by dt.
+      a:  (B,T,H)   per-step decay in (0,1]: exp(dt * A) with A<0.
+      bmat, cmat: (B,T,N) input/output projections (G=1 broadcast to heads).
+      chunk: chunk length (T must be a multiple; caller pads).
+    Returns: y (B,T,H,P), final_state (B,H,N,P).
+    """
+    b, t, h, p = xh.shape
+    n = bmat.shape[-1]
+    nc = t // chunk
+    xh = xh.reshape(b, nc, chunk, h, p)
+    a = a.reshape(b, nc, chunk, h)
+    bm = bmat.reshape(b, nc, chunk, n)
+    cm = cmat.reshape(b, nc, chunk, n)
+
+    la = jnp.cumsum(jnp.log(jnp.maximum(a, 1e-20)), axis=2)     # (B,nc,Q,H)
+    la_last = la[:, :, -1:, :]                                   # (B,nc,1,H)
+
+    # ---- intra-chunk (quadratic within chunk, MXU matmuls) -------------
+    # decay[q,k] = exp(la_q - la_k) for k<=q; mask BEFORE exp so the
+    # k>q half never produces inf (inf*0 would NaN the backward pass)
+    dd = la[:, :, :, None, :] - la[:, :, None, :, :]             # (B,nc,Q,Q,H)
+    mask = jnp.tril(jnp.ones((chunk, chunk), bool))
+    decay = jnp.exp(jnp.where(mask[None, None, :, :, None], dd, -1e30))
+    cb = jnp.einsum("bcqn,bckn->bcqk", cm, bm)                   # (B,nc,Q,Q)
+    w = cb[..., None] * decay                                     # (B,nc,Q,Q,H)
+    y_intra = jnp.einsum("bcqkh,bckhp->bcqhp", w.astype(xh.dtype), xh)
+
+    # ---- chunk states ----------------------------------------------------
+    # S_c = sum_k exp(la_last - la_k) B_k (x_k)^T  -> (B,nc,H,N,P)
+    dk = jnp.exp(la_last - la)                                    # (B,nc,Q,H)
+    s_c = jnp.einsum("bcqn,bcqh,bcqhp->bchnp", bm, dk.astype(xh.dtype), xh)
+
+    # ---- inter-chunk recurrence over chunks ------------------------------
+    a_chunk = jnp.exp(la_last[:, :, 0, :])                        # (B,nc,H)
+
+    def scan_body(carry, inp):
+        s_prev = carry                                            # (B,H,N,P)
+        a_c, s_new = inp
+        s_out = s_prev                                            # state entering chunk
+        s_next = a_c[..., None, None] * s_prev + s_new
+        return s_next, s_out
+
+    s0 = jnp.zeros((b, h, n, p), xh.dtype)
+    s_final, s_in = jax.lax.scan(
+        scan_body, s0,
+        (jnp.moveaxis(a_chunk, 1, 0).astype(xh.dtype), jnp.moveaxis(s_c, 1, 0)),
+    )
+    s_in = jnp.moveaxis(s_in, 0, 1)                               # (B,nc,H,N,P)
+
+    # ---- inter-chunk contribution ---------------------------------------
+    dq = jnp.exp(la)                                               # decay from chunk start
+    y_inter = jnp.einsum("bcqn,bcqh,bchnp->bcqhp", cm, dq.astype(xh.dtype), s_in)
+
+    y = (y_intra + y_inter).reshape(b, t, h, p)
+    return y, s_final
+
+
+def mamba2_forward(
+    p: dict,
+    x: jax.Array,                 # (B,T,D)
+    cfg: ModelConfig,
+    *,
+    cache: Optional[dict] = None,  # {"conv": (B,cw-1,C), "ssm": (B,H,N,P), "pos"}
+) -> Tuple[jax.Array, Optional[dict]]:
+    d_inner, h, p_dim, n, cw = _dims(cfg)
+    b, t, _ = x.shape
+    proj = dense(p["in_proj"], x)
+    z, xbc, dt_raw = _split_proj(cfg, proj)
+
+    conv_state = cache["conv"] if cache is not None else None
+    xbc, new_conv = _conv1d(xbc, p["conv_w"], p["conv_b"], state=conv_state)
+
+    xs = xbc[..., :d_inner].reshape(b, t, h, p_dim)
+    bmat = xbc[..., d_inner : d_inner + n]
+    cmat = xbc[..., d_inner + n :]
+
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])     # (B,T,H)
+    a_neg = -jnp.exp(p["a_log"])                                         # (H,)
+    a_step = jnp.exp(dt * a_neg)                                         # (B,T,H)
+    xh = xs * dt[..., None].astype(xs.dtype)
+
+    if cache is not None and t == 1:
+        # single-step decode: S <- a S + B (dt*x)^T ; y = C . S
+        s_prev = cache["ssm"]
+        s_next = (
+            a_step[:, 0, :, None, None].astype(xs.dtype) * s_prev
+            + jnp.einsum("bn,bhp->bhnp", bmat[:, 0], xh[:, 0])
+        )
+        y = jnp.einsum("bn,bhnp->bhp", cmat[:, 0], s_next)[:, None]      # (B,1,H,P)
+        new_cache = {"conv": new_conv, "ssm": s_next, "pos": cache["pos"] + 1}
+    else:
+        chunk = min(cfg.ssm.chunk, t)
+        pad = (-t) % chunk
+        if pad:
+            xh_p = jnp.pad(xh, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            a_p = jnp.pad(a_step, ((0, 0), (0, pad), (0, 0)), constant_values=1.0)
+            b_p = jnp.pad(bmat, ((0, 0), (0, pad), (0, 0)))
+            c_p = jnp.pad(cmat, ((0, 0), (0, pad), (0, 0)))
+        else:
+            xh_p, a_p, b_p, c_p = xh, a_step, bmat, cmat
+        y, s_final = ssd_chunked(xh_p, a_p, b_p, c_p, chunk)
+        y = y[:, :t]
+        if cache is not None:
+            new_cache = {"conv": new_conv, "ssm": s_final, "pos": cache["pos"] + t}
+        else:
+            new_cache = None
+
+    y = y + xs * p["d_skip"][None, None, :, None].astype(xs.dtype)
+    y = y.reshape(b, t, d_inner)
+    y = rmsnorm(p["out_norm"], y, cfg.norm_eps) * jax.nn.silu(z)
+    return dense(p["out_proj"], y), new_cache
+
+
+def init_mamba2_cache(cfg: ModelConfig, batch: int, dtype) -> dict:
+    d_inner, h, p_dim, n, cw = _dims(cfg)
+    return {
+        "conv": jnp.zeros((batch, cw - 1, d_inner + 2 * n), dtype),
+        "ssm": jnp.zeros((batch, h, n, p_dim), dtype),
+        "pos": jnp.zeros((), jnp.int32),
+    }

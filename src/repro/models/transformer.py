@@ -1,0 +1,335 @@
+"""Generic scanned block stack covering all assigned decoder architectures.
+
+A config's ``pattern`` (tuple of layer kinds, see configs/base.py) repeats
+``reps`` times — parameters for each *pattern position* are stacked along a
+leading `layers` dim and the whole stack runs under one ``lax.scan``
+(compile-time O(1) in depth — mandatory for 61–80-layer archs lowered for
+512 devices). Remainder layers (num_layers % len(pattern)) are unrolled.
+
+Caches mirror the same structure: one stacked cache pytree per pattern
+position plus per-remainder-layer caches.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn_lib
+from repro.models import ssm as ssm_lib
+from repro.models import xlstm as xlstm_lib
+from repro.models.common import (
+    apply_norm, compute_dtype, dense, dense_init, init_mlp, init_norm, mlp,
+    param_dtype,
+)
+from repro.models.moe import init_moe, moe_ffn, moe_ffn_dropless
+from repro.distributed.sharding import constrain
+
+ATTN_KINDS = {"attn", "local", "moe", "mla", "mla_moe", "moe_res", "zshared"}
+
+# Serving MoE dispatch: the dropless per-token weight-gather path is exact
+# (no capacity cross-talk -> strict AR causality) but streams k expert
+# weight matrices per token, so it is only economical for small token
+# counts (decode steps). Prefill and training use the capacity path.
+DROPLESS_MAX_TOKENS = 1024
+
+
+def _moe_dispatch(p, h, cfg, cache):
+    from repro.models.moe import moe_ffn, moe_ffn_dropless
+    tokens = h.shape[0] * h.shape[1]
+    if cache is not None and tokens <= DROPLESS_MAX_TOKENS:
+        return moe_ffn_dropless(p, h, cfg)
+    if cfg.moe.dispatch_impl == "shardmap":
+        from repro.models.moe_shardmap import moe_ffn_shardmap
+        return moe_ffn_shardmap(p, h, cfg)
+    return moe_ffn(p, h, cfg)
+
+
+
+# ---------------------------------------------------------------------------
+# per-kind block init
+# ---------------------------------------------------------------------------
+
+def init_block(key, cfg: ModelConfig, kind: str) -> dict:
+    ks = jax.random.split(key, 4)
+    p: Dict[str, Any] = {"ln1": init_norm(cfg)}
+    if kind in ("attn", "local"):
+        p["attn"] = attn_lib.init_gqa(ks[0], cfg)
+        p["ln2"] = init_norm(cfg)
+        p["mlp"] = init_mlp(ks[1], cfg)
+        if cfg.post_norms:
+            p["post_attn"] = init_norm(cfg)
+            p["post_ffn"] = init_norm(cfg)
+    elif kind in ("moe", "moe_res"):
+        p["attn"] = attn_lib.init_gqa(ks[0], cfg)
+        p["ln2"] = init_norm(cfg)
+        p["moe"] = init_moe(ks[1], cfg)
+    elif kind == "mla":
+        p["attn"] = attn_lib.init_mla(ks[0], cfg)
+        p["ln2"] = init_norm(cfg)
+        p["mlp"] = init_mlp(ks[1], cfg)
+    elif kind == "mla_moe":
+        p["attn"] = attn_lib.init_mla(ks[0], cfg)
+        p["ln2"] = init_norm(cfg)
+        p["moe"] = init_moe(ks[1], cfg)
+    elif kind == "mamba":
+        p["mamba"] = ssm_lib.init_mamba2(ks[0], cfg)
+    elif kind == "mlstm":
+        p["mlstm"] = xlstm_lib.init_mlstm(ks[0], cfg)
+    elif kind == "slstm":
+        p["slstm"] = xlstm_lib.init_slstm(ks[0], cfg)
+    elif kind == "zshared":
+        # per-layer params: only the fuse projection; attention+mlp weights
+        # are shared (see init_shared / apply with shared=).
+        p["fuse"] = dense_init(ks[0], 2 * cfg.d_model, cfg.d_model, param_dtype(cfg))
+    else:
+        raise ValueError(f"unknown layer kind {kind}")
+    return p
+
+
+def init_shared(key, cfg: ModelConfig) -> dict:
+    """Weights shared across all zshared invocations (Zamba2)."""
+    if "zshared" not in cfg.pattern:
+        return {}
+    ks = jax.random.split(key, 3)
+    return {
+        "ln1": init_norm(cfg),
+        "attn": attn_lib.init_gqa(ks[0], cfg),
+        "ln2": init_norm(cfg),
+        "mlp": init_mlp(ks[1], cfg),
+    }
+
+
+def init_block_cache(cfg: ModelConfig, kind: str, batch: int, max_len: int, dtype):
+    if kind in ("attn", "local", "moe", "moe_res", "zshared"):
+        return attn_lib.init_gqa_cache(cfg, batch, max_len, dtype)
+    if kind in ("mla", "mla_moe"):
+        return attn_lib.init_mla_cache(cfg, batch, max_len, dtype)
+    if kind == "mamba":
+        return ssm_lib.init_mamba2_cache(cfg, batch, dtype)
+    if kind == "mlstm":
+        return xlstm_lib.init_mlstm_cache(cfg, batch, dtype)
+    if kind == "slstm":
+        return xlstm_lib.init_slstm_cache(cfg, batch, dtype)
+    raise ValueError(kind)
+
+
+# ---------------------------------------------------------------------------
+# per-kind block apply
+# ---------------------------------------------------------------------------
+
+def apply_block(
+    p: dict,
+    x: jax.Array,
+    cfg: ModelConfig,
+    kind: str,
+    ctx: dict,
+    *,
+    cache: Optional[dict] = None,
+    shared: Optional[dict] = None,
+) -> Tuple[jax.Array, Optional[dict], jax.Array]:
+    """Returns (x_out, new_cache, aux_loss)."""
+    aux = jnp.zeros((), jnp.float32)
+    mode = ctx["mode"]
+    q_pos = ctx["q_pos"]
+
+    def attn_args(local: bool):
+        if local:
+            window = cfg.sliding_window
+            sin, cos = ctx["sin_local"], ctx["cos_local"]
+        else:
+            window = ctx.get("global_window")   # long-context variant override
+            sin, cos = ctx["sin"], ctx["cos"]
+        return sin, cos, window
+
+    if kind in ("attn", "local", "moe", "moe_res"):
+        local = kind == "local"
+        sin, cos, window = attn_args(local)
+        h = apply_norm(cfg, p["ln1"], x)
+        h, new_cache = attn_lib.gqa_attention(
+            p["attn"], h, cfg, sin=sin, cos=cos, mode=mode,
+            window=window, q_pos=q_pos, cache=cache,
+        )
+        if cfg.post_norms:
+            h = apply_norm(cfg, p["post_attn"], h)
+        x = x + h
+        h = apply_norm(cfg, p["ln2"], x)
+        if kind in ("moe", "moe_res"):
+            h, aux = _moe_dispatch(p["moe"], h, cfg, cache)
+        else:
+            h = mlp(p["mlp"], h, cfg)
+        if cfg.post_norms:
+            h = apply_norm(cfg, p["post_ffn"], h)
+        return x + h, new_cache, aux
+
+    if kind in ("mla", "mla_moe"):
+        sin, cos, window = attn_args(False)
+        h = apply_norm(cfg, p["ln1"], x)
+        h, new_cache = attn_lib.mla_attention(
+            p["attn"], h, cfg, sin=sin, cos=cos, mode=mode,
+            window=window, q_pos=q_pos, cache=cache,
+        )
+        x = x + h
+        h = apply_norm(cfg, p["ln2"], x)
+        if kind == "mla_moe":
+            h, aux = _moe_dispatch(p["moe"], h, cfg, cache)
+        else:
+            h = mlp(p["mlp"], h, cfg)
+        return x + h, new_cache, aux
+
+    if kind == "mamba":
+        h = apply_norm(cfg, p["ln1"], x)
+        h, new_cache = ssm_lib.mamba2_forward(p["mamba"], h, cfg, cache=cache)
+        return x + h, new_cache, aux
+
+    if kind == "mlstm":
+        h = apply_norm(cfg, p["ln1"], x)
+        h, new_cache = xlstm_lib.mlstm_forward(p["mlstm"], h, cfg, cache=cache)
+        return x + h, new_cache, aux
+
+    if kind == "slstm":
+        h = apply_norm(cfg, p["ln1"], x)
+        h, new_cache = xlstm_lib.slstm_forward(p["slstm"], h, cfg, cache=cache)
+        return x + h, new_cache, aux
+
+    if kind == "zshared":
+        # Zamba2: fuse current hidden with the original embedding, run the
+        # *shared* attention+MLP block, project back (per-layer fuse).
+        assert shared, "zshared needs shared params"
+        sin, cos, window = attn_args(False)
+        fused = jnp.concatenate([x, ctx["x0"]], axis=-1)
+        h = dense(p["fuse"], fused)
+        h = apply_norm(cfg, shared["ln1"], h)
+        h, new_cache = attn_lib.gqa_attention(
+            shared["attn"], h, cfg, sin=sin, cos=cos, mode=mode,
+            window=window, q_pos=q_pos, cache=cache,
+        )
+        x = x + h
+        h = apply_norm(cfg, shared["ln2"], x)
+        return x + mlp(shared["mlp"], h, cfg), new_cache, aux
+
+    raise ValueError(kind)
+
+
+# ---------------------------------------------------------------------------
+# stack init / apply
+# ---------------------------------------------------------------------------
+
+def init_stack(key, cfg: ModelConfig) -> dict:
+    reps, rem = cfg.scan_split()
+    keys = jax.random.split(
+        key, len(cfg.pattern) * max(reps, 1) + len(rem) + len(cfg.prefix) + 1
+    )
+    params: Dict[str, Any] = {"blocks": {}, "rem": {}, "pre": {}}
+    ki = 0
+    for j, kind in enumerate(cfg.prefix):
+        params["pre"][f"x{j}"] = init_block(keys[ki], cfg, kind)
+        ki += 1
+    for pos, kind in enumerate(cfg.pattern):
+        if reps == 0:
+            break
+        stack = []
+        for r in range(reps):
+            stack.append(init_block(keys[ki], cfg, kind))
+            ki += 1
+        params["blocks"][f"p{pos}"] = jax.tree.map(lambda *xs: jnp.stack(xs), *stack)
+    for j, kind in enumerate(rem):
+        params["rem"][f"r{j}"] = init_block(keys[ki], cfg, kind)
+        ki += 1
+    shared = init_shared(keys[ki], cfg)
+    if shared:
+        params["zshared"] = shared
+    return params
+
+
+def apply_stack(
+    params: dict,
+    x: jax.Array,
+    cfg: ModelConfig,
+    ctx: dict,
+    *,
+    caches: Optional[dict] = None,
+) -> Tuple[jax.Array, Optional[dict], jax.Array]:
+    """Run all layers. caches (if given) must come from init_stack_cache."""
+    reps, rem = cfg.scan_split()
+    shared = params.get("zshared")
+    aux_total = jnp.zeros((), jnp.float32)
+    new_caches: Optional[dict] = (
+        {"blocks": {}, "rem": {}, "pre": {}} if caches is not None else None
+    )
+
+    for j, kind in enumerate(cfg.prefix):
+        c_in = caches["pre"].get(f"x{j}") if caches is not None else None
+        x, c_out, a = apply_block(
+            params["pre"][f"x{j}"], x, cfg, kind, ctx, cache=c_in, shared=shared
+        )
+        if new_caches is not None and c_out is not None:
+            new_caches["pre"][f"x{j}"] = c_out
+        aux_total = aux_total + a
+
+    if reps > 0:
+        stacked = params["blocks"]
+
+        def group_body(carry, xs):
+            h, aux = carry
+            gparams, gcache = xs
+            out_cache = {}
+            for pos, kind in enumerate(cfg.pattern):
+                c_in = gcache.get(f"p{pos}") if gcache is not None else None
+                h, c_out, a = apply_block(
+                    gparams[f"p{pos}"], h, cfg, kind, ctx,
+                    cache=c_in, shared=shared,
+                )
+                # keep the activation layout pinned through the scan so
+                # GSPMD never round-trips to a gathered layout
+                h = constrain(h, ("batch", "seq", None))
+                if c_out is not None:
+                    out_cache[f"p{pos}"] = c_out
+                aux = aux + a
+            return (h, aux), out_cache
+
+        gcaches = caches["blocks"] if caches is not None else None
+        body = group_body
+        if ctx.get("remat"):
+            # activation checkpointing: recompute the group in backward,
+            # saving only the inter-group carries (MaxText-style policy)
+            body = jax.checkpoint(group_body, prevent_cse=False)
+        if gcaches is None:
+            (x, aux_total), ys = jax.lax.scan(
+                lambda c, s: body(c, (s, None)), (x, aux_total), stacked
+            )
+        else:
+            (x, aux_total), ys = jax.lax.scan(body, (x, aux_total), (stacked, gcaches))
+            new_caches["blocks"] = ys
+
+    for j, kind in enumerate(rem):
+        c_in = caches["rem"].get(f"r{j}") if caches is not None else None
+        x, c_out, a = apply_block(
+            params["rem"][f"r{j}"], x, cfg, kind, ctx, cache=c_in, shared=shared
+        )
+        if new_caches is not None and c_out is not None:
+            new_caches["rem"][f"r{j}"] = c_out
+        aux_total = aux_total + a
+
+    return x, new_caches, aux_total
+
+
+def init_stack_cache(cfg: ModelConfig, batch: int, max_len: int, dtype) -> dict:
+    reps, rem = cfg.scan_split()
+    caches: Dict[str, Any] = {"blocks": {}, "rem": {}, "pre": {}}
+    for j, kind in enumerate(cfg.prefix):
+        caches["pre"][f"x{j}"] = init_block_cache(cfg, kind, batch, max_len, dtype)
+    for pos, kind in enumerate(cfg.pattern):
+        if reps == 0:
+            break
+        one = init_block_cache(cfg, kind, batch, max_len, dtype)
+        caches["blocks"][f"p{pos}"] = jax.tree.map(
+            lambda a: jnp.broadcast_to(a, (reps,) + a.shape).copy(), one
+        )
+    for j, kind in enumerate(rem):
+        caches["rem"][f"r{j}"] = init_block_cache(cfg, kind, batch, max_len, dtype)
+    return caches

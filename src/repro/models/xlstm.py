@@ -1,0 +1,342 @@
+"""xLSTM blocks (arXiv:2405.04517): mLSTM (matrix memory, parallelisable)
+and sLSTM (scalar memory, strictly recurrent), arranged 7:1 in xLSTM-1.3b.
+
+mLSTM uses the *parallel* (attention-like, decay-masked) form for
+training/prefill — the form the xLSTM paper itself trains with — and the
+stabilised recurrent form (C, n, m state) for decode, giving O(1)-state
+long-context generation. sLSTM is a `lax.scan` over time in both modes
+(its memory mixing makes it inherently sequential).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.common import (
+    dense, dense_init, init_rmsnorm, rmsnorm, param_dtype, activation,
+)
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+def _mdims(cfg: ModelConfig):
+    pf = cfg.ssm.mlstm_proj_factor
+    d_inner = int(pf * cfg.d_model)
+    h = cfg.num_heads
+    dk = d_inner // h
+    return d_inner, h, dk
+
+
+def init_mlstm(key, cfg: ModelConfig) -> dict:
+    pd = param_dtype(cfg)
+    d = cfg.d_model
+    d_inner, h, dk = _mdims(cfg)
+    ks = jax.random.split(key, 8)
+
+    def blockdiag(key):
+        # xLSTM uses block-diagonal per-head q/k/v projections — (H, Dk, Dk)
+        return (jax.random.normal(key, (h, dk, dk)) / math.sqrt(dk)).astype(pd)
+
+    return {
+        "up": dense_init(ks[0], d, 2 * d_inner, pd),          # [x branch, z gate]
+        "conv_w": (0.1 * jax.random.normal(ks[1], (4, d_inner))).astype(pd),
+        "conv_b": jnp.zeros((d_inner,), pd),
+        "wq": blockdiag(ks[2]),
+        "wk": blockdiag(ks[3]),
+        "wv": blockdiag(ks[4]),
+        "w_if": dense_init(ks[5], d_inner, 2 * h, pd),        # input & forget gate
+        "out_norm": init_rmsnorm(d_inner, pd),
+        "down": dense_init(ks[6], d_inner, d, pd,
+                           stddev=0.02 / math.sqrt(2 * cfg.num_layers)),
+    }
+
+
+def _headproj(w, x, h, dk):
+    """Block-diagonal per-head projection: x (B,T,d_inner) -> (B,T,H,Dk)."""
+    b, t, _ = x.shape
+    xh = x.reshape(b, t, h, dk)
+    return jnp.einsum("bthd,hde->bthe", xh, w.astype(x.dtype))
+
+
+def _causal_conv(x, w, b, state=None):
+    cw = w.shape[0]
+    if state is None:
+        state = jnp.zeros((x.shape[0], cw - 1, x.shape[-1]), x.dtype)
+    full = jnp.concatenate([state.astype(x.dtype), x], axis=1)
+    new_state = full[:, -(cw - 1):, :]
+    y = sum(full[:, i : i + x.shape[1], :] * w[i][None, None].astype(x.dtype)
+            for i in range(cw))
+    return jax.nn.silu(y + b.astype(x.dtype)), new_state
+
+
+def mlstm_parallel(q, k, v, i_raw, f_raw):
+    """Stabilised parallel mLSTM (xLSTM eq. 19-27).
+
+    q,k,v: (B,T,H,Dk); i_raw,f_raw: (B,T,H) raw gate pre-activations.
+    Returns h (B,T,H,Dk).
+    """
+    bt, t = q.shape[0], q.shape[1]
+    lf = jax.nn.log_sigmoid(f_raw.astype(jnp.float32))            # (B,T,H)
+    lfc = jnp.cumsum(lf, axis=1)
+    # logD[t,k] = lfc_t - lfc_k + i_k   (k <= t)
+    logd = lfc[:, :, None, :] - lfc[:, None, :, :] + i_raw.astype(jnp.float32)[:, None, :, :]
+    mask = jnp.tril(jnp.ones((t, t), bool))
+    logd = jnp.where(mask[None, :, :, None], logd, -1e30)  # finite: NaN-safe grads
+    m = jnp.max(logd, axis=2, keepdims=True)                      # (B,T,1,H)
+    d = jnp.exp(logd - m)                                         # (B,T,T,H)
+    scale = 1.0 / math.sqrt(q.shape[-1])
+    qk = jnp.einsum("bthd,bshd->btsh", q, k).astype(jnp.float32) * scale
+    w = qk * d
+    num = jnp.einsum("btsh,bshd->bthd", w.astype(v.dtype), v)
+    denom = jnp.maximum(jnp.abs(jnp.sum(w, axis=2)), jnp.exp(-m[:, :, 0, :]))
+    return (num / denom[..., None].astype(v.dtype)).astype(v.dtype)
+
+
+def mlstm_chunked(q, k, v, i_raw, f_raw, chunk: int):
+    """Chunkwise-parallel stabilised mLSTM (§Perf iteration for the
+    xlstm pairs): O(S·chunk) score tensors instead of the O(S^2) parallel
+    form, with a (C, n, m) inter-chunk state recurrence — the mLSTM
+    analogue of chunked flash attention / Mamba2 SSD.
+
+    q,k,v: (B,T,H,D); gates (B,T,H). T must be a multiple of `chunk`
+    (caller pads). Returns h (B,T,H,D).
+    """
+    b, t, h, d = q.shape
+    nc = t // chunk
+    scale = 1.0 / math.sqrt(d)
+
+    qs = jnp.moveaxis(q.reshape(b, nc, chunk, h, d), 1, 0)
+    ks = jnp.moveaxis(k.reshape(b, nc, chunk, h, d), 1, 0)
+    vs = jnp.moveaxis(v.reshape(b, nc, chunk, h, d), 1, 0)
+    i_s = jnp.moveaxis(i_raw.astype(jnp.float32).reshape(b, nc, chunk, h), 1, 0)
+    f_s = jnp.moveaxis(f_raw.astype(jnp.float32).reshape(b, nc, chunk, h), 1, 0)
+
+    c0 = jnp.zeros((b, h, d, d), jnp.float32)
+    n0 = jnp.zeros((b, h, d), jnp.float32)
+    m0 = jnp.full((b, h), -1e30, jnp.float32)
+
+    mask = jnp.tril(jnp.ones((chunk, chunk), bool))
+
+    def body(carry, xs):
+        c_prev, n_prev, m_prev = carry
+        qj, kj, vj, ij, fj = xs
+        lf = jax.nn.log_sigmoid(fj)                       # (B,Q,H)
+        lfc = jnp.cumsum(lf, axis=1)
+        lf_tot = lfc[:, -1]                                # (B,H)
+
+        # intra-chunk decay matrix in log space
+        logd = lfc[:, :, None, :] - lfc[:, None, :, :] + ij[:, None, :, :]
+        logd = jnp.where(mask[None, :, :, None], logd, -1e30)
+        m_intra = jnp.max(logd, axis=2)                    # (B,Q,H)
+        m_inter = m_prev[:, None, :] + lfc                 # (B,Q,H)
+        m_t = jnp.maximum(m_intra, m_inter)
+
+        dmat = jnp.exp(logd - m_t[:, :, None, :])          # (B,Q,Q,H)
+        qk = jnp.einsum("bthd,bshd->btsh", qj, kj).astype(jnp.float32) * scale
+        w = qk * dmat
+        num = jnp.einsum("btsh,bshd->bthd", w, vs_f := vj.astype(jnp.float32))
+        den = jnp.sum(w, axis=2)                           # (B,Q,H)
+
+        # inter-chunk contribution from the carried state
+        qf = qj.astype(jnp.float32) * scale
+        scale_inter = jnp.exp(m_inter - m_t)               # (B,Q,H)
+        num_inter = jnp.einsum("bqhd,bhdv->bqhv", qf, c_prev) * scale_inter[..., None]
+        den_inter = jnp.einsum("bqhd,bhd->bqh", qf, n_prev) * scale_inter
+
+        den_all = jnp.maximum(jnp.abs(den + den_inter), jnp.exp(-m_t))
+        h_out = (num + num_inter) / den_all[..., None]
+
+        # ---- state update (stabilised) -----------------------------------
+        # contribution weights: exp(lf_tot - lfc_s + i_s)
+        lw = lf_tot[:, None, :] - lfc + ij                 # (B,Q,H)
+        m_new = jnp.maximum(m_prev + lf_tot, jnp.max(lw, axis=1))
+        wgt = jnp.exp(lw - m_new[:, None, :])              # (B,Q,H)
+        decay = jnp.exp(m_prev + lf_tot - m_new)           # (B,H)
+        kf = kj.astype(jnp.float32)
+        c_new = decay[..., None, None] * c_prev + jnp.einsum(
+            "bqh,bqhd,bqhv->bhdv", wgt, kf, vs_f)
+        n_new = decay[..., None] * n_prev + jnp.einsum("bqh,bqhd->bhd", wgt, kf)
+        return (c_new, n_new, m_new), h_out.astype(v.dtype)
+
+    _, hs = jax.lax.scan(body, (c0, n0, m0), (qs, ks, vs, i_s, f_s))
+    return jnp.moveaxis(hs, 0, 1).reshape(b, t, h, d)
+
+
+def mlstm_step(state, q, k, v, i_raw, f_raw):
+    """One recurrent step. state = (C (B,H,Dk,Dk_v), n (B,H,Dk), m (B,H));
+    q,k,v (B,H,Dk); gates (B,H). Returns (h (B,H,Dk), new_state)."""
+    c, n, m = state
+    lf = jax.nn.log_sigmoid(f_raw.astype(jnp.float32))
+    li = i_raw.astype(jnp.float32)
+    m_new = jnp.maximum(lf + m, li)
+    fg = jnp.exp(lf + m - m_new)                                  # (B,H)
+    ig = jnp.exp(li - m_new)
+    scale = 1.0 / math.sqrt(q.shape[-1])
+    kf = k.astype(jnp.float32)
+    c = fg[..., None, None] * c + ig[..., None, None] * (kf[..., :, None] * v.astype(jnp.float32)[..., None, :])
+    n = fg[..., None] * n + ig[..., None] * kf
+    qf = q.astype(jnp.float32) * scale
+    num = jnp.einsum("bhd,bhdv->bhv", qf, c)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhd,bhd->bh", qf, n)), jnp.exp(-m_new))
+    return (num / den[..., None]).astype(v.dtype), (c, n, m_new)
+
+
+def mlstm_forward(p, x, cfg: ModelConfig, *, cache: Optional[dict] = None):
+    d_inner, h, dk = _mdims(cfg)
+    b, t, _ = x.shape
+    use_chunked = cfg.attn_impl == "chunked" and t > cfg.attn_chunk
+    up = dense(p["up"], x)
+    xm, z = up[..., :d_inner], up[..., d_inner:]
+    conv_state = cache["conv"] if cache is not None else None
+    xc, new_conv = _causal_conv(xm, p["conv_w"], p["conv_b"], conv_state)
+    q = _headproj(p["wq"], xc, h, dk)
+    k = _headproj(p["wk"], xc, h, dk)
+    v = _headproj(p["wv"], xm, h, dk)
+    gates = dense(p["w_if"], xm).reshape(b, t, h, 2)
+    i_raw, f_raw = gates[..., 0], gates[..., 1]
+
+    new_cache = None
+    if cache is not None and t == 1:
+        hid, (c, n, m) = mlstm_step(
+            (cache["c"], cache["n"], cache["m"]),
+            q[:, 0], k[:, 0], v[:, 0], i_raw[:, 0], f_raw[:, 0],
+        )
+        y = hid[:, None]
+        new_cache = {"conv": new_conv, "c": c, "n": n, "m": m, "pos": cache["pos"] + 1}
+    else:
+        if use_chunked:
+            chunk = min(cfg.attn_chunk, t)
+            pad = (-t) % chunk
+            if pad:
+                qp = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+                kp = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+                vp = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+                ip = jnp.pad(i_raw, ((0, 0), (0, pad), (0, 0)),
+                             constant_values=-1e30)  # zero input weight
+                fp = jnp.pad(f_raw, ((0, 0), (0, pad), (0, 0)))
+                y = mlstm_chunked(qp, kp, vp, ip, fp, chunk)[:, :t]
+            else:
+                y = mlstm_chunked(q, k, v, i_raw, f_raw, chunk)
+        else:
+            y = mlstm_parallel(q, k, v, i_raw, f_raw)
+        if cache is not None:
+            # prefill: also build the recurrent state by scanning
+            def step(st, inp):
+                qq, kk, vv, ii, ff = inp
+                _, st = mlstm_step(st, qq, kk, vv, ii, ff)
+                return st, None
+            st0 = (cache["c"], cache["n"], cache["m"])
+            (c, n, m), _ = jax.lax.scan(
+                step, st0,
+                (jnp.moveaxis(q, 1, 0), jnp.moveaxis(k, 1, 0), jnp.moveaxis(v, 1, 0),
+                 jnp.moveaxis(i_raw, 1, 0), jnp.moveaxis(f_raw, 1, 0)),
+            )
+            new_cache = {"conv": new_conv, "c": c, "n": n, "m": m, "pos": cache["pos"] + t}
+
+    y = y.reshape(b, t, d_inner)
+    y = rmsnorm(p["out_norm"], y, cfg.norm_eps) * jax.nn.silu(z)
+    return dense(p["down"], y), new_cache
+
+
+def init_mlstm_cache(cfg: ModelConfig, batch: int, dtype) -> dict:
+    d_inner, h, dk = _mdims(cfg)
+    return {
+        "conv": jnp.zeros((batch, 3, d_inner), dtype),
+        "c": jnp.zeros((batch, h, dk, dk), jnp.float32),
+        "n": jnp.zeros((batch, h, dk), jnp.float32),
+        "m": jnp.full((batch, h), -1e30, jnp.float32),
+        "pos": jnp.zeros((), jnp.int32),
+    }
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+def _sdims(cfg: ModelConfig):
+    h = cfg.num_heads
+    dh = cfg.d_model // h
+    return h, dh
+
+
+def init_slstm(key, cfg: ModelConfig) -> dict:
+    pd = param_dtype(cfg)
+    d = cfg.d_model
+    h, dh = _sdims(cfg)
+    pf = cfg.ssm.slstm_proj_factor
+    d_ff = int(pf * d)
+    ks = jax.random.split(key, 8)
+    return {
+        "w_gates": dense_init(ks[0], d, 4 * d, pd),            # i,f,z,o per channel
+        "r_gates": normal_init_r(ks[1], h, dh, pd),            # recurrent, block-diag
+        "out_norm": init_rmsnorm(d, pd),
+        "up": dense_init(ks[2], d, 2 * d_ff, pd),              # gated FFN
+        "down": dense_init(ks[3], d_ff, d, pd,
+                           stddev=0.02 / math.sqrt(2 * cfg.num_layers)),
+    }
+
+
+def normal_init_r(key, h, dh, pd):
+    return (jax.random.normal(key, (4, h, dh, dh)) / math.sqrt(dh)).astype(pd)
+
+
+def slstm_scan(p, x, cfg: ModelConfig, state=None):
+    """x (B,T,D). state = (c, n, m, hid) each (B,H,Dh). Returns (y, state)."""
+    h, dh = _sdims(cfg)
+    b, t, d = x.shape
+    gates_x = dense(p["w_gates"], x).reshape(b, t, 4, h, dh)
+
+    if state is None:
+        zeros = jnp.zeros((b, h, dh), jnp.float32)
+        state = (zeros, zeros, jnp.full((b, h), -1e30, jnp.float32), zeros)
+
+    r = p["r_gates"].astype(jnp.float32)
+
+    def step(carry, gx):
+        c, n, m, hid = carry
+        # recurrent contribution (block-diagonal per head)
+        rec = jnp.einsum("ghde,bhe->bghd", r, hid)                # (B,4,H,Dh)
+        gi, gf, gz, go = [gx[:, j].astype(jnp.float32) + rec[:, j] for j in range(4)]
+        li = gi.mean(-1)                                           # scalar gates per head
+        lf = jax.nn.log_sigmoid(gf.mean(-1))
+        m_new = jnp.maximum(lf + m, li)
+        fg = jnp.exp(lf + m - m_new)[..., None]
+        ig = jnp.exp(li - m_new)[..., None]
+        c = fg * c + ig * jnp.tanh(gz)
+        n = fg * n + ig
+        hid_new = jax.nn.sigmoid(go) * c / jnp.maximum(n, 1e-6)
+        return (c, n, m_new, hid_new), hid_new
+
+    carry, ys = jax.lax.scan(step, state, jnp.moveaxis(gates_x, 1, 0))
+    y = jnp.moveaxis(ys, 0, 1).reshape(b, t, d).astype(x.dtype)
+    return y, carry
+
+
+def slstm_forward(p, x, cfg: ModelConfig, *, cache: Optional[dict] = None):
+    state = None
+    if cache is not None:
+        state = (cache["c"], cache["n"], cache["m"], cache["hid"])
+    y, (c, n, m, hid) = slstm_scan(p, x, cfg, state)
+    y = rmsnorm(p["out_norm"], y, cfg.norm_eps)
+    up = dense(p["up"], y)
+    d_ff = up.shape[-1] // 2
+    y = dense(p["down"], activation("gelu", up[..., :d_ff]) * up[..., d_ff:])
+    new_cache = None
+    if cache is not None:
+        new_cache = {"c": c, "n": n, "m": m, "hid": hid,
+                     "pos": cache["pos"] + x.shape[1]}
+    return y, new_cache
+
+
+def init_slstm_cache(cfg: ModelConfig, batch: int, dtype) -> dict:
+    h, dh = _sdims(cfg)
+    z = jnp.zeros((batch, h, dh), jnp.float32)
+    return {"c": z, "n": z, "m": jnp.full((batch, h), -1e30, jnp.float32),
+            "hid": z, "pos": jnp.zeros((), jnp.int32)}

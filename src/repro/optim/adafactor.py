@@ -1,0 +1,86 @@
+"""Adafactor (Shazeer & Stern 2018) — factored second moments, the
+memory-frugal optimizer option for the >=400B MoE training configs where
+full Adam state exceeds the 16 GB/chip HBM budget (see EXPERIMENTS.md).
+
+Matrices (ndim >= 2) store row/col second-moment factors; vectors fall
+back to full second moments. No first moment (beta1 = 0 variant).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdafactorState(NamedTuple):
+    step: jax.Array
+    vr: dict     # row factors (or full v for vectors)
+    vc: dict     # col factors (zeros-size-1 placeholder for vectors)
+
+
+@dataclasses.dataclass(frozen=True)
+class Adafactor:
+    learning_rate: Callable[[jax.Array], jax.Array] | float = 1e-3
+    decay: float = 0.8          # t^-decay running average
+    eps: float = 1e-30
+    clip_threshold: float = 1.0
+    weight_decay: float = 0.0
+
+    def init(self, params) -> AdafactorState:
+        def rows(p):
+            if p.ndim >= 2:
+                return jnp.zeros(p.shape[:-1], jnp.float32)
+            return jnp.zeros(p.shape, jnp.float32)
+
+        def cols(p):
+            if p.ndim >= 2:
+                return jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)
+            return jnp.zeros((1,), jnp.float32)
+
+        return AdafactorState(
+            step=jnp.zeros((), jnp.int32),
+            vr=jax.tree.map(rows, params),
+            vc=jax.tree.map(cols, params),
+        )
+
+    def _lr(self, step):
+        if callable(self.learning_rate):
+            return self.learning_rate(step)
+        return jnp.asarray(self.learning_rate, jnp.float32)
+
+    def update(self, grads, state: AdafactorState, params):
+        step = state.step + 1
+        beta = 1.0 - step.astype(jnp.float32) ** (-self.decay)
+        lr = self._lr(step)
+
+        def upd(g, vr, vc, p):
+            gf = g.astype(jnp.float32)
+            g2 = jnp.square(gf) + self.eps
+            if p.ndim >= 2:
+                vr_new = beta * vr + (1 - beta) * jnp.mean(g2, axis=-1)
+                vc_new = beta * vc + (1 - beta) * jnp.mean(g2, axis=-2)
+                rfac = vr_new / jnp.maximum(
+                    jnp.mean(vr_new, axis=-1, keepdims=True), self.eps)
+                u = gf / jnp.sqrt(rfac[..., None] * vc_new[..., None, :] + self.eps)
+            else:
+                vr_new = beta * vr + (1 - beta) * g2
+                vc_new = vc
+                u = gf / jnp.sqrt(vr_new + self.eps)
+            # update clipping (RMS <= clip_threshold)
+            rms = jnp.sqrt(jnp.mean(jnp.square(u)) + self.eps)
+            u = u / jnp.maximum(1.0, rms / self.clip_threshold)
+            if self.weight_decay:
+                u = u + self.weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * u).astype(p.dtype), vr_new, vc_new
+
+        out = jax.tree.map(upd, grads, state.vr, state.vc, params)
+        flat, treedef = jax.tree_util.tree_flatten(
+            out, is_leaf=lambda x: isinstance(x, tuple) and len(x) == 3
+        )
+        p_new = jax.tree_util.tree_unflatten(treedef, [f[0] for f in flat])
+        vr = jax.tree_util.tree_unflatten(treedef, [f[1] for f in flat])
+        vc = jax.tree_util.tree_unflatten(treedef, [f[2] for f in flat])
+        return p_new, AdafactorState(step=step, vr=vr, vc=vc)

@@ -1,0 +1,96 @@
+"""AdamW with optional AMSGrad (the paper trains with AMSGrad, Reddi et al.
+2018) and configurable moment dtype (bf16 moments for >=100B configs).
+
+optax-free implementation: state is a pytree mirroring params.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array
+    mu: dict
+    nu: dict
+    nu_max: Optional[dict]    # AMSGrad running max (None if disabled)
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamW:
+    learning_rate: Callable[[jax.Array], jax.Array] | float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.999
+    eps: float = 1e-8
+    weight_decay: float = 0.0
+    amsgrad: bool = False
+    moments_dtype: Optional[str] = None   # None -> same as param dtype
+
+    def _mdt(self, leaf):
+        if self.moments_dtype is None:
+            return leaf.dtype
+        return {"float32": jnp.float32, "bfloat16": jnp.bfloat16}[self.moments_dtype]
+
+    def init(self, params) -> AdamWState:
+        zeros = lambda p: jnp.zeros(p.shape, self._mdt(p))
+        mu = jax.tree.map(zeros, params)
+        nu = jax.tree.map(zeros, params)
+        nu_max = jax.tree.map(zeros, params) if self.amsgrad else None
+        return AdamWState(step=jnp.zeros((), jnp.int32), mu=mu, nu=nu, nu_max=nu_max)
+
+    def _lr(self, step):
+        if callable(self.learning_rate):
+            return self.learning_rate(step)
+        return jnp.asarray(self.learning_rate, jnp.float32)
+
+    def update(self, grads, state: AdamWState, params):
+        step = state.step + 1
+        b1, b2 = self.b1, self.b2
+        bc1 = 1.0 - b1 ** step.astype(jnp.float32)
+        bc2 = 1.0 - b2 ** step.astype(jnp.float32)
+        lr = self._lr(step)
+
+        def upd(g, m, v, vmax, p):
+            gf = g.astype(jnp.float32)
+            m_new = b1 * m.astype(jnp.float32) + (1 - b1) * gf
+            v_new = b2 * v.astype(jnp.float32) + (1 - b2) * jnp.square(gf)
+            if self.amsgrad:
+                vmax_new = jnp.maximum(vmax.astype(jnp.float32), v_new)
+                denom = jnp.sqrt(vmax_new / bc2) + self.eps
+            else:
+                vmax_new = None
+                denom = jnp.sqrt(v_new / bc2) + self.eps
+            upd = (m_new / bc1) / denom
+            if self.weight_decay:
+                upd = upd + self.weight_decay * p.astype(jnp.float32)
+            p_new = (p.astype(jnp.float32) - lr * upd).astype(p.dtype)
+            return p_new, m_new.astype(m.dtype), v_new.astype(v.dtype), (
+                vmax_new.astype(vmax.dtype) if vmax_new is not None else None
+            )
+
+        if self.amsgrad:
+            out = jax.tree.map(upd, grads, state.mu, state.nu, state.nu_max, params)
+            flat, treedef = jax.tree_util.tree_flatten(
+                out, is_leaf=lambda x: isinstance(x, tuple) and len(x) == 4
+            )
+            p_new = jax.tree_util.tree_unflatten(treedef, [f[0] for f in flat])
+            mu = jax.tree_util.tree_unflatten(treedef, [f[1] for f in flat])
+            nu = jax.tree_util.tree_unflatten(treedef, [f[2] for f in flat])
+            nu_max = jax.tree_util.tree_unflatten(treedef, [f[3] for f in flat])
+        else:
+            out = jax.tree.map(
+                lambda g, m, v, p: upd(g, m, v, None, p),
+                grads, state.mu, state.nu, params,
+            )
+            flat, treedef = jax.tree_util.tree_flatten(
+                out, is_leaf=lambda x: isinstance(x, tuple) and len(x) == 4
+            )
+            p_new = jax.tree_util.tree_unflatten(treedef, [f[0] for f in flat])
+            mu = jax.tree_util.tree_unflatten(treedef, [f[1] for f in flat])
+            nu = jax.tree_util.tree_unflatten(treedef, [f[2] for f in flat])
+            nu_max = None
+        return p_new, AdamWState(step=step, mu=mu, nu=nu, nu_max=nu_max)

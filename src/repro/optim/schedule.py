@@ -1,0 +1,32 @@
+"""Learning-rate schedules and gradient clipping."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def warmup_cosine(base_lr: float, warmup_steps: int, total_steps: int,
+                  final_frac: float = 0.1):
+    def sched(step):
+        s = step.astype(jnp.float32)
+        warm = s / jnp.maximum(warmup_steps, 1)
+        prog = jnp.clip((s - warmup_steps) / jnp.maximum(total_steps - warmup_steps, 1), 0, 1)
+        cos = final_frac + (1 - final_frac) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+        return base_lr * jnp.where(s < warmup_steps, warm, cos)
+    return sched
+
+
+def constant(base_lr: float):
+    return lambda step: jnp.asarray(base_lr, jnp.float32)
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32))) for l in leaves))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype), grads), norm

@@ -1,0 +1,8 @@
+from repro.serving.engine import (
+    WarmStartServer, ar_generate, make_prefill_fn, make_refine_step_fn,
+    make_serve_step,
+)
+__all__ = [
+    "WarmStartServer", "ar_generate", "make_prefill_fn", "make_refine_step_fn",
+    "make_serve_step",
+]

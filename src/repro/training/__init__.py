@@ -1,0 +1,4 @@
+from repro.training.state import TrainState
+from repro.training.train_step import make_loss_fn, make_train_step
+from repro.training.trainer import Trainer
+__all__ = ["TrainState", "make_loss_fn", "make_train_step", "Trainer"]

@@ -1,0 +1,19 @@
+"""Train state: params + optimizer state + step counter (pytree)."""
+
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt_state: Any
+    step: jax.Array
+
+    @classmethod
+    def create(cls, params, optimizer):
+        return cls(params=params, opt_state=optimizer.init(params),
+                   step=jnp.zeros((), jnp.int32))

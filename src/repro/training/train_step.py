@@ -1,0 +1,91 @@
+"""The WS-DFM training step (paper Fig. 2 right) over any zoo backbone.
+
+batch dict:
+  x_src:  (B, N) int32 — draft samples x_{t0} (or noise for cold start)
+  x_tgt:  (B, N) int32 — refined/data samples x_1
+  + modality extras (frames / patches / positions) passed to the backbone.
+
+The same step with ``path.t0 = 0`` is the cold-start DFM baseline (paper
+Fig. 2 left) — both the paper's method and its baseline are one code path.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, RunConfig
+from repro.core.losses import dfm_cross_entropy
+from repro.core.paths import WarmStartPath
+from repro.distributed.sharding import constrain
+from repro.optim.schedule import clip_by_global_norm
+from repro.training.state import TrainState
+
+EXTRA_KEYS = ("frames", "patches", "positions")
+
+
+def make_loss_fn(model, cfg: ModelConfig, path: WarmStartPath, *,
+                 z_loss: float = 1e-4, mtp_weight: float = 0.1,
+                 remat: bool = False):
+    """Returns loss_fn(params, batch, rng) -> (loss, metrics)."""
+
+    def loss_fn(params, batch, rng):
+        x_src = batch["x_src"]
+        x_tgt = batch["x_tgt"]
+        rng_t, rng_xt = jax.random.split(rng)
+        t = path.sample_t(rng_t, (x_src.shape[0],))
+        x_t = path.interpolate(rng_xt, x_src, x_tgt, t)
+        x_t = constrain(x_t, ("batch", None))
+
+        fwd_batch: Dict[str, Any] = {"tokens": x_t}
+        for k in EXTRA_KEYS:
+            if k in batch:
+                fwd_batch[k] = batch[k]
+        logits, aux = model.forward(params, fwd_batch, t, remat=remat)
+
+        # vlm: logits cover [vision prefix + text]; loss only on text part
+        if cfg.family == "vlm" and "patches" in fwd_batch:
+            logits = logits[:, fwd_batch["patches"].shape[1]:]
+
+        loss = dfm_cross_entropy(logits, x_tgt, z_loss=z_loss)
+        metrics = {"ce": loss, "t_mean": jnp.mean(t)}
+
+        if cfg.moe.num_experts:
+            loss = loss + cfg.moe.router_aux_weight * aux
+            metrics["moe_aux"] = aux
+
+        if cfg.mtp_depth:
+            # DeepSeek MTP adapted as an auxiliary shifted-target CE on the
+            # same trunk logits (depth-1; see DESIGN.md §4).
+            mtp = dfm_cross_entropy(logits[:, :-1], x_tgt[:, 1:])
+            loss = loss + mtp_weight * mtp
+            metrics["mtp"] = mtp
+
+        metrics["loss"] = loss
+        return loss, metrics
+
+    return loss_fn
+
+
+def make_train_step(model, cfg: ModelConfig, run: RunConfig, optimizer,
+                    path: Optional[WarmStartPath] = None):
+    """Builds train_step(state, batch, rng) -> (state, metrics) — the unit
+    jit/pjit lowers for training shapes."""
+    path = path or WarmStartPath(t0=run.t0)
+    loss_fn = make_loss_fn(model, cfg, path, remat=(run.remat != "none"))
+
+    def train_step(state: TrainState, batch, rng):
+        (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+            state.params, batch, rng
+        )
+        grads, gnorm = clip_by_global_norm(grads, run.grad_clip)
+        params, opt_state = optimizer.update(grads, state.opt_state, state.params)
+        metrics["grad_norm"] = gnorm
+        new_state = TrainState(params=params, opt_state=opt_state, step=state.step + 1)
+        return new_state, metrics
+
+    return train_step

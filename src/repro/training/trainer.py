@@ -1,0 +1,67 @@
+"""Host-side training loop: data iterator -> jitted train_step -> metrics,
+periodic checkpointing. Used by examples/ and launch/train.py."""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Iterator, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint.io import save_checkpoint
+from repro.configs.base import ModelConfig, RunConfig
+from repro.core.paths import WarmStartPath
+from repro.optim import build_optimizer
+from repro.training.state import TrainState
+from repro.training.train_step import make_train_step
+
+
+@dataclasses.dataclass
+class Trainer:
+    model: object
+    cfg: ModelConfig
+    run: RunConfig
+    path: Optional[WarmStartPath] = None
+
+    def __post_init__(self):
+        self.optimizer = build_optimizer(self.run)
+        self.path = self.path or WarmStartPath(t0=self.run.t0)
+        self._step_fn = jax.jit(
+            make_train_step(self.model, self.cfg, self.run, self.optimizer, self.path)
+        )
+
+    def init_state(self, rng) -> TrainState:
+        params = self.model.init(rng)
+        return TrainState.create(params, self.optimizer)
+
+    def fit(
+        self,
+        state: TrainState,
+        batches: Iterator,
+        *,
+        steps: Optional[int] = None,
+        log_fn: Callable[[int, dict], None] = None,
+        checkpoint_every: int = 0,
+    ) -> TrainState:
+        steps = steps or self.run.total_steps
+        rng = jax.random.key(self.run.seed + 1)
+        history = []
+        t_start = time.time()
+        for i in range(steps):
+            x_src, x_tgt = next(batches)
+            batch = {"x_src": jnp.asarray(x_src), "x_tgt": jnp.asarray(x_tgt)}
+            rng, sub = jax.random.split(rng)
+            state, metrics = self._step_fn(state, batch, sub)
+            if (i + 1) % self.run.log_every == 0 or i == 0:
+                m = {k: float(v) for k, v in metrics.items()}
+                m["steps_per_s"] = (i + 1) / (time.time() - t_start)
+                history.append((i + 1, m))
+                if log_fn:
+                    log_fn(i + 1, m)
+            if checkpoint_every and (i + 1) % checkpoint_every == 0:
+                save_checkpoint(self.run.checkpoint_dir, state, step=int(state.step))
+        self.history = history
+        return state

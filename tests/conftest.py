@@ -1,0 +1,8 @@
+import os
+import sys
+
+# tests run single-device CPU; the dry-run (and only the dry-run) forces
+# 512 host devices in its own process.
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))

@@ -1,0 +1,149 @@
+"""Per-architecture smoke tests: every assigned arch instantiates its
+REDUCED config and runs (a) a DFM denoiser forward, (b) one WS-DFM train
+step, (c) AR prefill + decode — asserting shapes and no NaNs.
+
+Also checks AR decode consistency: prefill+decode logits must match the
+full-sequence forward at the same position.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ASSIGNED_ARCHS, get_smoke_config
+from repro.configs.base import RunConfig
+from repro.core.paths import WarmStartPath
+from repro.models import build_model
+from repro.optim import build_optimizer
+from repro.training.state import TrainState
+from repro.training.train_step import make_train_step
+
+ALL = list(ASSIGNED_ARCHS) + ["dfm-dit"]
+B, S = 2, 24
+
+
+def _batch(cfg, rng=1):
+    batch = {"tokens": jax.random.randint(jax.random.key(rng), (B, S), 0,
+                                          cfg.vocab_size)}
+    if cfg.family == "vlm":
+        p = cfg.num_vision_tokens
+        batch["patches"] = 0.1 * jax.random.normal(jax.random.key(2), (B, p, 1280))
+        batch["positions"] = jnp.broadcast_to(
+            jnp.arange(S + p, dtype=jnp.int32)[None, None], (3, B, S + p))
+    if cfg.family == "audio":
+        batch["frames"] = 0.1 * jax.random.normal(
+            jax.random.key(3), (B, cfg.num_audio_frames, cfg.d_model))
+    return batch
+
+
+@pytest.fixture(scope="module")
+def models():
+    out = {}
+    for arch in ALL:
+        cfg = get_smoke_config(arch)
+        m = build_model(cfg)
+        out[arch] = (cfg, m, m.init(jax.random.key(0)))
+    return out
+
+
+@pytest.mark.parametrize("arch", ALL)
+def test_dfm_forward_shapes_no_nan(models, arch):
+    cfg, m, params = models[arch]
+    batch = _batch(cfg)
+    t = jnp.full((B,), 0.7)
+    logits, aux = m.forward(params, batch, t)
+    exp_s = S + (cfg.num_vision_tokens if cfg.family == "vlm" else 0)
+    assert logits.shape == (B, exp_s, cfg.vocab_size)
+    assert not bool(jnp.isnan(logits.astype(jnp.float32)).any())
+    assert not bool(jnp.isnan(aux).any())
+
+
+@pytest.mark.parametrize("arch", ALL)
+def test_train_step_no_nan(models, arch):
+    cfg, m, params = models[arch]
+    run = RunConfig(arch=arch, total_steps=10, warmup_steps=2, learning_rate=1e-3)
+    opt = build_optimizer(run)
+    step = jax.jit(make_train_step(m, cfg, run, opt, WarmStartPath(t0=0.5)))
+    state = TrainState.create(params, opt)
+    batch = {
+        "x_src": jax.random.randint(jax.random.key(4), (B, S), 0, cfg.vocab_size),
+        "x_tgt": jax.random.randint(jax.random.key(5), (B, S), 0, cfg.vocab_size),
+    }
+    extras = _batch(cfg)
+    for k in ("frames", "patches", "positions"):
+        if k in extras:
+            batch[k] = extras[k]
+    state, metrics = step(state, batch, jax.random.key(6))
+    assert np.isfinite(float(metrics["loss"]))
+    assert np.isfinite(float(metrics["grad_norm"]))
+    assert int(state.step) == 1
+    # params actually changed
+    d0 = jax.tree.leaves(params)[0]
+    d1 = jax.tree.leaves(state.params)[0]
+    assert not np.allclose(np.asarray(d0, np.float32), np.asarray(d1, np.float32))
+
+
+@pytest.mark.parametrize("arch", ALL)
+def test_ar_decode_consistency(models, arch):
+    """prefill(x[:k]) + decode(x[k]) logits == forward(x[:k+1]) last logits."""
+    cfg, m, params = models[arch]
+    batch = _batch(cfg)
+    toks = batch["tokens"]
+    k = S - 1
+
+    if cfg.family == "vlm":
+        pytest.skip("vlm decode uses text-only rope fallback (semantics "
+                    "equal for text tokens; covered by shape test below)")
+
+    is_moe = cfg.moe.num_experts > 0
+    if not is_moe:
+        # dense paths: serving must match the teacher-forced forward exactly
+        full_batch = dict(batch, tokens=toks)
+        logits_full, _ = m.forward(params, full_batch, None, mode="causal")
+        cache = m.init_cache(B, S + 4, jnp.float32)
+        pre_batch = dict(batch, tokens=toks[:, :k])
+        lg_pre, cache = m.prefill(params, pre_batch, cache)
+        np.testing.assert_allclose(
+            np.asarray(lg_pre[:, -1], np.float32),
+            np.asarray(logits_full[:, k - 1], np.float32), atol=2e-2, rtol=2e-2)
+        lg_dec, cache = m.decode_step(params, toks[:, k:k + 1], cache,
+                                      jnp.asarray(k, jnp.int32))
+        np.testing.assert_allclose(
+            np.asarray(lg_dec[:, 0], np.float32),
+            np.asarray(logits_full[:, k], np.float32), atol=2e-2, rtol=2e-2)
+    else:
+        # MoE: training/prefill use capacity dispatch (batch-dependent by
+        # design); decode uses the dropless path. Below the dropless token
+        # threshold both serving stages are dropless, so serving causality
+        # is exact: prefill(k)+decode == prefill(k+1).
+        cache_a = m.init_cache(B, S + 4, jnp.float32)
+        lg_pre, cache_a = m.prefill(params, dict(batch, tokens=toks[:, :k]), cache_a)
+        lg_dec, _ = m.decode_step(params, toks[:, k:k + 1], cache_a,
+                                  jnp.asarray(k, jnp.int32))
+        cache_b = m.init_cache(B, S + 4, jnp.float32)
+        lg_ref, _ = m.prefill(params, dict(batch, tokens=toks[:, :k + 1]), cache_b)
+        np.testing.assert_allclose(
+            np.asarray(lg_dec[:, 0], np.float32),
+            np.asarray(lg_ref[:, -1], np.float32), atol=2e-2, rtol=2e-2)
+
+
+def test_vlm_decode_shapes(models):
+    cfg, m, params = models["qwen2-vl-72b"]
+    cache = m.init_cache(B, S + 4, jnp.float32)
+    toks = jax.random.randint(jax.random.key(0), (B, 4), 0, cfg.vocab_size)
+    lg, cache = m.prefill(params, {"tokens": toks}, cache)
+    assert lg.shape == (B, 1, cfg.vocab_size)
+    lg, cache = m.decode_step(params, toks[:, :1], cache, jnp.asarray(4, jnp.int32))
+    assert lg.shape == (B, 1, cfg.vocab_size)
+    assert not bool(jnp.isnan(lg.astype(jnp.float32)).any())
+
+
+@pytest.mark.parametrize("arch", ["gemma3-1b", "deepseek-v3-671b", "zamba2-2.7b",
+                                  "xlstm-1.3b", "arctic-480b"])
+def test_reduced_config_limits(arch):
+    """The smoke configs respect the reduction contract."""
+    cfg = get_smoke_config(arch)
+    assert cfg.d_model <= 512
+    assert cfg.moe.num_experts <= 4
+    assert cfg.num_layers <= max(2, len(cfg.pattern) + len(cfg.prefix))

@@ -1,0 +1,70 @@
+"""Property tests for the warm-start probability path (core/paths.py)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.paths import WarmStartPath, cold_start_path, mask_noise, uniform_noise
+
+
+@given(t0=st.floats(0.0, 0.95), t=st.floats(0.0, 1.0))
+@settings(max_examples=50, deadline=None)
+def test_kappa_bounds_and_monotonicity(t0, t):
+    p = WarmStartPath(t0=t0)
+    k = float(p.kappa(jnp.asarray(t)))
+    assert 0.0 <= k <= 1.0
+    assert float(p.kappa(jnp.asarray(1.0))) == pytest.approx(1.0)
+    assert float(p.kappa(jnp.asarray(t0))) == pytest.approx(0.0, abs=1e-6)
+    # monotone
+    k2 = float(p.kappa(jnp.asarray(min(t + 0.05, 1.0))))
+    assert k2 >= k - 1e-6
+
+
+@given(t0=st.floats(0.0, 0.9))
+@settings(max_examples=25, deadline=None)
+def test_num_steps_guarantee(t0):
+    p = WarmStartPath(t0=t0)
+    n_cold = 100
+    h = 1.0 / n_cold
+    assert p.num_steps(h) == max(1, int(np.ceil(n_cold * (1 - t0) - 1e-9)))
+
+
+def test_interpolate_marginal_probability():
+    """P(x_t = x_tgt) should equal kappa(t) token-wise (the pinned marginal)."""
+    p = WarmStartPath(t0=0.5)
+    rng = jax.random.key(0)
+    n = 200_000
+    x_src = jnp.zeros((n, 1), jnp.int32)
+    x_tgt = jnp.ones((n, 1), jnp.int32)
+    for t in (0.5, 0.75, 0.9, 1.0):
+        x_t = p.interpolate(jax.random.fold_in(rng, int(t * 100)),
+                            x_src, x_tgt, jnp.full((n,), t))
+        frac = float(jnp.mean((x_t == 1).astype(jnp.float32)))
+        assert frac == pytest.approx(float(p.kappa(jnp.asarray(t))), abs=0.01)
+
+
+def test_sample_t_range():
+    p = WarmStartPath(t0=0.8)
+    t = p.sample_t(jax.random.key(1), (10_000,))
+    assert float(t.min()) >= 0.8
+    assert float(t.max()) < 1.0
+
+
+def test_cold_start_is_t0_zero():
+    assert cold_start_path().t0 == 0.0
+
+
+def test_noise_sources():
+    x = uniform_noise(jax.random.key(0), (100, 8), 27)
+    assert x.shape == (100, 8) and int(x.min()) >= 0 and int(x.max()) < 27
+    m = mask_noise((4, 8), 27)
+    assert bool((m == 27).all())
+
+
+def test_invalid_t0_rejected():
+    with pytest.raises(ValueError):
+        WarmStartPath(t0=1.0)
+    with pytest.raises(ValueError):
+        WarmStartPath(t0=-0.1)

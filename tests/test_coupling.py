@@ -1,0 +1,62 @@
+"""Coupling distribution tests (core/coupling.py)."""
+
+import numpy as np
+
+from repro.core.coupling import (
+    IndependentCoupling, KNNRefinementCoupling, OracleRefinementCoupling,
+    pair_iterator,
+)
+
+
+def test_independent_coupling():
+    rng = np.random.default_rng(0)
+    data = rng.integers(0, 11, size=(100, 6), dtype=np.int32)
+    src, tgt = IndependentCoupling(vocab_size=11, seq_len=6).build(data, None, rng)
+    assert src.shape == tgt.shape == (100, 6)
+    np.testing.assert_array_equal(tgt, data)
+    assert src.max() < 11
+
+
+def test_knn_coupling_pairs_and_injection():
+    rng = np.random.default_rng(1)
+    data = rng.integers(0, 50, size=(500, 4), dtype=np.int32)
+    drafts = data[:20] + rng.integers(-2, 3, size=(20, 4))
+    c = KNNRefinementCoupling(k=3, k_inject=2, max_candidates=500)
+    src, tgt = c.build(data, drafts.astype(np.int32), rng)
+    assert src.shape[0] == 20 * (3 + 2)
+    # each draft appears k + k' times as source
+    uniq, counts = np.unique(src, axis=0, return_counts=True)
+    assert counts.max() >= 5 or len(uniq) <= 20 * 5
+    # kNN targets are close to their draft (first k pairs per draft)
+    d0 = drafts[0].astype(np.int64)
+    nn_t = tgt[:3].astype(np.int64)
+    rand_dist = np.linalg.norm(data[rng.integers(0, 500, 50)].astype(np.int64) - d0, axis=1).mean()
+    nn_dist = np.linalg.norm(nn_t - d0, axis=1).mean()
+    assert nn_dist <= rand_dist
+
+
+def test_oracle_coupling_marginal_repair():
+    rng = np.random.default_rng(2)
+    data = np.full((100, 5), 7, np.int32)
+    drafts = np.zeros((200, 5), np.int32)
+    oracle = lambda d: d + 1
+    c = OracleRefinementCoupling(oracle=oracle, inject_prob=0.5)
+    src, tgt = c.build(data, drafts, rng)
+    injected = (tgt == 7).all(axis=1).mean()
+    refined = (tgt == 1).all(axis=1).mean()
+    assert 0.3 < injected < 0.7
+    assert refined == 1.0 - injected
+
+
+def test_pair_iterator_batches_and_reshuffles():
+    rng = np.random.default_rng(3)
+    src = np.arange(40, dtype=np.int32).reshape(10, 4)
+    tgt = src + 100
+    it = pair_iterator(src, tgt, 4, rng)
+    seen = []
+    for _ in range(5):
+        s, t = next(it)
+        assert s.shape == (4, 4)
+        np.testing.assert_array_equal(t, s + 100)
+        seen.append(s[0, 0])
+    assert len(set(int(x) for x in seen)) > 1  # shuffled

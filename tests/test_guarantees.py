@@ -1,0 +1,42 @@
+"""The paper's central claim as checkable invariants."""
+
+import math
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.guarantees import check_guarantee, speedup_report, warm_nfe
+
+
+def test_paper_examples():
+    # paper: t0=0.8 -> x5 speed-up, t0=0.5 -> x2 (§4.2: 1024 -> 205 / 512)
+    assert warm_nfe(1024, 0.8) == 205
+    assert warm_nfe(1024, 0.5) == 512
+    assert warm_nfe(20, 0.8) == 4      # two-moons Table 1
+    assert warm_nfe(20, 0.9) == 2
+    assert warm_nfe(20, 0.95) == 1
+    assert warm_nfe(20, 0.35) == 13
+    assert warm_nfe(20, 0.5) == 10
+
+
+@given(n=st.integers(1, 4096), t0=st.floats(0.0, 0.99))
+@settings(max_examples=200, deadline=None)
+def test_warm_nfe_bounds(n, t0):
+    w = warm_nfe(n, t0)
+    assert 1 <= w <= n
+    # speed-up is at least the guaranteed factor, up to ceil rounding
+    assert w <= math.ceil(n * (1 - t0) + 1e-9)
+
+
+def test_speedup_report_accounting():
+    r = speedup_report(1000, 0.8, draft_cost_ratio=2.0)
+    assert r.warm_nfe == 200
+    assert r.nfe_speedup == pytest.approx(5.0)
+    assert r.effective_speedup == pytest.approx(1000 / 202)
+    assert r.guaranteed_factor == pytest.approx(5.0)
+    assert "t0=0.80" in r.as_row()
+
+
+def test_check_guarantee():
+    assert check_guarantee(1024, 0.8, 205)
+    assert not check_guarantee(1024, 0.8, 204)

@@ -1,0 +1,148 @@
+"""Pallas kernel sweeps vs pure-jnp oracles (interpret mode on CPU).
+
+Each kernel sweeps shapes and dtypes per the deliverable: ws_step over
+(rows x vocab incl. non-128-multiples), flash_attn over (seq, heads,
+head_dim, GQA ratio, causal/bidir, window).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.paths import WarmStartPath
+from repro.kernels.flash_attn import flash_attention, flash_attention_ref
+from repro.kernels.ws_step import make_ws_step_fn, ws_step, ws_step_ref
+from repro.kernels.ws_step.kernel import ws_step_pallas
+
+
+# ---------------------------------------------------------------------------
+# ws_step
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("r,v", [(8, 128), (16, 300), (8, 27), (32, 1024), (3, 517)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_ws_step_kernel_matches_ref(r, v, dtype):
+    logits = (jax.random.normal(jax.random.key(0), (r, v)) * 3).astype(dtype)
+    x = jax.random.randint(jax.random.key(1), (r,), 0, v)
+    a = jax.random.uniform(jax.random.key(2), (r,))
+    vp = -(-v // 128) * 128
+    gumbel = jax.random.gumbel(jax.random.key(3), (r, vp), dtype=jnp.float32)
+    rp = -(-r // 8) * 8
+    lg = jnp.pad(logits.astype(jnp.float32), ((0, rp - r), (0, vp - v)))
+    xp = jnp.pad(x, (0, rp - r))
+    ap = jnp.pad(a, (0, rp - r))
+    gp = jnp.pad(gumbel, ((0, rp - r), (0, 0)))
+    out = ws_step_pallas(lg, xp[:, None].astype(jnp.int32), ap[:, None], gp,
+                         valid_v=v, row_block=8, interpret=True)[:r, 0]
+    ref = ws_step_ref(logits.astype(jnp.float32), x, a, gumbel[:r, :v])
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+
+
+def test_ws_step_wrapper_3d_and_guarantee_semantics():
+    path = WarmStartPath(t0=0.5)
+    b, n, v = 4, 6, 50
+    logits = jax.random.normal(jax.random.key(0), (b, n, v)) * 2
+    x = jax.random.randint(jax.random.key(1), (b, n), 0, v)
+    out = ws_step(jax.random.key(2), logits, x, jnp.full((b,), 0.7),
+                  jnp.asarray(0.05), path)
+    assert out.shape == (b, n)
+    assert int(out.min()) >= 0 and int(out.max()) < v
+
+
+def test_ws_step_near_t1_moves_to_argmax():
+    """At t -> 1, a -> 1 and the step samples ~p1; with peaked logits it
+    must hit the mode."""
+    path = WarmStartPath(t0=0.0)
+    v = 33
+    logits = jnp.zeros((8, 4, v)).at[..., 13].set(40.0)
+    x = jnp.zeros((8, 4), jnp.int32)
+    out = ws_step(jax.random.key(0), logits, x, jnp.full((8,), 0.999),
+                  jnp.asarray(0.05), path)
+    assert bool((out == 13).all())
+
+
+def test_ws_step_a_zero_keeps_tokens():
+    path = WarmStartPath(t0=0.0)
+    logits = jax.random.normal(jax.random.key(0), (4, 5, 17))
+    x = jax.random.randint(jax.random.key(1), (4, 5), 0, 17)
+    out = ws_step(jax.random.key(2), logits, x, jnp.zeros((4,)),
+                  jnp.asarray(0.0), path)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(x))
+
+
+def test_ws_step_fn_plugs_into_sampler():
+    from repro.core.sampler import EulerSampler
+    path = WarmStartPath(t0=0.8)
+    step_fn = make_ws_step_fn(path)
+    smp = EulerSampler(path=path, num_steps=20, step_fn=step_fn)
+    target = 3
+
+    def model_fn(xx, t):
+        return jnp.zeros(xx.shape + (9,)).at[..., target].set(25.0)
+
+    x0 = jax.random.randint(jax.random.key(0), (16, 4), 0, 9)
+    x, stats = smp.sample(jax.random.key(1), model_fn, x0)
+    assert int(stats.nfe) == 4
+    assert float(jnp.mean((x == target).astype(jnp.float32))) > 0.9
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("s,h,kh,d", [(128, 4, 4, 64), (200, 4, 2, 64),
+                                      (96, 2, 2, 32), (256, 8, 1, 128)])
+@pytest.mark.parametrize("causal,window", [(True, None), (True, 64),
+                                           (False, None), (False, 48)])
+def test_flash_attention_sweep(s, h, kh, d, causal, window):
+    b = 2
+    q = jax.random.normal(jax.random.key(0), (b, s, h, d))
+    k = jax.random.normal(jax.random.key(1), (b, s, kh, d))
+    v = jax.random.normal(jax.random.key(2), (b, s, kh, d))
+    out = flash_attention(q, k, v, causal=causal, window=window, interpret=True)
+    kk = jnp.repeat(k, h // kh, 2)
+    vv = jnp.repeat(v, h // kh, 2)
+    ref = flash_attention_ref(q, kk, vv, causal=causal, window=window)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=3e-5)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_dtypes(dtype):
+    b, s, h, d = 1, 128, 2, 64
+    q = jax.random.normal(jax.random.key(0), (b, s, h, d)).astype(dtype)
+    k = jax.random.normal(jax.random.key(1), (b, s, h, d)).astype(dtype)
+    v = jax.random.normal(jax.random.key(2), (b, s, h, d)).astype(dtype)
+    out = flash_attention(q, k, v, causal=True, interpret=True)
+    ref = flash_attention_ref(q, k, v, causal=True)
+    tol = 1e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), atol=tol)
+
+
+def test_flash_attention_matches_model_attention_path():
+    """Cross-check against models/attention.py XLA semantics."""
+    from repro.models.attention import attn_mask, NEG_INF
+    b, s, h, d = 1, 64, 2, 32
+    q = jax.random.normal(jax.random.key(0), (b, s, h, d))
+    k = jax.random.normal(jax.random.key(1), (b, s, h, d))
+    v = jax.random.normal(jax.random.key(2), (b, s, h, d))
+    out = flash_attention(q, k, v, causal=True, window=16, interpret=True)
+    pos = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+    mask = attn_mask(pos, pos, mode="causal", window=16)
+    sc = jnp.einsum("bshd,bthd->bhst", q, k) / jnp.sqrt(jnp.asarray(d, jnp.float32))
+    sc = jnp.where(mask[:, None], sc, NEG_INF)
+    ref = jnp.einsum("bhst,bthd->bshd", jax.nn.softmax(sc, -1), v)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=3e-5)
+
+
+@given(st.integers(16, 160), st.integers(0, 1))
+@settings(max_examples=8, deadline=None)
+def test_flash_attention_property_random_seq(s, causal_flag):
+    q = jax.random.normal(jax.random.key(s), (1, s, 2, 32))
+    k = jax.random.normal(jax.random.key(s + 1), (1, s, 2, 32))
+    v = jax.random.normal(jax.random.key(s + 2), (1, s, 2, 32))
+    out = flash_attention(q, k, v, causal=bool(causal_flag), interpret=True)
+    ref = flash_attention_ref(q, k, v, causal=bool(causal_flag))
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=3e-5)

@@ -1,0 +1,123 @@
+"""Correctness of the §Perf optimization variants against the baselines:
+  * chunked (flash-style XLA) attention == einsum attention
+  * absorbed MLA decode == naive-expansion MLA decode
+  * capacity-sharded MoE dispatch == baseline dispatch (pure function,
+    sharding constraint is a no-op without a mesh)
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.models import build_model
+
+
+def test_chunked_attention_matches_xla():
+    cfg = get_smoke_config("starcoder2-3b").replace(max_seq_len=512)
+    cfg_c = cfg.replace(attn_impl="chunked", attn_chunk=64)
+    m = build_model(cfg)
+    m_c = build_model(cfg_c)
+    params = m.init(jax.random.key(0))
+    toks = jax.random.randint(jax.random.key(1), (2, 200), 0, cfg.vocab_size)
+    for t in (None, jnp.full((2,), 0.5)):
+        a, _ = m.forward(params, {"tokens": toks}, t)
+        b, _ = m_c.forward(params, {"tokens": toks}, t)
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32), atol=2e-3)
+
+
+def test_chunked_attention_with_window_matches():
+    cfg = get_smoke_config("gemma3-1b").replace(max_seq_len=512)
+    cfg_c = cfg.replace(attn_impl="chunked", attn_chunk=64)
+    m, m_c = build_model(cfg), build_model(cfg_c)
+    params = m.init(jax.random.key(0))
+    toks = jax.random.randint(jax.random.key(1), (1, 160), 0, cfg.vocab_size)
+    a, _ = m.forward(params, {"tokens": toks}, jnp.full((1,), 0.6))
+    b, _ = m_c.forward(params, {"tokens": toks}, jnp.full((1,), 0.6))
+    np.testing.assert_allclose(np.asarray(a, np.float32),
+                               np.asarray(b, np.float32), atol=2e-3)
+
+
+def test_mla_absorb_matches_naive_decode():
+    cfg = get_smoke_config("deepseek-v3-671b")
+    cfg_a = cfg.replace(mla_absorb=True)
+    m, m_a = build_model(cfg), build_model(cfg_a)
+    params = m.init(jax.random.key(0))
+    B, S = 2, 16
+    toks = jax.random.randint(jax.random.key(1), (B, S), 0, cfg.vocab_size)
+
+    def run(model):
+        cache = model.init_cache(B, S + 4, jnp.float32)
+        lg_pre, cache = model.prefill(params, {"tokens": toks[:, :S - 1]}, cache)
+        lg_dec, _ = model.decode_step(params, toks[:, S - 1:S], cache,
+                                      jnp.asarray(S - 1, jnp.int32))
+        return np.asarray(lg_pre, np.float32), np.asarray(lg_dec, np.float32)
+
+    p0, d0 = run(m)
+    p1, d1 = run(m_a)
+    np.testing.assert_allclose(p0, p1, atol=2e-3, rtol=1e-3)
+    np.testing.assert_allclose(d0, d1, atol=2e-3, rtol=1e-3)
+
+
+def test_capacity_sharding_knob_is_semantics_preserving():
+    from repro.configs.base import MoESettings
+    cfg = get_smoke_config("arctic-480b")
+    cfg2 = cfg.replace(moe=cfg.moe.__class__(**{
+        **cfg.moe.__dict__, "capacity_sharding": "data"}))
+    m, m2 = build_model(cfg), build_model(cfg2)
+    params = m.init(jax.random.key(0))
+    toks = jax.random.randint(jax.random.key(1), (2, 16), 0, cfg.vocab_size)
+    a, _ = m.forward(params, {"tokens": toks}, jnp.full((2,), 0.5))
+    b, _ = m2.forward(params, {"tokens": toks}, jnp.full((2,), 0.5))
+    np.testing.assert_allclose(np.asarray(a, np.float32),
+                               np.asarray(b, np.float32), atol=1e-5)
+
+
+def test_chunked_mla_matches_naive():
+    cfg = get_smoke_config("deepseek-v3-671b").replace(max_seq_len=512)
+    cfg_c = cfg.replace(attn_impl="chunked", attn_chunk=32)
+    m, m_c = build_model(cfg), build_model(cfg_c)
+    params = m.init(jax.random.key(0))
+    toks = jax.random.randint(jax.random.key(1), (2, 100), 0, cfg.vocab_size)
+    a, _ = m.forward(params, {"tokens": toks}, jnp.full((2,), 0.5))
+    b, _ = m_c.forward(params, {"tokens": toks}, jnp.full((2,), 0.5))
+    np.testing.assert_allclose(np.asarray(a, np.float32),
+                               np.asarray(b, np.float32), atol=2e-3)
+    cache = m.init_cache(2, 110, jnp.float32)
+    cache_c = m_c.init_cache(2, 110, jnp.float32)
+    pa, _ = m.prefill(params, {"tokens": toks}, cache)
+    pb, _ = m_c.prefill(params, {"tokens": toks}, cache_c)
+    np.testing.assert_allclose(np.asarray(pa, np.float32),
+                               np.asarray(pb, np.float32), atol=2e-3)
+
+
+def test_chunkwise_mlstm_matches_parallel():
+    from repro.models.xlstm import mlstm_chunked, mlstm_parallel
+    B, T, H, D = 2, 96, 4, 32
+    q = jax.random.normal(jax.random.key(0), (B, T, H, D))
+    k = jax.random.normal(jax.random.key(1), (B, T, H, D))
+    v = jax.random.normal(jax.random.key(2), (B, T, H, D))
+    i = jax.random.normal(jax.random.key(3), (B, T, H)) * 2
+    f = jax.random.normal(jax.random.key(4), (B, T, H)) * 2 + 1
+    ref = mlstm_parallel(q, k, v, i, f)
+    # single chunk == parallel exactly; multi-chunk differs only by the
+    # fp32 stabiliser bookkeeping
+    np.testing.assert_allclose(np.asarray(mlstm_chunked(q, k, v, i, f, 96)),
+                               np.asarray(ref), atol=1e-5)
+    for chunk in (16, 32):
+        np.testing.assert_allclose(np.asarray(mlstm_chunked(q, k, v, i, f, chunk)),
+                                   np.asarray(ref), atol=5e-4)
+
+
+def test_chunkwise_mlstm_in_model():
+    cfg = get_smoke_config("xlstm-1.3b").replace(max_seq_len=512)
+    cfg_c = cfg.replace(attn_impl="chunked", attn_chunk=32)
+    m, m_c = build_model(cfg), build_model(cfg_c)
+    params = m.init(jax.random.key(0))
+    toks = jax.random.randint(jax.random.key(1), (2, 100), 0, cfg.vocab_size)
+    a, _ = m.forward(params, {"tokens": toks}, jnp.full((2,), 0.5))
+    b, _ = m_c.forward(params, {"tokens": toks}, jnp.full((2,), 0.5))
+    np.testing.assert_allclose(np.asarray(a, np.float32),
+                               np.asarray(b, np.float32), atol=5e-3)

@@ -1,0 +1,97 @@
+"""Euler CTMC sampler tests (core/sampler.py)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.paths import WarmStartPath
+from repro.core.sampler import EulerSampler, categorical_from_probs, euler_step_probs
+
+
+def test_step_probs_are_distribution():
+    path = WarmStartPath(t0=0.5)
+    logits = jax.random.normal(jax.random.key(0), (4, 3, 11))
+    x = jax.random.randint(jax.random.key(1), (4, 3), 0, 11)
+    for t in (0.5, 0.9, 0.999):
+        p = euler_step_probs(logits, x, jnp.full((4,), t), jnp.asarray(0.05), path)
+        assert float(jnp.abs(p.sum(-1) - 1.0).max()) < 1e-5
+        assert float(p.min()) >= 0.0
+
+
+def test_step_prob_limits():
+    """a -> 0 keeps the current token; a -> 1 moves to p1."""
+    path = WarmStartPath(t0=0.0)
+    logits = jnp.zeros((1, 1, 5)).at[0, 0, 2].set(50.0)
+    x = jnp.array([[4]], dtype=jnp.int32)
+    p_stay = euler_step_probs(logits, x, jnp.array([0.0]), jnp.asarray(1e-9), path)
+    assert float(p_stay[0, 0, 4]) == pytest.approx(1.0, abs=1e-5)
+    # at t ~ 1 the clip makes a = 1 -> pure p1
+    p_move = euler_step_probs(logits, x, jnp.array([0.999]), jnp.asarray(0.05), path)
+    assert float(p_move[0, 0, 2]) == pytest.approx(1.0, abs=1e-3)
+
+
+def test_categorical_from_probs_statistics():
+    probs = jnp.broadcast_to(jnp.array([0.1, 0.2, 0.7]), (20000, 3))
+    out = categorical_from_probs(jax.random.key(0), probs)
+    freq = np.bincount(np.asarray(out), minlength=3) / 20000
+    np.testing.assert_allclose(freq, [0.1, 0.2, 0.7], atol=0.02)
+
+
+@pytest.mark.parametrize("t0,expected", [(0.0, 20), (0.5, 10), (0.8, 4), (0.9, 2)])
+def test_sampler_nfe(t0, expected):
+    smp = EulerSampler(path=WarmStartPath(t0=t0), num_steps=20)
+    assert smp.nfe == expected
+    calls = []
+
+    def model_fn(x, t):
+        calls.append(1)
+        return jnp.zeros(x.shape + (7,))
+
+    x0 = jnp.zeros((2, 3), jnp.int32)
+    x, stats = smp.sample(jax.random.key(0), model_fn, x0)
+    assert int(stats.nfe) == expected
+    assert x.shape == x0.shape
+
+
+def test_sampler_converges_to_model_distribution():
+    """With a constant p1 concentrated on one token, the sampler must land
+    every token there by t = 1 (the CTMC transports to p1)."""
+    v = 9
+    target = 5
+
+    def model_fn(x, t):
+        return jnp.zeros(x.shape + (v,)).at[..., target].set(25.0)
+
+    smp = EulerSampler(path=WarmStartPath(t0=0.0), num_steps=24)
+    x0 = jax.random.randint(jax.random.key(2), (64, 4), 0, v)
+    x, _ = smp.sample(jax.random.key(3), model_fn, x0)
+    assert float(jnp.mean((x == target).astype(jnp.float32))) > 0.97
+
+
+def test_warm_start_equals_cold_given_good_draft():
+    """Warm start from near-target drafts reaches the same terminal set."""
+    v = 9
+    target = 3
+
+    def model_fn(x, t):
+        return jnp.zeros(x.shape + (v,)).at[..., target].set(25.0)
+
+    warm = EulerSampler(path=WarmStartPath(t0=0.8), num_steps=24)
+    drafts = jax.random.randint(jax.random.key(4), (64, 4), 0, v)
+    x, stats = warm.sample(jax.random.key(5), model_fn, drafts)
+    assert int(stats.nfe) == 5  # ceil(24 * 0.2)
+    assert float(jnp.mean((x == target).astype(jnp.float32))) > 0.95
+
+
+def test_custom_step_fn_plugs_in():
+    hits = []
+
+    def step_fn(rng, logits, x_t, t, h):
+        hits.append(1)
+        return x_t
+
+    smp = EulerSampler(path=WarmStartPath(t0=0.5), num_steps=4, step_fn=step_fn)
+    x0 = jnp.zeros((2, 3), jnp.int32)
+    smp.sample(jax.random.key(0), lambda x, t: jnp.zeros(x.shape + (5,)), x0)
+    assert hits  # traced at least once
