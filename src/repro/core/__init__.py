@@ -8,8 +8,12 @@ from repro.core.sampler import (
     euler_step_probs,
     categorical_from_probs,
     make_refine_step,
+    refine_schedule,
 )
-from repro.core.guarantees import warm_nfe, speedup_report, check_guarantee
+from repro.core.guarantees import (
+    GuaranteeViolation, check_guarantee, require_guarantee, speedup_report,
+    warm_nfe,
+)
 from repro.core.coupling import (
     IndependentCoupling,
     KNNRefinementCoupling,
@@ -23,7 +27,9 @@ __all__ = [
     "WarmStartPath", "cold_start_path", "uniform_noise", "mask_noise",
     "dfm_cross_entropy", "ws_dfm_loss",
     "EulerSampler", "euler_step_probs", "categorical_from_probs", "make_refine_step",
-    "warm_nfe", "speedup_report", "check_guarantee",
+    "refine_schedule",
+    "warm_nfe", "speedup_report", "check_guarantee", "require_guarantee",
+    "GuaranteeViolation",
     "IndependentCoupling", "KNNRefinementCoupling", "OracleRefinementCoupling", "pair_iterator",
     "DraftModel", "CorruptionDraft", "HistogramDraft", "ARDraft",
     "WarmStartPipeline",

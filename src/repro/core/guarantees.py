@@ -16,6 +16,15 @@ import dataclasses
 import math
 
 
+class GuaranteeViolation(RuntimeError):
+    """The observed NFE count broke the structural warm-start guarantee.
+
+    Raised (never ``assert``-ed, so it survives ``python -O``) by the
+    serving engine and pipeline when a refine loop executed a number of
+    backbone evaluations different from ``warm_nfe(cold_nfe, t0)``.
+    """
+
+
 @dataclasses.dataclass(frozen=True)
 class SpeedupReport:
     t0: float
@@ -70,3 +79,13 @@ def speedup_report(
 def check_guarantee(cold_nfe: int, t0: float, observed_nfe: int) -> bool:
     """Invariant asserted by tests and the serving engine."""
     return observed_nfe == warm_nfe(cold_nfe, t0)
+
+
+def require_guarantee(cold_nfe: int, t0: float, observed_nfe: int) -> None:
+    """Raise :class:`GuaranteeViolation` unless the NFE invariant holds."""
+    if not check_guarantee(cold_nfe, t0, observed_nfe):
+        raise GuaranteeViolation(
+            f"warm-start NFE guarantee violated: observed {observed_nfe} "
+            f"steps, guaranteed {warm_nfe(cold_nfe, t0)} "
+            f"(cold_nfe={cold_nfe}, t0={t0})"
+        )

@@ -12,10 +12,13 @@ exactly the cold-start DFM sampler of Gat et al. (2024); the warm-start
 variant only changes the start time/state — hence the *guaranteed*
 speed-up factor ``1/(1 - t0)`` in function evaluations.
 
-The inner update (softmax + velocity + categorical) is the per-step
-overhead beyond the backbone forward; ``kernels/ws_step`` provides the
-fused Pallas TPU version, and this module the pure-jnp reference used on
-CPU and as the oracle.
+The refine loop is a single jitted ``lax.scan`` over a precomputed
+``(keys, t, h)`` schedule: the per-step times and (possibly partial
+final) step sizes are computed host-side once, the PRNG key is split
+once, and the whole loop compiles to ONE device dispatch — no host-side
+``random.split`` per step and no per-step retrace. ``kernels/ws_step`` provides the fused Pallas step
+(``step_fn``); this module also holds the pure-jnp per-step reference
+used on CPU and as the oracle.
 """
 
 from __future__ import annotations
@@ -26,6 +29,7 @@ from typing import Callable, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core.paths import WarmStartPath
 
@@ -66,6 +70,18 @@ def categorical_from_probs(rng: jax.Array, probs: jax.Array) -> jax.Array:
     return jnp.argmax(jnp.log(jnp.maximum(probs, 1e-30)) + g, axis=-1).astype(jnp.int32)
 
 
+def refine_schedule(t0: float, cold_nfe_h: float, n: int):
+    """Per-step ``(t, h)`` arrays for the warm-start Euler loop.
+
+    ``t[i] = t0 + i * h`` and ``h[i] = min(h, 1 - t[i])`` so the last
+    (possibly partial) step lands exactly on ``t = 1``. Computed on the
+    host once, fed to the scanned loop as f32 arrays.
+    """
+    ts = (t0 + np.arange(n, dtype=np.float64) * cold_nfe_h).astype(np.float32)
+    hs = np.minimum(np.float32(cold_nfe_h), np.float32(1.0) - ts).astype(np.float32)
+    return ts, hs
+
+
 @dataclasses.dataclass(frozen=True)
 class EulerSampler:
     """Fixed-step Euler CTMC sampler over ``t in [path.t0, 1]``.
@@ -82,6 +98,10 @@ class EulerSampler:
       step_fn: optional fused replacement for the probability update +
         categorical draw, signature (rng, logits, x_t, t, h) -> x_next
         (the Pallas kernel plugs in here).
+      jit: compile the whole refine loop into one dispatch (skipped
+        automatically under an outer trace). ``x_init`` is NOT donated —
+        callers may reuse it; the serving engine donates at its own
+        boundary where the buffer is fresh per request.
     """
 
     path: WarmStartPath
@@ -89,6 +109,13 @@ class EulerSampler:
     temperature: float = 1.0
     argmax_final: bool = False
     step_fn: Optional[Callable] = None
+    jit: bool = True
+
+    def __post_init__(self):
+        # per-instance compile cache keyed by model_fn: entries (and the
+        # closures/params they capture) die with the sampler instead of
+        # accumulating in a process-global jit cache.
+        object.__setattr__(self, "_jit_cache", {})
 
     @property
     def h(self) -> float:
@@ -105,13 +132,37 @@ class EulerSampler:
         probs = euler_step_probs(logits, x_t, t, h, self.path, temperature=self.temperature)
         return categorical_from_probs(rng, probs)
 
+    def _scan_loop(self, model_fn, rng, x_init):
+        """The whole refine loop as one lax.scan over (keys, t, h)."""
+        n = self.nfe
+        b = x_init.shape[0]
+        ts, hs = refine_schedule(self.path.t0, self.h, n)
+        keys = jax.random.split(rng, n)
+        last = np.arange(n) == n - 1
+
+        def body(x, inp):
+            key, t, step, is_last = inp
+            tb = jnp.full((b,), t, jnp.float32)
+            logits = model_fn(x, tb)
+            x_next = self._one_step(key, logits, x, tb, step)
+            if self.argmax_final:
+                x_det = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+                x_next = jnp.where(is_last, x_det, x_next)
+            return x_next, None
+
+        x, _ = jax.lax.scan(
+            body, x_init,
+            (keys, jnp.asarray(ts), jnp.asarray(hs), jnp.asarray(last)),
+        )
+        return x
+
     def sample(
         self,
         rng: jax.Array,
         model_fn: Callable[[jax.Array, jax.Array], jax.Array],
         x_init: jax.Array,
     ):
-        """Run the sampler.
+        """Run the sampler (one device dispatch when ``jit`` is on).
 
         Args:
           rng: PRNG key.
@@ -121,31 +172,20 @@ class EulerSampler:
         Returns:
           (x_final, SamplerStats)
         """
-        t0 = self.path.t0
-        n = self.nfe
-        h = self.h
-        b = x_init.shape[0]
-
-        def body(carry, i):
-            x, key = carry
-            key, krun = jax.random.split(key)
-            t = jnp.full((b,), t0 + i * h, dtype=jnp.float32)
-            # last (possibly partial) step ends exactly at 1.0
-            step = jnp.minimum(h, 1.0 - t[0])
-            logits = model_fn(x, t)
-            is_last = i == (n - 1)
-            if self.argmax_final:
-                x_stoch = self._one_step(krun, logits, x, t, step)
-                x_det = jnp.argmax(logits, axis=-1).astype(jnp.int32)
-                x = jnp.where(is_last, x_det, x_stoch)
-            else:
-                x = self._one_step(krun, logits, x, t, step)
-            return (x, key), None
-
-        (x, _), _ = jax.lax.scan(body, (x_init, rng), jnp.arange(n))
+        # jit only from a clean trace state: args or model_fn captures may
+        # carry tracers from an outer jit/grad, where the inline scan is
+        # the correct (and equivalent) path.
+        if not self.jit or not jax.core.trace_state_clean():
+            x = self._scan_loop(model_fn, rng, x_init)
+        else:
+            fn = self._jit_cache.get(model_fn)
+            if fn is None:
+                fn = jax.jit(partial(self._scan_loop, model_fn))
+                self._jit_cache[model_fn] = fn
+            x = fn(rng, x_init)
         # nfe is a static property of the schedule — keep it a python int so
         # the guarantee check works under jit tracing.
-        stats = SamplerStats(nfe=n, final_t=1.0)
+        stats = SamplerStats(nfe=self.nfe, final_t=1.0)
         return x, stats
 
 

@@ -1,14 +1,20 @@
 """Pallas TPU kernels for the performance-critical hot spots:
-  ws_step    — fused warm-start Euler sampling step (the paper's inner loop)
+  ws_step    — streamed vocab-tiled warm-start Euler sampling step with
+               in-kernel PRNG (the paper's inner loop)
   flash_attn — blockwise attention with sliding-window block skipping
 
-Each kernel ships kernel.py (pl.pallas_call + BlockSpec), ops.py (jit'd
-wrapper) and ref.py (pure-jnp oracle); tests sweep shapes/dtypes in
-interpret mode. On this CPU container kernels run interpret=True; on TPU
-set interpret=False.
+Each kernel ships kernel.py (pl.pallas_call + BlockSpec), ops.py
+(backend-aware jit'd dispatcher) and ref.py (pure-jnp oracle); tests
+sweep shapes/dtypes in interpret mode. The ws_step dispatcher resolves
+interpret-vs-compiled at trace time: compiled with the hardware PRNG on
+TPU, interpret with the jnp threefry path elsewhere.
 """
-from repro.kernels.ws_step import ws_step, make_ws_step_fn, ws_step_ref
+from repro.kernels.ws_step import (
+    make_ws_step_fn, pick_tiles, ws_step, ws_step_ref, ws_step_ref_streamed,
+    ws_step_streamed_pallas,
+)
 from repro.kernels.flash_attn import flash_attention, flash_attention_ref
 
-__all__ = ["ws_step", "make_ws_step_fn", "ws_step_ref",
+__all__ = ["ws_step", "make_ws_step_fn", "pick_tiles", "ws_step_ref",
+           "ws_step_ref_streamed", "ws_step_streamed_pallas",
            "flash_attention", "flash_attention_ref"]

@@ -1,3 +1,13 @@
-from repro.kernels.ws_step.ops import ws_step, make_ws_step_fn
-from repro.kernels.ws_step.ref import ws_step_ref
-__all__ = ["ws_step", "make_ws_step_fn", "ws_step_ref"]
+from repro.kernels.ws_step.ops import (
+    make_ws_step_fn, pick_tiles, seed_from_key, ws_step,
+)
+from repro.kernels.ws_step.kernel import (
+    threefry_gumbel, ws_step_pallas, ws_step_streamed_pallas,
+)
+from repro.kernels.ws_step.ref import ws_step_ref, ws_step_ref_streamed
+
+__all__ = [
+    "ws_step", "make_ws_step_fn", "pick_tiles", "seed_from_key",
+    "ws_step_pallas", "ws_step_streamed_pallas", "threefry_gumbel",
+    "ws_step_ref", "ws_step_ref_streamed",
+]

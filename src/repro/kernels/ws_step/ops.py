@@ -1,32 +1,92 @@
-"""Jit'd wrapper for the fused warm-start Euler step kernel.
+"""Backend-aware dispatcher for the fused warm-start Euler step kernel.
 
 ``ws_step(rng, logits, x_t, t, h, path)`` matches the ``step_fn`` plug-in
 signature of core/sampler.py — drop it into EulerSampler/WarmStartServer
-to fuse the per-step sampling on TPU. ``interpret=True`` (default on CPU)
-runs the kernel body in Python for validation.
+to fuse the per-step sampling.
+
+Dispatch policy (``impl=None`` is auto):
+  * ``"streamed"`` — the vocab-tiled streaming Pallas kernel with
+    in-kernel PRNG. On a real TPU it compiles with the hardware PRNG
+    (``pltpu.prng_random_bits``); elsewhere it runs in interpret mode
+    with the jnp threefry path. This is the auto choice everywhere.
+  * ``"reference"`` — the pure-jnp oracle path (materialises the Gumbel
+    tensor via ``jax.random``); useful for XLA baselines and debugging.
+
+``interpret=None`` (default) resolves at trace time to "interpret iff
+the backend is not TPU" — the seed's ``interpret=True`` default silently
+ran the interpreter on TPU.
+
+``(row_block, vocab_tile)`` default to :func:`pick_tiles`, which sizes
+the tile so the kernel's resident VMEM (double-buffered logits tile +
+noise/exp temporaries, ~16 B per row-lane) fits ``VMEM_BUDGET_BYTES``.
 """
 
 from __future__ import annotations
 
-import functools
-from typing import Optional
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
 from repro.core.paths import WarmStartPath
-from repro.kernels.ws_step.kernel import ws_step_pallas
+from repro.kernels.ws_step.kernel import ws_step_streamed_pallas
+from repro.kernels.ws_step.ref import ws_step_ref
 
 VMEM_BUDGET_BYTES = 8 * 1024 * 1024
+MAX_VOCAB_TILE = 2048
+LANE = 128
 
 
-def _pick_row_block(v_padded: int) -> int:
-    # logits f32 + gumbel f32 resident per row: 8 bytes per vocab entry
-    rows = max(1, VMEM_BUDGET_BYTES // (8 * v_padded))
-    for cand in (128, 64, 32, 16, 8, 4, 2, 1):
-        if cand <= rows:
-            return cand
-    return 1
+def pick_tiles(
+    r: int,
+    v_padded: int,
+    *,
+    vmem_budget: int = VMEM_BUDGET_BYTES,
+    max_vocab_tile: int = MAX_VOCAB_TILE,
+) -> Tuple[int, int]:
+    """Choose ``(row_block, vocab_tile)`` for the streamed kernel.
+
+    vocab_tile: the largest multiple of 128 lanes that divides ``v_padded``
+    and stays <= ``max_vocab_tile`` — so a 262144 vocab streams as 128
+    tiles of 2048 instead of demanding 1 MB/row of VMEM.
+
+    row_block: largest power of two whose resident bytes fit the budget
+    (~16 B per row-lane: double-buffered f32 logits tile + noise and exp
+    temporaries), clamped to the padded row count.
+    """
+    nlanes = max(1, v_padded // LANE)
+    d = 1
+    for cand in range(1, nlanes + 1):
+        if nlanes % cand == 0 and LANE * cand <= max_vocab_tile:
+            d = cand
+    vocab_tile = LANE * d
+
+    rows_budget = max(1, vmem_budget // (16 * vocab_tile))
+    row_block = 1
+    while row_block * 2 <= min(rows_budget, 256):
+        row_block *= 2
+    # don't pad tiny batches up to a huge block
+    rp2 = 1
+    while rp2 < r:
+        rp2 *= 2
+    row_block = max(1, min(row_block, rp2))
+    return row_block, vocab_tile
+
+
+def seed_from_key(rng: jax.Array) -> jax.Array:
+    """(2,) int32 seed words from a JAX PRNG key (typed or raw uint32)."""
+    if jnp.issubdtype(rng.dtype, jax.dtypes.prng_key):
+        kd = jax.random.key_data(rng)
+    else:
+        kd = rng
+    kd = jnp.asarray(kd, jnp.uint32).reshape(-1)[:2]
+    return kd.astype(jnp.int32)
+
+
+def _resolve_interpret(interpret: Optional[bool]) -> bool:
+    if interpret is None:
+        return jax.default_backend() != "tpu"
+    return bool(interpret)
 
 
 def ws_step(
@@ -38,10 +98,20 @@ def ws_step(
     path: WarmStartPath,
     *,
     temperature: float = 1.0,
-    interpret: bool = True,
+    interpret: Optional[bool] = None,
+    impl: Optional[str] = None,
+    row_block: Optional[int] = None,
+    vocab_tile: Optional[int] = None,
+    hw_prng: Optional[bool] = None,
 ) -> jax.Array:
     """Fused next-token draw for one Euler step. Returns tokens shaped
-    like ``x_t``."""
+    like ``x_t``.
+
+    ``hw_prng=None`` auto-selects the TPU hardware PRNG when compiled on
+    a TPU backend; pass ``False`` to force the counter-based threefry
+    path (host-reproducible via ``threefry_gumbel``) on any backend —
+    parity checks against host noise need this.
+    """
     squeeze = logits.ndim == 3
     if squeeze:
         b, n, v = logits.shape
@@ -56,32 +126,52 @@ def ws_step(
 
     a = jnp.clip(jnp.asarray(h, jnp.float32) * path.velocity_scale(tt), 0.0, 1.0)
 
-    vp = -(-v // 128) * 128
+    if impl is None or impl == "auto":
+        impl = "streamed"
+    if impl == "reference":
+        g = jax.random.gumbel(rng, (r, v), dtype=jnp.float32)
+        out = ws_step_ref(lg, x.astype(jnp.int32), a, g, temperature=temperature)
+        return out.reshape(x_t.shape)
+    if impl != "streamed":
+        raise ValueError(f"unknown ws_step impl {impl!r}")
+
+    run_interpret = _resolve_interpret(interpret)
+    if hw_prng is None:
+        use_hw_prng = (not run_interpret) and jax.default_backend() == "tpu"
+    else:
+        use_hw_prng = bool(hw_prng)
+
+    vp = -(-v // LANE) * LANE
+    auto_rb, auto_bv = pick_tiles(r, vp)
+    bv = vocab_tile if vocab_tile is not None else auto_bv
+    rb = row_block if row_block is not None else auto_rb
+    if vp % bv != 0:
+        raise ValueError(f"vocab_tile {bv} must divide padded vocab {vp}")
+
     if vp != v:
         lg = jnp.pad(lg, ((0, 0), (0, vp - v)))
-    row_block = _pick_row_block(vp)
-    rp = -(-r // row_block) * row_block
+    rp = -(-r // rb) * rb
     if rp != r:
         lg = jnp.pad(lg, ((0, rp - r), (0, 0)))
         x = jnp.pad(x, (0, rp - r))
         a = jnp.pad(a, (0, rp - r))
 
-    gumbel = jax.random.gumbel(rng, (rp, vp), dtype=jnp.float32)
-    out = ws_step_pallas(
-        lg, x[:, None].astype(jnp.int32), a[:, None], gumbel,
-        valid_v=v, row_block=row_block, temperature=temperature,
-        interpret=interpret,
+    out = ws_step_streamed_pallas(
+        lg, x[:, None].astype(jnp.int32), a[:, None], seed_from_key(rng),
+        valid_v=v, row_block=rb, vocab_tile=bv, temperature=temperature,
+        use_hw_prng=use_hw_prng, interpret=run_interpret,
     )[:, 0]
     out = out[:r]
     return out.reshape(x_t.shape)
 
 
 def make_ws_step_fn(path: WarmStartPath, *, temperature: float = 1.0,
-                    interpret: bool = True):
+                    interpret: Optional[bool] = None,
+                    impl: Optional[str] = None):
     """Returns step_fn(rng, logits, x_t, t, h) for EulerSampler(step_fn=...)."""
 
     def step_fn(rng, logits, x_t, t, h):
         return ws_step(rng, logits, x_t, t, h, path,
-                       temperature=temperature, interpret=interpret)
+                       temperature=temperature, interpret=interpret, impl=impl)
 
     return step_fn

@@ -1,15 +1,20 @@
-"""Pure-jnp oracle for the fused warm-start Euler sampling step.
+"""Pure-jnp oracles for the fused warm-start Euler sampling step.
 
 Given backbone logits, the current token, the mixing weight
-``a = clip(h * velocity_scale(t), 0, 1)`` and pre-drawn Gumbel noise,
-produce the next token of the CTMC Euler step (paper Fig. 3 right):
+``a = clip(h * velocity_scale(t), 0, 1)`` and Gumbel noise, produce the
+next token of the CTMC Euler step (paper Fig. 3 right):
 
     p1     = softmax(logits / temperature)
     p_next = (1 - a) * onehot(x_t) + a * p1
     x_next = argmax_v log(p_next[v]) + gumbel[v]
 
-The kernel (kernel.py) computes the same thing in one fused VMEM pass;
-this reference defines bit-level semantics for the allclose sweeps.
+``ws_step_ref`` is the probability-space oracle (materialises p_next).
+``ws_step_ref_streamed`` computes the mathematically identical
+decomposed score the streamed kernel uses — argmax over ``v != x`` of
+``lg_v + g_v`` plus a final two-way comparison against the ``v == x``
+score — full-width in jnp. The streamed Pallas kernel must match it
+exactly up to floating-point accumulation order; the two oracles agree
+except on FP near-ties at the argmax boundary.
 """
 
 from __future__ import annotations
@@ -18,6 +23,7 @@ import jax
 import jax.numpy as jnp
 
 MIN_PROB = 1e-30
+NEG = -1e30
 
 
 def ws_step_ref(
@@ -36,3 +42,33 @@ def ws_step_ref(
     probs = (1.0 - a[:, None]) * onehot + a[:, None] * p1
     score = jnp.log(jnp.maximum(probs, MIN_PROB)) + gumbel
     return jnp.argmax(score, axis=-1).astype(jnp.int32)
+
+
+def ws_step_ref_streamed(
+    logits: jax.Array,      # (R, V) float
+    x_t: jax.Array,         # (R,) int32
+    a: jax.Array,           # (R,) float32
+    gumbel: jax.Array,      # (R, V) float32
+    *,
+    temperature: float = 1.0,
+) -> jax.Array:
+    """Full-width jnp replica of the streamed kernel's decomposed score."""
+    lf = logits.astype(jnp.float32) / temperature
+    r, v = lf.shape
+    m = jnp.max(lf, axis=-1, keepdims=True)
+    s = jnp.sum(jnp.exp(lf - m), axis=-1, keepdims=True)
+
+    xi = x_t.astype(jnp.int32)[:, None]
+    col = jnp.arange(v, dtype=jnp.int32)[None, :]
+    isx = col == xi
+    cand = jnp.where(isx, NEG, lf + gumbel)
+    best = jnp.max(cand, axis=-1, keepdims=True)
+    bidx = jnp.argmax(cand, axis=-1).astype(jnp.int32)[:, None]
+
+    aa = a.astype(jnp.float32)[:, None]
+    score_other = jnp.log(jnp.maximum(aa, MIN_PROB)) + best - m - jnp.log(s)
+    lx = jnp.take_along_axis(lf, xi, axis=-1)
+    gx = jnp.take_along_axis(gumbel, xi, axis=-1)
+    p1x = jnp.exp(lx - m) / s
+    score_x = jnp.log(jnp.maximum((1.0 - aa) + aa * p1x, MIN_PROB)) + gx
+    return jnp.where(score_x >= score_other, xi, bidx)[:, 0]

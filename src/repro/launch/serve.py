@@ -30,6 +30,9 @@ def main():
     ap.add_argument("--seq-len", type=int, default=64)
     ap.add_argument("--train-steps", type=int, default=150)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--fused-step", action="store_true",
+                    help="use the streamed Pallas ws_step kernel for the "
+                         "per-step sampling (auto-selects TPU/interpret)")
     args = ap.parse_args()
 
     cfg = tiny_config(vocab_size=TEXT_VOCAB, seq_len=args.seq_len)
@@ -64,15 +67,22 @@ def main():
 
     gen = jax.jit(lambda rng, num: lstm.generate(lparams, rng, num, args.seq_len),
                   static_argnums=1)
+    step_fn = None
+    if args.fused_step:
+        from repro.kernels.ws_step import make_ws_step_fn
+        step_fn = make_ws_step_fn(WarmStartPath(t0=args.t0))
     server = WarmStartServer(
         flow_model=model, flow_cfg=cfg, flow_params=state.params,
         draft_generate=lambda rng, num: gen(rng, num),
         path=WarmStartPath(t0=args.t0), cold_nfe=args.cold_nfe,
+        step_fn=step_fn,
     )
     out, report = server.serve(jax.random.key(11), args.num)
     print(f"\nNFE: {report['nfe']} / cold {report['cold_nfe']} "
           f"(guaranteed x{report['speedup_report'].guaranteed_factor:.1f})")
-    print(f"draft {report['draft_time_s']*1e3:.1f}ms flow {report['flow_time_s']*1e3:.1f}ms")
+    print(f"draft {report['draft_time_s']*1e3:.1f}ms "
+          f"flow {report['flow_time_s']*1e3:.1f}ms "
+          f"({report['per_nfe_s']*1e3:.1f}ms/NFE, one dispatch)")
     for i in range(min(args.num, 4)):
         print(f"[{i}] {decode(np.asarray(out[i]))}")
 

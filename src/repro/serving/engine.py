@@ -15,11 +15,14 @@ from typing import Any, Callable, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.core import guarantees
 from repro.core.paths import WarmStartPath
-from repro.core.sampler import categorical_from_probs, euler_step_probs
+from repro.core.sampler import (
+    categorical_from_probs, euler_step_probs, refine_schedule,
+)
 
 
 def make_serve_step(model, cfg: ModelConfig, *, global_window: Optional[int] = None,
@@ -92,7 +95,13 @@ class WarmStartServer:
     """Batched WS-FM serving engine (paper Fig. 1 bottom):
       1. draft stage: lightweight AR model generates x_{t0};
       2. flow stage: ceil(cold_nfe * (1 - t0)) DFM Euler steps.
-    Asserts the NFE guarantee on every request batch."""
+
+    The flow stage is a single jitted ``lax.scan`` over a precomputed
+    ``(keys, t, h)`` schedule with the token buffer donated — the whole
+    refine loop is ONE device dispatch per request batch, not one per
+    step. The NFE guarantee is enforced with
+    :class:`~repro.core.guarantees.GuaranteeViolation` (a real exception,
+    not an ``assert`` stripped under ``python -O``)."""
 
     flow_model: Any
     flow_cfg: ModelConfig
@@ -104,10 +113,22 @@ class WarmStartServer:
     step_fn: Optional[Callable] = None
 
     def __post_init__(self):
-        self._refine = jax.jit(make_refine_step_fn(
+        step = make_refine_step_fn(
             self.flow_model, self.flow_cfg, self.path,
             temperature=self.temperature, step_fn=self.step_fn,
-        ))
+        )
+
+        def loop(params, keys, x, ts, hs):
+            def body(x, inp):
+                key, t, h = inp
+                tb = jnp.full((x.shape[0],), t, jnp.float32)
+                return step(params, key, x, tb, h), None
+
+            x, _ = jax.lax.scan(body, x, (keys, ts, hs))
+            return x
+
+        donate = () if jax.default_backend() == "cpu" else (2,)
+        self._refine_loop = jax.jit(loop, donate_argnums=donate)
 
     def serve(self, rng: jax.Array, num: int) -> Tuple[jax.Array, dict]:
         k_draft, k_flow = jax.random.split(rng)
@@ -116,27 +137,26 @@ class WarmStartServer:
         x = jax.block_until_ready(x)
         t_draft = time.time() - t_draft0
 
-        n_steps = guarantees.warm_nfe(self.cold_nfe, self.path.t0)
-        h = 1.0 / self.cold_nfe
         t0 = self.path.t0
+        n_steps = guarantees.warm_nfe(self.cold_nfe, t0)
+        ts, hs = refine_schedule(t0, 1.0 / self.cold_nfe, n_steps)
+        keys = jax.random.split(k_flow, n_steps)
+
         t_flow0 = time.time()
-        nfe = 0
-        for i in range(n_steps):
-            k_flow, sub = jax.random.split(k_flow)
-            t = jnp.full((num,), t0 + i * h, jnp.float32)
-            step = min(h, 1.0 - (t0 + i * h))
-            x = self._refine(self.flow_params, sub, x, t, jnp.asarray(step, jnp.float32))
-            nfe += 1
+        x = self._refine_loop(
+            self.flow_params, keys, x, jnp.asarray(ts), jnp.asarray(hs))
         x = jax.block_until_ready(x)
         t_flow = time.time() - t_flow0
+        nfe = n_steps
 
-        assert guarantees.check_guarantee(self.cold_nfe, t0, nfe)
+        guarantees.require_guarantee(self.cold_nfe, t0, nfe)
         per_nfe = t_flow / max(nfe, 1)
         report = {
             "nfe": nfe,
             "cold_nfe": self.cold_nfe,
             "draft_time_s": t_draft,
             "flow_time_s": t_flow,
+            "per_nfe_s": per_nfe,
             "speedup_report": guarantees.speedup_report(
                 self.cold_nfe, t0, draft_cost_ratio=t_draft / max(per_nfe, 1e-9)
             ),

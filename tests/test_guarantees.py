@@ -3,9 +3,18 @@
 import math
 
 import pytest
-from hypothesis import given, settings, strategies as st
 
-from repro.core.guarantees import check_guarantee, speedup_report, warm_nfe
+# optional dev dep (pip install -e .[dev]) — collection must never hard-error
+try:
+    from hypothesis import given, settings, strategies as st
+    HAS_HYPOTHESIS = True
+except ModuleNotFoundError:
+    HAS_HYPOTHESIS = False
+
+from repro.core.guarantees import (
+    GuaranteeViolation, check_guarantee, require_guarantee, speedup_report,
+    warm_nfe,
+)
 
 
 def test_paper_examples():
@@ -19,13 +28,15 @@ def test_paper_examples():
     assert warm_nfe(20, 0.5) == 10
 
 
-@given(n=st.integers(1, 4096), t0=st.floats(0.0, 0.99))
-@settings(max_examples=200, deadline=None)
-def test_warm_nfe_bounds(n, t0):
-    w = warm_nfe(n, t0)
-    assert 1 <= w <= n
-    # speed-up is at least the guaranteed factor, up to ceil rounding
-    assert w <= math.ceil(n * (1 - t0) + 1e-9)
+if HAS_HYPOTHESIS:
+
+    @given(n=st.integers(1, 4096), t0=st.floats(0.0, 0.99))
+    @settings(max_examples=200, deadline=None)
+    def test_warm_nfe_bounds(n, t0):
+        w = warm_nfe(n, t0)
+        assert 1 <= w <= n
+        # speed-up is at least the guaranteed factor, up to ceil rounding
+        assert w <= math.ceil(n * (1 - t0) + 1e-9)
 
 
 def test_speedup_report_accounting():
@@ -40,3 +51,11 @@ def test_speedup_report_accounting():
 def test_check_guarantee():
     assert check_guarantee(1024, 0.8, 205)
     assert not check_guarantee(1024, 0.8, 204)
+
+
+def test_require_guarantee_raises():
+    require_guarantee(1024, 0.8, 205)  # holds -> no raise
+    with pytest.raises(GuaranteeViolation, match="observed 204"):
+        require_guarantee(1024, 0.8, 204)
+    # survives python -O (a real exception, not an assert)
+    assert issubclass(GuaranteeViolation, RuntimeError)

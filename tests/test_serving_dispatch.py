@@ -1,0 +1,128 @@
+"""WarmStartServer / EulerSampler single-dispatch refine loops.
+
+The whole flow stage must be ONE compiled call (a jitted lax.scan over a
+precomputed (keys, t, h) schedule), not one dispatch per Euler step.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.guarantees import GuaranteeViolation
+from repro.core.paths import WarmStartPath
+from repro.core.sampler import EulerSampler, refine_schedule
+from repro.serving.engine import WarmStartServer
+
+
+class ToyFlow:
+    """Minimal dfm model: constant peaked logits; counts python traces."""
+
+    def __init__(self, vocab=11, mode=2):
+        self.vocab = vocab
+        self.mode = mode
+        self.trace_calls = []
+
+    def dfm_apply(self, params, x, t, extras=None):
+        self.trace_calls.append(1)
+        return jnp.zeros(x.shape + (self.vocab,)).at[..., self.mode].set(30.0)
+
+
+def make_server(**kw):
+    flow = ToyFlow()
+    server = WarmStartServer(
+        flow_model=flow, flow_cfg=None, flow_params={},
+        draft_generate=lambda rng, num: jnp.zeros((num, 4), jnp.int32),
+        path=WarmStartPath(t0=kw.pop("t0", 0.8)),
+        cold_nfe=kw.pop("cold_nfe", 20), **kw,
+    )
+    return server, flow
+
+
+def test_serve_single_dispatch_and_single_trace():
+    server, flow = make_server()
+    calls = []
+    orig = server._refine_loop
+
+    def counting_loop(*a, **k):
+        calls.append(1)
+        return orig(*a, **k)
+
+    server._refine_loop = counting_loop
+    out, report = server.serve(jax.random.key(0), 8)
+    # ONE compiled call for the whole refine loop ...
+    assert len(calls) == 1
+    # ... whose scan body traced the backbone exactly once
+    assert len(flow.trace_calls) == 1
+    assert report["nfe"] == 4            # ceil(20 * (1 - 0.8))
+    assert out.shape == (8, 4)
+    # last step has a = 1 -> pure p1 draw from peaked logits
+    assert bool((out == flow.mode).all())
+
+
+def test_serve_report_fields_and_guarantee():
+    server, _ = make_server(t0=0.5, cold_nfe=16)
+    out, report = server.serve(jax.random.key(1), 4)
+    assert report["nfe"] == 8
+    assert report["per_nfe_s"] >= 0.0
+    assert report["flow_time_s"] == pytest.approx(
+        report["per_nfe_s"] * report["nfe"])
+    assert report["speedup_report"].guaranteed_factor == pytest.approx(2.0)
+
+
+def test_serve_reuses_compiled_loop_across_batches():
+    server, flow = make_server()
+    server.serve(jax.random.key(0), 8)
+    n_traces = len(flow.trace_calls)
+    server.serve(jax.random.key(1), 8)   # same shapes -> no retrace
+    assert len(flow.trace_calls) == n_traces
+
+
+def test_guarantee_violation_raised_not_asserted():
+    server, _ = make_server()
+    # force a wrong observed NFE through the guarantee gate
+    with pytest.raises(GuaranteeViolation):
+        from repro.core import guarantees
+        guarantees.require_guarantee(server.cold_nfe, server.path.t0, 3)
+
+
+def test_refine_schedule_partial_final_step():
+    # cold_nfe=3 over t0=0.5: steps at t=0.5, 0.8333.. with the last step
+    # truncated to land exactly on t=1
+    ts, hs = refine_schedule(0.5, 1.0 / 3.0, 2)
+    np.testing.assert_allclose(ts, [0.5, 0.5 + 1.0 / 3.0], rtol=1e-6)
+    assert hs[0] == pytest.approx(1.0 / 3.0)
+    assert ts[-1] + hs[-1] == pytest.approx(1.0)
+
+
+def test_sampler_single_dispatch_via_trace_count():
+    """EulerSampler.sample compiles the whole loop: the model_fn python
+    body runs once at trace time, and not at all on a second call."""
+    path = WarmStartPath(t0=0.8)
+    traces = []
+
+    def model_fn(x, t):
+        traces.append(1)
+        return jnp.zeros(x.shape + (7,)).at[..., 3].set(25.0)
+
+    smp = EulerSampler(path=path, num_steps=20)
+    x0 = jnp.zeros((4, 6), jnp.int32)
+    x, stats = smp.sample(jax.random.key(0), model_fn, x0)
+    assert len(traces) == 1 and stats.nfe == 4
+    smp.sample(jax.random.key(1), model_fn, x0)   # cache hit: no retrace
+    assert len(traces) == 1
+    assert bool((x == 3).all())
+
+
+def test_sampler_jit_off_matches_semantics():
+    path = WarmStartPath(t0=0.5)
+
+    def model_fn(x, t):
+        return jnp.zeros(x.shape + (5,)).at[..., 1].set(25.0)
+
+    x0 = jnp.zeros((8, 3), jnp.int32)
+    smp_j = EulerSampler(path=path, num_steps=8)
+    smp_e = EulerSampler(path=path, num_steps=8, jit=False)
+    xj, _ = smp_j.sample(jax.random.key(0), model_fn, x0)
+    xe, _ = smp_e.sample(jax.random.key(0), model_fn, x0)
+    np.testing.assert_array_equal(np.asarray(xj), np.asarray(xe))
