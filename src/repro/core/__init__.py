@@ -7,12 +7,17 @@ from repro.core.sampler import (
     EulerSampler,
     euler_step_probs,
     categorical_from_probs,
+    categorical_from_probs_rows,
+    make_euler_one_step,
+    make_euler_one_step_rows,
     make_refine_step,
+    refine_loop_inputs,
     refine_schedule,
+    scan_refine_loop,
 )
 from repro.core.guarantees import (
-    GuaranteeViolation, check_guarantee, require_guarantee, speedup_report,
-    warm_nfe,
+    GuaranteeViolation, check_guarantee, require_bucket_guarantee,
+    require_guarantee, speedup_report, warm_nfe,
 )
 from repro.core.coupling import (
     IndependentCoupling,
@@ -26,10 +31,12 @@ from repro.core.pipeline import WarmStartPipeline
 __all__ = [
     "WarmStartPath", "cold_start_path", "uniform_noise", "mask_noise",
     "dfm_cross_entropy", "ws_dfm_loss",
-    "EulerSampler", "euler_step_probs", "categorical_from_probs", "make_refine_step",
-    "refine_schedule",
+    "EulerSampler", "euler_step_probs", "categorical_from_probs",
+    "categorical_from_probs_rows", "make_euler_one_step",
+    "make_euler_one_step_rows", "make_refine_step", "refine_loop_inputs",
+    "refine_schedule", "scan_refine_loop",
     "warm_nfe", "speedup_report", "check_guarantee", "require_guarantee",
-    "GuaranteeViolation",
+    "require_bucket_guarantee", "GuaranteeViolation",
     "IndependentCoupling", "KNNRefinementCoupling", "OracleRefinementCoupling", "pair_iterator",
     "DraftModel", "CorruptionDraft", "HistogramDraft", "ARDraft",
     "WarmStartPipeline",

@@ -89,3 +89,17 @@ def require_guarantee(cold_nfe: int, t0: float, observed_nfe: int) -> None:
             f"steps, guaranteed {warm_nfe(cold_nfe, t0)} "
             f"(cold_nfe={cold_nfe}, t0={t0})"
         )
+
+
+def require_bucket_guarantee(
+    cold_nfe: int, t0: float, observed_nfe: int, *, bucket_len: int, rows: int
+) -> None:
+    """Per-micro-batch guarantee gate for the continuous-batching
+    scheduler: same invariant as :func:`require_guarantee`, with the
+    bucket identity attached so a violation names the offending batch."""
+    try:
+        require_guarantee(cold_nfe, t0, observed_nfe)
+    except GuaranteeViolation as e:
+        raise GuaranteeViolation(
+            f"[micro-batch bucket_len={bucket_len} rows={rows}] {e}"
+        ) from None

@@ -70,6 +70,36 @@ def categorical_from_probs(rng: jax.Array, probs: jax.Array) -> jax.Array:
     return jnp.argmax(jnp.log(jnp.maximum(probs, 1e-30)) + g, axis=-1).astype(jnp.int32)
 
 
+def categorical_from_probs_rows(keys: jax.Array, probs: jax.Array) -> jax.Array:
+    """Row-keyed Gumbel-max: ``keys (B,)`` typed PRNG keys, ``probs (B, ...)``.
+
+    Row ``b``'s draw depends only on ``keys[b]`` — the noise for a request
+    is a function of its own key, never of its neighbours or its position
+    in the batch. This is what makes the continuous-batching scheduler's
+    outputs independent of micro-batch composition.
+    """
+    g = jax.vmap(
+        lambda k, p: jax.random.gumbel(k, p.shape, dtype=jnp.float32)
+    )(keys, probs)
+    return jnp.argmax(jnp.log(jnp.maximum(probs, 1e-30)) + g, axis=-1).astype(jnp.int32)
+
+
+def make_euler_one_step_rows(path: "WarmStartPath", *, temperature: float = 1.0):
+    """Row-keyed variant of :func:`make_euler_one_step`.
+
+    ``one_step(keys (B,), logits, x_t, t (B,), h) -> x_next`` — same
+    probability update, but the categorical draw is keyed per row so a
+    request's trajectory is invariant to micro-batch packing. (The fused
+    Pallas ``step_fn`` is single-key and is not supported here.)
+    """
+
+    def one_step(keys, logits, x_t, t, h):
+        probs = euler_step_probs(logits, x_t, t, h, path, temperature=temperature)
+        return categorical_from_probs_rows(keys, probs)
+
+    return one_step
+
+
 def refine_schedule(t0: float, cold_nfe_h: float, n: int):
     """Per-step ``(t, h)`` arrays for the warm-start Euler loop.
 
@@ -80,6 +110,86 @@ def refine_schedule(t0: float, cold_nfe_h: float, n: int):
     ts = (t0 + np.arange(n, dtype=np.float64) * cold_nfe_h).astype(np.float32)
     hs = np.minimum(np.float32(cold_nfe_h), np.float32(1.0) - ts).astype(np.float32)
     return ts, hs
+
+
+def make_euler_one_step(
+    path: WarmStartPath,
+    *,
+    temperature: float = 1.0,
+    step_fn: Optional[Callable] = None,
+):
+    """The single Euler update ``(rng, logits, x_t, t, h) -> x_next``.
+
+    This is THE per-step body shared by :class:`EulerSampler`,
+    :func:`make_refine_step`, the serving engine and the scheduler —
+    probability update + categorical draw, or the fused Pallas kernel
+    when ``step_fn`` is given.
+    """
+    if step_fn is not None:
+        return step_fn
+
+    def one_step(rng, logits, x_t, t, h):
+        probs = euler_step_probs(logits, x_t, t, h, path, temperature=temperature)
+        return categorical_from_probs(rng, probs)
+
+    return one_step
+
+
+def refine_loop_inputs(rng: jax.Array, t0: float, h: float, n: int):
+    """Device-ready ``(keys, ts, hs)`` scan inputs for an n-step refine.
+
+    The ONE way every consumer builds the schedule: the key is split once
+    host-side (one key per step, shared across the batch) and the (t, h)
+    schedule comes from :func:`refine_schedule`.
+    """
+    ts, hs = refine_schedule(t0, h, n)
+    keys = jax.random.split(rng, n)
+    return keys, jnp.asarray(ts), jnp.asarray(hs)
+
+
+def scan_refine_loop(
+    logits_fn: Callable[[jax.Array, jax.Array], jax.Array],
+    one_step: Callable,
+    x_init: jax.Array,
+    keys: jax.Array,
+    ts: jax.Array,
+    hs: jax.Array,
+    *,
+    argmax_final: bool = False,
+):
+    """The whole refine loop as ONE ``lax.scan`` over ``(keys, t, h)``.
+
+    Shared by ``EulerSampler.sample``, ``WarmStartServer`` and the
+    continuous-batching scheduler — there is exactly one scan body in the
+    codebase. ``keys`` may carry any trailing shape (a single key per
+    step, or a per-row ``(B,)`` key batch per step for request-seeded
+    serving); ``one_step`` must match.
+
+    Args:
+      logits_fn: ``(tokens (B,N), t (B,)) -> logits (B,N,V)``.
+      one_step: ``(key, logits, x, t (B,), h) -> x_next`` (see
+        :func:`make_euler_one_step`).
+      x_init: (B, N) int32 start state at ``ts[0]``.
+      keys / ts / hs: leading-``n`` scan inputs (see
+        :func:`refine_loop_inputs`).
+      argmax_final: replace the last stochastic step with argmax(p1).
+    """
+    b = x_init.shape[0]
+    n = ts.shape[0]
+    last = np.arange(n) == n - 1
+
+    def body(x, inp):
+        key, t, step, is_last = inp
+        tb = jnp.full((b,), t, jnp.float32)
+        logits = logits_fn(x, tb)
+        x_next = one_step(key, logits, x, tb, step)
+        if argmax_final:
+            x_det = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+            x_next = jnp.where(is_last, x_det, x_next)
+        return x_next, None
+
+    x, _ = jax.lax.scan(body, x_init, (keys, ts, hs, jnp.asarray(last)))
+    return x
 
 
 @dataclasses.dataclass(frozen=True)
@@ -126,35 +236,16 @@ class EulerSampler:
         """Guaranteed function-evaluation count (see guarantees.py)."""
         return self.path.num_steps(self.h)
 
-    def _one_step(self, rng, logits, x_t, t, h):
-        if self.step_fn is not None:
-            return self.step_fn(rng, logits, x_t, t, h)
-        probs = euler_step_probs(logits, x_t, t, h, self.path, temperature=self.temperature)
-        return categorical_from_probs(rng, probs)
-
     def _scan_loop(self, model_fn, rng, x_init):
         """The whole refine loop as one lax.scan over (keys, t, h)."""
-        n = self.nfe
-        b = x_init.shape[0]
-        ts, hs = refine_schedule(self.path.t0, self.h, n)
-        keys = jax.random.split(rng, n)
-        last = np.arange(n) == n - 1
-
-        def body(x, inp):
-            key, t, step, is_last = inp
-            tb = jnp.full((b,), t, jnp.float32)
-            logits = model_fn(x, tb)
-            x_next = self._one_step(key, logits, x, tb, step)
-            if self.argmax_final:
-                x_det = jnp.argmax(logits, axis=-1).astype(jnp.int32)
-                x_next = jnp.where(is_last, x_det, x_next)
-            return x_next, None
-
-        x, _ = jax.lax.scan(
-            body, x_init,
-            (keys, jnp.asarray(ts), jnp.asarray(hs), jnp.asarray(last)),
+        keys, ts, hs = refine_loop_inputs(rng, self.path.t0, self.h, self.nfe)
+        one_step = make_euler_one_step(
+            self.path, temperature=self.temperature, step_fn=self.step_fn
         )
-        return x
+        return scan_refine_loop(
+            model_fn, one_step, x_init, keys, ts, hs,
+            argmax_final=self.argmax_final,
+        )
 
     def sample(
         self,
@@ -202,11 +293,10 @@ def make_refine_step(
     unit the `dfm_refine` serving path lowers for the dry-run.
     """
 
+    one_step = make_euler_one_step(path, temperature=temperature, step_fn=step_fn)
+
     def refine_step(params, rng, x_t, t, h):
         logits = apply_fn(params, x_t, t)
-        if step_fn is not None:
-            return step_fn(rng, logits, x_t, t, h)
-        probs = euler_step_probs(logits, x_t, t, h, path, temperature=temperature)
-        return categorical_from_probs(rng, probs)
+        return one_step(rng, logits, x_t, t, h)
 
     return refine_step

@@ -215,3 +215,31 @@ def param_shardings(params, rules: Dict, mesh: Mesh):
     specs = param_specs(params, rules, mesh)
     return jax.tree.map(lambda s: NamedSharding(mesh, s), specs,
                         is_leaf=lambda x: isinstance(x, P))
+
+
+# ---------------------------------------------------------------------------
+# serving-side helpers (used by the refine dispatch of the scheduler)
+# ---------------------------------------------------------------------------
+
+def batch_sharding(mesh: Mesh, ndim: int, rules: Optional[Dict] = None) -> NamedSharding:
+    """NamedSharding for a ``(B, ...)`` serving activation: the leading
+    dim shards along the logical ``batch`` axis, the rest replicated."""
+    rules = SERVE_RULES if rules is None else rules
+    spec = logical_to_spec(("batch",) + (None,) * (ndim - 1), rules, mesh)
+    return NamedSharding(mesh, spec)
+
+
+def batch_axis_size(mesh: Mesh, rules: Optional[Dict] = None) -> int:
+    """Total shard count along the logical ``batch`` axis — the row
+    multiple that padded refine micro-batches must divide."""
+    rules = SERVE_RULES if rules is None else rules
+    spec = logical_to_spec(("batch",), rules, mesh)
+    axes = spec[0] if len(spec) > 0 else None
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        axes = (axes,)
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    return n

@@ -18,7 +18,8 @@ from repro.configs.dfm_dit import tiny_config
 from repro.core import CorruptionDraft, KNNRefinementCoupling, WarmStartPath, pair_iterator
 from repro.data import SyntheticCorpus, TEXT_VOCAB, decode
 from repro.models import LSTMConfig, LSTMModel, build_model
-from repro.serving import WarmStartServer
+from repro.optim import AdamW
+from repro.serving import WarmStartScheduler, WarmStartServer, batch_keyed_draft
 from repro.training import Trainer
 
 
@@ -33,6 +34,10 @@ def main():
     ap.add_argument("--fused-step", action="store_true",
                     help="use the streamed Pallas ws_step kernel for the "
                          "per-step sampling (auto-selects TPU/interpret)")
+    ap.add_argument("--scheduler", action="store_true",
+                    help="serve a mixed-size request stream through the "
+                         "continuous-batching WarmStartScheduler instead of "
+                         "the one-shot WarmStartServer")
     args = ap.parse_args()
 
     cfg = tiny_config(vocab_size=TEXT_VOCAB, seq_len=args.seq_len)
@@ -45,7 +50,7 @@ def main():
     lstm_cfg = LSTMConfig(vocab_size=TEXT_VOCAB, hidden=128, num_layers=1, embed_dim=64)
     lstm = LSTMModel(lstm_cfg)
     lparams = lstm.init(jax.random.key(7))
-    lopt = __import__("repro.optim", fromlist=["AdamW"]).AdamW(learning_rate=1e-2)
+    lopt = AdamW(learning_rate=1e-2)
     lstate = lopt.init(lparams)
     lgrad = jax.jit(jax.value_and_grad(lstm.loss))
     for i in range(args.train_steps):
@@ -64,6 +69,38 @@ def main():
     state = trainer.init_state(jax.random.key(0))
     state = trainer.fit(state, pair_iterator(src, tgt, 32, rng),
                         log_fn=lambda i, m: print(f"  flow step {i}: {m['ce']:.3f}"))
+
+    if args.scheduler:
+        # largest pow2 bucket the flow model's positions cover; min_bucket
+        # must not exceed it or every submit would overflow the bucket cap
+        max_bucket = 1 << (args.seq_len.bit_length() - 1)
+        sched = WarmStartScheduler(
+            flow_model=model, flow_params=state.params,
+            draft_fn=batch_keyed_draft(
+                lambda key, num, L: lstm.generate(lparams, key, num, L)),
+            cold_nfe=args.cold_nfe, default_t0=args.t0,
+            min_bucket=min(8, max_bucket), max_bucket=max_bucket,
+        )
+        print("note: LSTM draft is batch-keyed (batch_keyed_draft) — outputs "
+              "are reproducible for a fixed packing but not invariant to "
+              "micro-batch composition; use a row-keyed draft_fn for "
+              "request-seeded serving")
+        rng_sizes = np.random.default_rng(args.seed + 1)
+        for i in range(args.num):
+            sched.submit(
+                seq_len=int(rng_sizes.integers(max_bucket // 2, max_bucket + 1)),
+                num_samples=1, seed=100 + i)
+        results, rep = sched.run()
+        print(f"\nscheduler: {rep['num_requests']} requests in "
+              f"{rep['num_micro_batches']} micro-batches, "
+              f"{rep['requests_per_s']:.2f} req/s, "
+              f"overlap_eff={rep['overlap_efficiency']:.2f}, "
+              f"jit cache {rep['jit_cache']}")
+        for rid in sorted(results)[:4]:
+            r = results[rid]
+            print(f"[{rid}] nfe={r.nfe} bucket={r.bucket_len} "
+                  f"{decode(np.asarray(r.tokens[0]))}")
+        return
 
     gen = jax.jit(lambda rng, num: lstm.generate(lparams, rng, num, args.seq_len),
                   static_argnums=1)

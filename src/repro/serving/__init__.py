@@ -1,8 +1,18 @@
+from repro.serving.batcher import (
+    MicroBatch, RowSpan, ServeRequest, bucket_seq_len, pack_requests, pad_rows,
+)
+from repro.serving.drafts import batch_keyed_draft, corruption_draft, uniform_draft
 from repro.serving.engine import (
     WarmStartServer, ar_generate, make_prefill_fn, make_refine_step_fn,
     make_serve_step,
 )
+from repro.serving.scheduler import RequestResult, WarmStartScheduler
+
 __all__ = [
     "WarmStartServer", "ar_generate", "make_prefill_fn", "make_refine_step_fn",
     "make_serve_step",
+    "ServeRequest", "MicroBatch", "RowSpan", "bucket_seq_len", "pad_rows",
+    "pack_requests",
+    "WarmStartScheduler", "RequestResult",
+    "uniform_draft", "corruption_draft", "batch_keyed_draft",
 ]

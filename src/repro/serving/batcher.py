@@ -1,0 +1,193 @@
+"""Request bucketing for the continuous-batching warm-start scheduler.
+
+Individual requests (seq_len, num_samples, seed, optional t0 override)
+are grouped into shape-padded micro-batches:
+
+  * the sequence dim is rounded up to a pow2 *bucket* (min ``min_bucket``)
+    so the number of distinct compiled shapes is O(log max_seq);
+  * rows (samples) are packed FIFO up to ``max_rows`` per micro-batch and
+    the row count padded up to a multiple of ``row_quantum`` so the
+    refine loop compiles for at most ``max_rows / row_quantum`` row
+    shapes per bucket while wasting < ``row_quantum`` rows of padding;
+  * requests with different effective t0 land in different micro-batches
+    (a micro-batch has ONE (ts, hs) schedule); the jitted refine loop is
+    keyed on (bucket_len, padded_rows, n_steps) though, and the schedule
+    enters as a dynamic input, so t0 values in the same warm-NFE class
+    still share one compiled fn.
+
+Determinism contract: everything a request's output depends on — its
+draft/refine PRNG keys (derived from ``seed`` per *sample row*), its
+bucket length (a function of its own seq_len), and its NFE schedule — is
+a function of the request alone, never of its neighbours or its position
+in the packing order.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core import guarantees
+
+# fold_in tags separating the draft-stage and flow-stage key streams
+DRAFT_STREAM = 0
+FLOW_STREAM = 1
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeRequest:
+    """One user request to the warm-start serving engine."""
+
+    request_id: int
+    seq_len: int
+    num_samples: int = 1
+    seed: int = 0
+    t0: Optional[float] = None      # None -> engine default
+
+    def __post_init__(self):
+        if self.seq_len < 1:
+            raise ValueError(f"seq_len must be >= 1, got {self.seq_len}")
+        if self.num_samples < 1:
+            raise ValueError(f"num_samples must be >= 1, got {self.num_samples}")
+        if not (0 <= self.seed < 2 ** 31):
+            # key streams are derived from int32 device arrays; reject
+            # seeds that would silently truncate/collide mod 2**32
+            raise ValueError(f"seed must lie in [0, 2**31), got {self.seed}")
+        if self.t0 is not None and not (0.0 <= self.t0 < 1.0):
+            raise ValueError(f"t0 override must lie in [0, 1), got {self.t0}")
+
+
+@dataclasses.dataclass(frozen=True)
+class RowSpan:
+    """Where a request's sample rows live inside a micro-batch."""
+
+    request: ServeRequest
+    row_offset: int                 # first row in the padded batch
+
+    @property
+    def rows(self) -> int:
+        return self.request.num_samples
+
+
+@dataclasses.dataclass(frozen=True)
+class MicroBatch:
+    """A shape-padded unit of work for the draft/refine pipeline."""
+
+    bucket_len: int                 # padded (pow2) sequence length
+    t0: float                       # effective warm-start time
+    n_steps: int                    # warm NFE for (cold_nfe, t0)
+    spans: Tuple[RowSpan, ...]
+    padded_rows: int                # quantum-padded row count
+
+    @property
+    def rows(self) -> int:
+        """Real (non-padding) rows."""
+        return sum(s.rows for s in self.spans)
+
+    @property
+    def row_mask(self) -> np.ndarray:
+        """(padded_rows,) bool — True on real rows, False on padding."""
+        mask = np.zeros((self.padded_rows,), dtype=bool)
+        for s in self.spans:
+            mask[s.row_offset:s.row_offset + s.rows] = True
+        return mask
+
+    @property
+    def compile_key(self) -> Tuple[int, int, int]:
+        """The jit-cache key: everything shape- or trace-relevant."""
+        return (self.bucket_len, self.padded_rows, self.n_steps)
+
+
+def bucket_seq_len(seq_len: int, *, min_bucket: int = 8,
+                   max_bucket: Optional[int] = None) -> int:
+    """Round ``seq_len`` up to the pow2 bucket it is served at."""
+    if seq_len < 1:
+        raise ValueError(f"seq_len must be >= 1, got {seq_len}")
+    b = max(min_bucket, 1 << (seq_len - 1).bit_length())
+    if max_bucket is not None and b > max_bucket:
+        raise ValueError(
+            f"seq_len {seq_len} rounds to bucket {b} > max_bucket {max_bucket}"
+        )
+    return b
+
+
+def pad_rows(rows: int, quantum: int = 4) -> int:
+    """Round a micro-batch row count up to a multiple of ``quantum``.
+
+    A small quantum keeps padding waste under ``quantum - 1`` rows per
+    micro-batch while still bounding the compiled row shapes per bucket
+    to ``max_rows / quantum``.
+    """
+    if rows < 1:
+        raise ValueError(f"rows must be >= 1, got {rows}")
+    if quantum < 1:
+        raise ValueError(f"quantum must be >= 1, got {quantum}")
+    return -(-rows // quantum) * quantum
+
+
+def pack_requests(
+    requests: Sequence[ServeRequest],
+    *,
+    cold_nfe: int,
+    default_t0: float,
+    max_rows: int = 32,
+    min_bucket: int = 8,
+    max_bucket: Optional[int] = None,
+    row_quantum: int = 4,
+    row_multiple: int = 1,
+) -> List[MicroBatch]:
+    """Group requests into micro-batches.
+
+    FIFO within each (bucket_len, n_steps, t0) group: arrival order is
+    preserved inside a group so early requests are not starved by later
+    small ones, and the packing is deterministic. Padded row counts are
+    multiples of ``lcm(row_quantum, row_multiple)`` — the scheduler sets
+    ``row_multiple`` to the mesh batch-axis size so sharded refine
+    batches always divide the data axis.
+    """
+    unit = math.lcm(row_quantum, row_multiple)
+    if unit > max_rows:
+        raise ValueError(
+            f"lcm(row_quantum={row_quantum}, row_multiple={row_multiple}) = "
+            f"{unit} exceeds max_rows {max_rows}"
+        )
+    groups: dict = {}
+    for req in requests:
+        if pad_rows(req.num_samples, unit) > max_rows:
+            raise ValueError(
+                f"request {req.request_id}: num_samples {req.num_samples} "
+                f"pads to {pad_rows(req.num_samples, unit)} rows > max_rows "
+                f"{max_rows} (split the request upstream)"
+            )
+        t0 = default_t0 if req.t0 is None else req.t0
+        n_steps = guarantees.warm_nfe(cold_nfe, t0)
+        blen = bucket_seq_len(req.seq_len, min_bucket=min_bucket,
+                              max_bucket=max_bucket)
+        groups.setdefault((blen, n_steps, t0), []).append(req)
+
+    batches: List[MicroBatch] = []
+    for (blen, n_steps, t0), reqs in groups.items():
+        spans: List[RowSpan] = []
+        used = 0
+        for req in reqs:
+            # flush BEFORE the padded row count would exceed max_rows, so
+            # padded_rows (the actual dispatch size) respects the cap
+            if used and pad_rows(used + req.num_samples, unit) > max_rows:
+                batches.append(MicroBatch(
+                    bucket_len=blen, t0=t0, n_steps=n_steps,
+                    spans=tuple(spans),
+                    padded_rows=pad_rows(used, unit),
+                ))
+                spans, used = [], 0
+            spans.append(RowSpan(request=req, row_offset=used))
+            used += req.num_samples
+        if spans:
+            batches.append(MicroBatch(
+                bucket_len=blen, t0=t0, n_steps=n_steps,
+                spans=tuple(spans),
+                padded_rows=pad_rows(used, unit),
+            ))
+    return batches

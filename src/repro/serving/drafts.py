@@ -1,0 +1,72 @@
+"""Row-keyed draft-stage generators for the continuous-batching scheduler.
+
+The scheduler's draft contract is ``draft_fn(keys (B,) typed PRNG keys,
+seq_len: int) -> tokens (B, seq_len) int32`` where row ``b`` must depend
+only on ``keys[b]`` — that is what makes a request's output independent
+of which micro-batch it was packed into. These helpers build conforming
+draft functions; batch-keyed drafts (e.g. an AR model that takes one key
+for the whole batch) can be adapted with :func:`batch_keyed_draft`, at
+the cost of the per-request determinism guarantee.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+
+def uniform_draft(vocab_size: int) -> Callable:
+    """Uniform-noise draft (the cold-start initial distribution)."""
+
+    @partial(jax.jit, static_argnums=1)
+    def draft(keys, seq_len):
+        return jax.vmap(
+            lambda k: jax.random.randint(k, (seq_len,), 0, vocab_size, jnp.int32)
+        )(keys)
+
+    return draft
+
+
+def corruption_draft(data, vocab_size: int, corruption: float = 0.25) -> Callable:
+    """Corpus-row + token-corruption draft (the demo stand-in for a
+    lightweight AR draft model). ``data`` must be at least as long in the
+    sequence dim as the largest bucket served."""
+    data = jnp.asarray(data, jnp.int32)
+
+    @partial(jax.jit, static_argnums=1)
+    def draft(keys, seq_len):
+        if seq_len > data.shape[1]:
+            raise ValueError(
+                f"bucket seq_len {seq_len} exceeds draft corpus length "
+                f"{data.shape[1]}"
+            )
+
+        def one(k):
+            k_row, k_noise, k_flip = jax.random.split(k, 3)
+            idx = jax.random.randint(k_row, (), 0, data.shape[0])
+            row = jax.lax.dynamic_slice_in_dim(data[idx], 0, seq_len)
+            noise = jax.random.randint(k_noise, (seq_len,), 0, vocab_size)
+            flip = jax.random.uniform(k_flip, (seq_len,)) < corruption
+            return jnp.where(flip, noise, row).astype(jnp.int32)
+
+        return jax.vmap(one)(keys)
+
+    return draft
+
+
+def batch_keyed_draft(generate: Callable) -> Callable:
+    """Adapt a batch-keyed generator ``(key, num, seq_len) -> (num, L)``
+    (e.g. ``LSTMModel.generate``) to the row-keyed contract.
+
+    The whole batch is keyed off the first row's key, so outputs ARE
+    deterministic for a fixed packing but NOT invariant to micro-batch
+    composition — fine for demos, wrong for request-seeded serving.
+    """
+
+    def draft(keys, seq_len):
+        return generate(keys[0], keys.shape[0], seq_len)
+
+    return draft

@@ -15,13 +15,12 @@ from typing import Any, Callable, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.core import guarantees
 from repro.core.paths import WarmStartPath
 from repro.core.sampler import (
-    categorical_from_probs, euler_step_probs, refine_schedule,
+    make_euler_one_step, refine_loop_inputs, scan_refine_loop,
 )
 
 
@@ -80,12 +79,11 @@ def make_refine_step_fn(model, cfg: ModelConfig, path: WarmStartPath, *,
     """One DFM Euler refine step over the full sequence — the flow-stage
     unit of the warm-start server."""
 
+    one_step = make_euler_one_step(path, temperature=temperature, step_fn=step_fn)
+
     def refine_step(params, rng, x_t, t, h):
         logits = model.dfm_apply(params, x_t, t, extras=extras)
-        if step_fn is not None:
-            return step_fn(rng, logits, x_t, t, h)
-        probs = euler_step_probs(logits, x_t, t, h, path, temperature=temperature)
-        return categorical_from_probs(rng, probs)
+        return one_step(rng, logits, x_t, t, h)
 
     return refine_step
 
@@ -113,40 +111,32 @@ class WarmStartServer:
     step_fn: Optional[Callable] = None
 
     def __post_init__(self):
-        step = make_refine_step_fn(
-            self.flow_model, self.flow_cfg, self.path,
-            temperature=self.temperature, step_fn=self.step_fn,
+        one_step = make_euler_one_step(
+            self.path, temperature=self.temperature, step_fn=self.step_fn,
         )
 
         def loop(params, keys, x, ts, hs):
-            def body(x, inp):
-                key, t, h = inp
-                tb = jnp.full((x.shape[0],), t, jnp.float32)
-                return step(params, key, x, tb, h), None
-
-            x, _ = jax.lax.scan(body, x, (keys, ts, hs))
-            return x
+            logits_fn = lambda xt, tb: self.flow_model.dfm_apply(params, xt, tb)
+            return scan_refine_loop(logits_fn, one_step, x, keys, ts, hs)
 
         donate = () if jax.default_backend() == "cpu" else (2,)
         self._refine_loop = jax.jit(loop, donate_argnums=donate)
 
     def serve(self, rng: jax.Array, num: int) -> Tuple[jax.Array, dict]:
         k_draft, k_flow = jax.random.split(rng)
-        t_draft0 = time.time()
+        t_draft0 = time.perf_counter()
         x = self.draft_generate(k_draft, num)
         x = jax.block_until_ready(x)
-        t_draft = time.time() - t_draft0
+        t_draft = time.perf_counter() - t_draft0
 
         t0 = self.path.t0
         n_steps = guarantees.warm_nfe(self.cold_nfe, t0)
-        ts, hs = refine_schedule(t0, 1.0 / self.cold_nfe, n_steps)
-        keys = jax.random.split(k_flow, n_steps)
+        keys, ts, hs = refine_loop_inputs(k_flow, t0, 1.0 / self.cold_nfe, n_steps)
 
-        t_flow0 = time.time()
-        x = self._refine_loop(
-            self.flow_params, keys, x, jnp.asarray(ts), jnp.asarray(hs))
+        t_flow0 = time.perf_counter()
+        x = self._refine_loop(self.flow_params, keys, x, ts, hs)
         x = jax.block_until_ready(x)
-        t_flow = time.time() - t_flow0
+        t_flow = time.perf_counter() - t_flow0
         nfe = n_steps
 
         guarantees.require_guarantee(self.cold_nfe, t0, nfe)

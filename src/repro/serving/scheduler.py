@@ -1,0 +1,341 @@
+"""Continuous-batching warm-start serving engine.
+
+Request-level front end over the paper's two-stage pipeline:
+
+    queue -> pow2 seq buckets -> padded micro-batches
+          -> [draft stage | flow refine stage]  (overlapped)
+          -> per-request slices + guarantee reports
+
+The two stages use *different* models (a lightweight draft generator and
+the DFM flow backbone), so while the flow model refines micro-batch k on
+the device, a host worker thread derives keys, dispatches and blocks on
+the draft for micro-batch k+1 — the draft stage's host+device time hides
+behind the refine stage instead of serialising with it.
+
+The refine dispatch is ONE jitted ``lax.scan`` per micro-batch (the
+shared :func:`repro.core.sampler.scan_refine_loop` body), compiled once
+per ``(bucket_len, padded_rows, n_steps)`` — requests never retrace on
+their own shapes. With a mesh, the refine runs sharded: weights TP over
+``model`` (``SERVE_RULES`` via ``param_shardings``), batches over
+``data``; without a mesh the single-device path is byte-for-byte the
+plain jit.
+
+Sampling is row-keyed (:func:`make_euler_one_step_rows`): every sample
+row's PRNG stream is derived from its request's seed, so a request's
+output is invariant to micro-batch packing.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+import time
+from concurrent.futures import ThreadPoolExecutor
+from functools import partial
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import guarantees
+from repro.core.paths import WarmStartPath
+from repro.core.sampler import (
+    make_euler_one_step_rows, refine_schedule, scan_refine_loop,
+)
+from repro.serving.batcher import (
+    DRAFT_STREAM, FLOW_STREAM, MicroBatch, ServeRequest, bucket_seq_len,
+    pack_requests, pad_rows,
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class RequestResult:
+    """Per-request output + the guarantee that was enforced for it."""
+
+    request_id: int
+    tokens: np.ndarray              # (num_samples, seq_len) int32
+    nfe: int
+    t0: float
+    bucket_len: int
+    micro_batch: int
+
+
+@partial(jax.jit, static_argnums=())
+def _derive_row_keys(seeds: jax.Array, sample_idx: jax.Array):
+    """(draft_keys, flow_keys), each (B,): fold (seed, sample index) into
+    two independent streams. Depends only on the request's own seed and
+    the row's index *within the request* — never on batch position."""
+
+    def one(s, i):
+        base = jax.random.fold_in(jax.random.key(s), i)
+        return (jax.random.fold_in(base, DRAFT_STREAM),
+                jax.random.fold_in(base, FLOW_STREAM))
+
+    return jax.vmap(one)(seeds, sample_idx)
+
+
+class WarmStartScheduler:
+    """Request scheduler over the draft/flow warm-start pipeline.
+
+    Args:
+      flow_model: DFM backbone exposing ``dfm_apply(params, tokens, t)``.
+      flow_params: backbone parameters (device_put sharded when ``mesh``).
+      draft_fn: row-keyed draft generator ``(keys (B,), seq_len) ->
+        (B, seq_len) int32`` (see :mod:`repro.serving.drafts`).
+      cold_nfe: Euler steps of the cold-start baseline (step size 1/N).
+      default_t0: warm-start time for requests without an override.
+      temperature: softmax temperature of the refine step.
+      max_rows / min_bucket / max_bucket / row_quantum: packing knobs
+        (see :mod:`repro.serving.batcher`).
+      overlap: run the draft stage of batch k+1 concurrently with the
+        refine of batch k (off -> strictly serial, for debugging/timing).
+      mesh: optional ``jax.sharding.Mesh``; enables the SERVE_RULES
+        sharded refine dispatch. ``None`` is the single-device path.
+    """
+
+    def __init__(
+        self,
+        *,
+        flow_model: Any,
+        flow_params: Any,
+        draft_fn: Callable[[jax.Array, int], jax.Array],
+        cold_nfe: int,
+        default_t0: float,
+        temperature: float = 1.0,
+        max_rows: int = 32,
+        min_bucket: int = 8,
+        max_bucket: Optional[int] = None,
+        row_quantum: int = 4,
+        overlap: bool = True,
+        mesh: Optional[Any] = None,
+    ):
+        if cold_nfe < 1:
+            raise ValueError(f"cold_nfe must be >= 1, got {cold_nfe}")
+        self.flow_model = flow_model
+        self.draft_fn = draft_fn
+        self.cold_nfe = cold_nfe
+        self.default_t0 = default_t0
+        self.temperature = temperature
+        self.max_rows = max_rows
+        self.min_bucket = min_bucket
+        self.max_bucket = max_bucket
+        self.row_quantum = row_quantum
+        self.overlap = overlap
+        self.mesh = mesh
+
+        self._queue: List[ServeRequest] = []
+        self._next_id = 0
+        self._compiled: set = set()     # compile_key accounting
+        self._cache_hits = 0
+        self._cache_misses = 0
+
+        # velocity_scale is t0-independent for the linear schedule, so one
+        # stepping path serves every per-request t0 (the t0 only moves the
+        # (ts, hs) schedule, which is a dynamic input).
+        one_step = make_euler_one_step_rows(
+            WarmStartPath(t0=0.0), temperature=temperature)
+
+        def refine(params, flow_keys, x, ts, hs):
+            n = ts.shape[0]
+            step_keys = jax.vmap(
+                lambda i: jax.vmap(lambda k: jax.random.fold_in(k, i))(flow_keys)
+            )(jnp.arange(n))
+            logits_fn = lambda xt, tb: self.flow_model.dfm_apply(params, xt, tb)
+            return scan_refine_loop(logits_fn, one_step, x, step_keys, ts, hs)
+
+        # donate the draft token buffer into the refine loop off-CPU, as
+        # the one-shot engine does — it is dead after the dispatch
+        donate = () if jax.default_backend() == "cpu" else (2,)
+        if mesh is None:
+            self.flow_params = flow_params
+            self._row_multiple = 1
+            self._refine_loop = jax.jit(refine, donate_argnums=donate)
+        else:
+            from repro.distributed import sharding as shd
+
+            self._param_shardings = shd.param_shardings(
+                flow_params, shd.SERVE_RULES, mesh)
+            self.flow_params = jax.device_put(flow_params, self._param_shardings)
+            self._row_multiple = shd.batch_axis_size(mesh)
+            rows1 = shd.batch_sharding(mesh, 1)
+            rows2 = shd.batch_sharding(mesh, 2)
+            repl = jax.sharding.NamedSharding(mesh, jax.sharding.PartitionSpec())
+
+            def refine_sharded(params, flow_keys, x, ts, hs):
+                # rules in scope at trace time so model-internal
+                # `constrain` annotations resolve against SERVE_RULES
+                with shd.axis_rules(shd.SERVE_RULES, mesh):
+                    return refine(params, flow_keys, x, ts, hs)
+
+            self._refine_loop = jax.jit(
+                refine_sharded,
+                in_shardings=(self._param_shardings, rows1, rows2, repl, repl),
+                out_shardings=rows2,
+                donate_argnums=donate,
+            )
+
+    # ---- request intake --------------------------------------------------
+
+    def submit(self, *, seq_len: int, num_samples: int = 1, seed: int = 0,
+               t0: Optional[float] = None) -> int:
+        """Enqueue one request; returns its request_id.
+
+        Rejects unservable requests HERE (bucket overflow, too many
+        samples) so one bad request can never poison a queued batch.
+        """
+        bucket_seq_len(seq_len, min_bucket=self.min_bucket,
+                       max_bucket=self.max_bucket)
+        unit = math.lcm(self.row_quantum, self._row_multiple)
+        if pad_rows(num_samples, unit) > self.max_rows:
+            raise ValueError(
+                f"num_samples {num_samples} pads to "
+                f"{pad_rows(num_samples, unit)} rows > max_rows "
+                f"{self.max_rows} (split the request)")
+        rid = self._next_id
+        self._next_id += 1
+        self._queue.append(ServeRequest(
+            request_id=rid, seq_len=seq_len, num_samples=num_samples,
+            seed=seed, t0=t0))
+        return rid
+
+    # ---- stages ----------------------------------------------------------
+
+    def _stage_keys_and_draft(self, mb: MicroBatch):
+        """Draft stage for one micro-batch (runs on the worker thread):
+        derive per-row keys, generate drafts at bucket length, block."""
+        t0 = time.perf_counter()
+        # int32 end to end — ServeRequest rejects seeds outside [0, 2**31)
+        seeds = np.zeros((mb.padded_rows,), np.int32)
+        idx = np.zeros((mb.padded_rows,), np.int32)
+        for span in mb.spans:
+            for r in range(span.rows):
+                seeds[span.row_offset + r] = span.request.seed
+                idx[span.row_offset + r] = r
+        # padding rows: deterministic dummy stream (seed 0, descending
+        # negative sample indices can't collide with real rows of seed 0)
+        for r in range(mb.rows, mb.padded_rows):
+            seeds[r], idx[r] = 0, -(r + 1)
+        draft_keys, flow_keys = _derive_row_keys(
+            jnp.asarray(seeds), jnp.asarray(idx))
+        x = self.draft_fn(draft_keys, mb.bucket_len)
+        x = jax.block_until_ready(x)
+        return x, flow_keys, time.perf_counter() - t0
+
+    def _stage_refine(self, mb: MicroBatch, x, flow_keys):
+        """Flow stage for one micro-batch: one jitted scan dispatch."""
+        t0 = time.perf_counter()
+        key = mb.compile_key
+        if key in self._compiled:
+            self._cache_hits += 1
+        else:
+            self._compiled.add(key)
+            self._cache_misses += 1
+        ts, hs = refine_schedule(mb.t0, 1.0 / self.cold_nfe, mb.n_steps)
+        x = self._refine_loop(
+            self.flow_params, flow_keys, x, jnp.asarray(ts), jnp.asarray(hs))
+        x = jax.block_until_ready(x)
+        # observed NFE = the schedule length the scan actually executed;
+        # the gate cross-checks it against an independent recomputation of
+        # warm_nfe(cold_nfe, t0), so a batcher/schedule regression (wrong
+        # n_steps, wrong grouping, stale cold_nfe) raises here
+        guarantees.require_bucket_guarantee(
+            self.cold_nfe, mb.t0, len(ts),
+            bucket_len=mb.bucket_len, rows=mb.rows)
+        return x, time.perf_counter() - t0
+
+    # ---- the pipeline ----------------------------------------------------
+
+    def run(self) -> Tuple[Dict[int, RequestResult], dict]:
+        """Drain the queue through the overlapped two-stage pipeline.
+
+        Returns ``(results, report)``: per-request results keyed by
+        request_id, and an engine report with per-batch stage latencies,
+        overlap efficiency, throughput and jit-cache counters.
+        """
+        requests, self._queue = self._queue, []
+        try:
+            return self.serve_requests(requests)
+        except Exception:
+            # put the unserved requests back so a failure is retryable
+            self._queue = requests + self._queue
+            raise
+
+    def serve_requests(
+        self, requests: Sequence[ServeRequest]
+    ) -> Tuple[Dict[int, RequestResult], dict]:
+        batches = pack_requests(
+            requests, cold_nfe=self.cold_nfe, default_t0=self.default_t0,
+            max_rows=self.max_rows, min_bucket=self.min_bucket,
+            max_bucket=self.max_bucket, row_quantum=self.row_quantum,
+            row_multiple=self._row_multiple)
+
+        results: Dict[int, RequestResult] = {}
+        batch_reports: List[dict] = []
+        hits0, misses0 = self._cache_hits, self._cache_misses
+        wall0 = time.perf_counter()
+        draft_total = flow_total = 0.0
+
+        def finish(k: int, mb: MicroBatch, x, t_draft: float, t_flow: float):
+            nonlocal draft_total, flow_total
+            draft_total += t_draft
+            flow_total += t_flow
+            x_host = np.asarray(x)
+            for span in mb.spans:
+                req = span.request
+                results[req.request_id] = RequestResult(
+                    request_id=req.request_id,
+                    tokens=x_host[span.row_offset:span.row_offset + span.rows,
+                                  :req.seq_len],
+                    nfe=mb.n_steps, t0=mb.t0,
+                    bucket_len=mb.bucket_len, micro_batch=k)
+            batch_reports.append({
+                "micro_batch": k,
+                "bucket_len": mb.bucket_len,
+                "rows": mb.rows,
+                "padded_rows": mb.padded_rows,
+                "t0": mb.t0,
+                "nfe": mb.n_steps,
+                "draft_time_s": t_draft,
+                "flow_time_s": t_flow,
+            })
+
+        if not self.overlap or len(batches) <= 1:
+            for k, mb in enumerate(batches):
+                x, flow_keys, t_draft = self._stage_keys_and_draft(mb)
+                x, t_flow = self._stage_refine(mb, x, flow_keys)
+                finish(k, mb, x, t_draft, t_flow)
+        else:
+            with ThreadPoolExecutor(max_workers=1) as pool:
+                fut = pool.submit(self._stage_keys_and_draft, batches[0])
+                for k, mb in enumerate(batches):
+                    x, flow_keys, t_draft = fut.result()
+                    if k + 1 < len(batches):
+                        fut = pool.submit(
+                            self._stage_keys_and_draft, batches[k + 1])
+                    x, t_flow = self._stage_refine(mb, x, flow_keys)
+                    finish(k, mb, x, t_draft, t_flow)
+
+        wall = time.perf_counter() - wall0
+        overlapped = max(0.0, draft_total + flow_total - wall)
+        denom = min(draft_total, flow_total)
+        rows = sum(mb.rows for mb in batches)
+        report = {
+            "num_requests": len(requests),
+            "num_micro_batches": len(batches),
+            "rows": rows,
+            "padded_rows": sum(mb.padded_rows for mb in batches),
+            "draft_time_s": draft_total,
+            "flow_time_s": flow_total,
+            "wall_time_s": wall,
+            "overlap": self.overlap,
+            "overlap_efficiency": (overlapped / denom) if denom > 0 else 0.0,
+            "requests_per_s": len(requests) / wall if wall > 0 else float("inf"),
+            "samples_per_s": rows / wall if wall > 0 else float("inf"),
+            # this run's counts; lifetime totals live on the instance
+            "jit_cache": {"hits": self._cache_hits - hits0,
+                          "misses": self._cache_misses - misses0},
+            "mesh": None if self.mesh is None else dict(self.mesh.shape),
+            "batches": batch_reports,
+        }
+        return results, report

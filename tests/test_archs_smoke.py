@@ -19,6 +19,10 @@ from repro.optim import build_optimizer
 from repro.training.state import TrainState
 from repro.training.train_step import make_train_step
 
+# building every reduced-config model in the module fixture alone takes
+# >5s; the full module is tier-1 only
+pytestmark = pytest.mark.slow
+
 ALL = list(ASSIGNED_ARCHS) + ["dfm-dit"]
 B, S = 2, 24
 

@@ -1,0 +1,147 @@
+"""Batcher unit tests: bucket rounding, row padding, packing masks, and
+the determinism contract (a request's output must not depend on which
+micro-batch it landed in)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.serving.batcher import (
+    MicroBatch, ServeRequest, bucket_seq_len, pack_requests, pad_rows,
+)
+
+
+# ---------------------------------------------------------------------------
+# bucket rounding
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("seq_len,expect", [
+    (1, 8), (7, 8), (8, 8), (9, 16), (16, 16), (17, 32), (33, 64), (64, 64),
+])
+def test_bucket_seq_len_pow2_rounding(seq_len, expect):
+    assert bucket_seq_len(seq_len, min_bucket=8) == expect
+
+
+def test_bucket_seq_len_min_and_max():
+    assert bucket_seq_len(2, min_bucket=16) == 16
+    with pytest.raises(ValueError):
+        bucket_seq_len(33, max_bucket=32)
+    with pytest.raises(ValueError):
+        bucket_seq_len(0)
+
+
+@pytest.mark.parametrize("rows,expect", [
+    (1, 4), (3, 4), (4, 4), (5, 8), (8, 8), (9, 12),
+])
+def test_pad_rows_quantum(rows, expect):
+    assert pad_rows(rows) == expect
+
+
+def test_pad_rows_custom_quantum():
+    assert pad_rows(1, 1) == 1
+    assert pad_rows(5, 2) == 6
+    with pytest.raises(ValueError):
+        pad_rows(0)
+
+
+# ---------------------------------------------------------------------------
+# packing
+# ---------------------------------------------------------------------------
+
+def _req(rid, seq, n=1, seed=0, t0=None):
+    return ServeRequest(request_id=rid, seq_len=seq, num_samples=n,
+                        seed=seed, t0=t0)
+
+
+def test_pack_groups_by_bucket_and_nfe():
+    reqs = [_req(0, 5), _req(1, 8), _req(2, 12), _req(3, 30), _req(4, 7)]
+    batches = pack_requests(reqs, cold_nfe=20, default_t0=0.8, max_rows=8)
+    by_bucket = {}
+    for mb in batches:
+        by_bucket.setdefault(mb.bucket_len, []).append(mb)
+    assert set(by_bucket) == {8, 16, 32}
+    # seq 5, 8, 7 share the 8-bucket micro-batch, FIFO order
+    (mb8,) = by_bucket[8]
+    assert [s.request.request_id for s in mb8.spans] == [0, 1, 4]
+    assert mb8.n_steps == 4       # ceil(20 * (1 - 0.8))
+
+
+def test_pack_splits_at_max_rows_and_pads_quantum():
+    reqs = [_req(i, 8, n=3) for i in range(4)]      # 12 rows, max 8 per batch
+    batches = pack_requests(reqs, cold_nfe=10, default_t0=0.5, max_rows=8)
+    assert [mb.rows for mb in batches] == [6, 6]
+    assert all(mb.padded_rows == 8 for mb in batches)   # 6 -> quantum-4 pad 8
+    # every request's rows live in exactly one batch
+    seen = [s.request.request_id for mb in batches for s in mb.spans]
+    assert sorted(seen) == [0, 1, 2, 3]
+
+
+def test_row_mask_marks_real_rows_only():
+    reqs = [_req(0, 8, n=2), _req(1, 8, n=1)]
+    (mb,) = pack_requests(reqs, cold_nfe=10, default_t0=0.5, max_rows=8)
+    assert mb.rows == 3 and mb.padded_rows == 4
+    np.testing.assert_array_equal(mb.row_mask, [True, True, True, False])
+
+
+def test_t0_override_separates_nfe_classes():
+    reqs = [_req(0, 8), _req(1, 8, t0=0.5)]
+    batches = pack_requests(reqs, cold_nfe=20, default_t0=0.8, max_rows=8)
+    assert len(batches) == 2
+    assert sorted(mb.n_steps for mb in batches) == [4, 10]
+
+
+def test_row_multiple_bumps_padding():
+    (mb,) = pack_requests([_req(0, 8)], cold_nfe=10, default_t0=0.5,
+                          max_rows=8, row_multiple=4)
+    assert mb.padded_rows == 4
+    # non-divisible mesh size -> lcm with the quantum
+    (mb,) = pack_requests([_req(0, 8)], cold_nfe=10, default_t0=0.5,
+                          max_rows=16, row_quantum=4, row_multiple=3)
+    assert mb.padded_rows == 12
+
+
+def test_oversized_request_rejected():
+    with pytest.raises(ValueError):
+        pack_requests([_req(0, 8, n=9)], cold_nfe=10, default_t0=0.5, max_rows=8)
+
+
+def test_request_validation():
+    with pytest.raises(ValueError):
+        ServeRequest(request_id=0, seq_len=0)
+    with pytest.raises(ValueError):
+        ServeRequest(request_id=0, seq_len=8, num_samples=0)
+    with pytest.raises(ValueError):
+        ServeRequest(request_id=0, seq_len=8, t0=1.0)
+
+
+def test_compile_key_ignores_t0_within_nfe_class():
+    """t0 values with the same warm NFE share one compiled refine fn."""
+    b1 = pack_requests([_req(0, 8, t0=0.80)], cold_nfe=20, default_t0=0.8)
+    b2 = pack_requests([_req(0, 8, t0=0.81)], cold_nfe=20, default_t0=0.8)
+    assert b1[0].compile_key == b2[0].compile_key
+    assert b1[0].t0 != b2[0].t0
+
+
+def test_padded_rows_never_exceed_max_rows():
+    """max_rows caps the padded dispatch size, not just the packed rows."""
+    reqs = [_req(i, 8, n=3) for i in range(5)]
+    for max_rows in (8, 10, 12):
+        batches = pack_requests(reqs, cold_nfe=10, default_t0=0.5,
+                                max_rows=max_rows)
+        assert all(mb.padded_rows <= max_rows for mb in batches)
+        assert sorted(s.request.request_id for mb in batches
+                      for s in mb.spans) == [0, 1, 2, 3, 4]
+
+
+def test_padding_unit_must_fit_max_rows():
+    with pytest.raises(ValueError):
+        pack_requests([_req(0, 8)], cold_nfe=10, default_t0=0.5,
+                      max_rows=8, row_quantum=16)
+
+
+def test_seed_range_validation():
+    with pytest.raises(ValueError):
+        ServeRequest(request_id=0, seq_len=8, seed=2 ** 31)
+    with pytest.raises(ValueError):
+        ServeRequest(request_id=0, seq_len=8, seed=-1)

@@ -13,6 +13,9 @@ import pytest
 from repro.configs import get_smoke_config
 from repro.models import build_model
 
+# full-config equivalence checks run 3-6s apiece on CI CPU; tier-1 only
+pytestmark = pytest.mark.slow
+
 
 def test_chunked_attention_matches_xla():
     cfg = get_smoke_config("starcoder2-3b").replace(max_seq_len=512)

@@ -5,8 +5,11 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro.core.guarantees import warm_nfe
 from repro.core.paths import WarmStartPath
-from repro.core.sampler import EulerSampler, categorical_from_probs, euler_step_probs
+from repro.core.sampler import (
+    EulerSampler, categorical_from_probs, euler_step_probs, refine_schedule,
+)
 
 
 def test_step_probs_are_distribution():
@@ -95,3 +98,45 @@ def test_custom_step_fn_plugs_in():
     x0 = jnp.zeros((2, 3), jnp.int32)
     smp.sample(jax.random.key(0), lambda x, t: jnp.zeros(x.shape + (5,)), x0)
     assert hits  # traced at least once
+
+
+# ---------------------------------------------------------------------------
+# refine_schedule edge cases
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("t0", [0.95, 0.99, 0.999])
+def test_refine_schedule_t0_near_one(t0):
+    """Near t0 = 1 the warm start collapses to a single partial step that
+    still lands exactly on t = 1."""
+    cold_nfe = 20
+    n = warm_nfe(cold_nfe, t0)
+    assert n == 1
+    ts, hs = refine_schedule(t0, 1.0 / cold_nfe, n)
+    assert ts.shape == hs.shape == (1,)
+    assert ts[0] == pytest.approx(t0)
+    assert hs[0] > 0.0
+    assert ts[0] + hs[0] == pytest.approx(1.0, abs=1e-6)
+
+
+def test_refine_schedule_n_equals_one_full_interval():
+    """cold_nfe = 1: one step covers the whole remaining interval."""
+    ts, hs = refine_schedule(0.5, 1.0, warm_nfe(1, 0.5))
+    assert ts.shape == (1,)
+    assert ts[0] == pytest.approx(0.5)
+    assert hs[0] == pytest.approx(0.5)     # min(h=1.0, 1 - 0.5)
+
+
+@pytest.mark.parametrize("t0,cold_nfe", [(0.8, 7), (0.3, 9), (0.65, 11), (0.0, 5)])
+def test_refine_schedule_partial_final_step_lands_on_one(t0, cold_nfe):
+    h = 1.0 / cold_nfe
+    n = warm_nfe(cold_nfe, t0)
+    ts, hs = refine_schedule(t0, h, n)
+    assert len(ts) == n
+    # all steps positive, none larger than the cold step size
+    assert np.all(hs > 0) and np.all(hs <= np.float32(h) + 1e-7)
+    # full-size steps everywhere except the (possibly partial) last
+    np.testing.assert_allclose(hs[:-1], h, rtol=1e-5)
+    # the last step lands exactly on t = 1
+    assert ts[-1] + hs[-1] == pytest.approx(1.0, abs=1e-6)
+    # times are the uniform grid from t0
+    np.testing.assert_allclose(ts, t0 + np.arange(n) * h, rtol=1e-5, atol=1e-7)
