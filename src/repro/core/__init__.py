@@ -13,11 +13,14 @@ from repro.core.sampler import (
     make_refine_step,
     refine_loop_inputs,
     refine_schedule,
+    refine_schedule_rows,
     scan_refine_loop,
+    scan_refine_loop_rows,
 )
 from repro.core.guarantees import (
     GuaranteeViolation, check_guarantee, require_bucket_guarantee,
-    require_guarantee, speedup_report, warm_nfe,
+    require_guarantee, require_row_guarantees, speedup_report, warm_nfe,
+    warm_nfe_rows,
 )
 from repro.core.coupling import (
     IndependentCoupling,
@@ -34,9 +37,11 @@ __all__ = [
     "EulerSampler", "euler_step_probs", "categorical_from_probs",
     "categorical_from_probs_rows", "make_euler_one_step",
     "make_euler_one_step_rows", "make_refine_step", "refine_loop_inputs",
-    "refine_schedule", "scan_refine_loop",
-    "warm_nfe", "speedup_report", "check_guarantee", "require_guarantee",
-    "require_bucket_guarantee", "GuaranteeViolation",
+    "refine_schedule", "refine_schedule_rows", "scan_refine_loop",
+    "scan_refine_loop_rows",
+    "warm_nfe", "warm_nfe_rows", "speedup_report", "check_guarantee",
+    "require_guarantee", "require_bucket_guarantee",
+    "require_row_guarantees", "GuaranteeViolation",
     "IndependentCoupling", "KNNRefinementCoupling", "OracleRefinementCoupling", "pair_iterator",
     "DraftModel", "CorruptionDraft", "HistogramDraft", "ARDraft",
     "WarmStartPipeline",

@@ -32,8 +32,40 @@ class DraftModel:
 
     @property
     def cost_ratio(self) -> float:
-        """Draft cost / one backbone NFE (for guarantees.py accounting)."""
+        """Draft cost / one backbone NFE (for guarantees.py accounting).
+
+        Returns the MEASURED ratio once :meth:`calibrate_cost_ratio` has
+        run; before that, the subclass's static estimate (0.0 here — the
+        paper's "negligible" assumption, which `effective_speedup` then
+        takes at face value)."""
+        measured = getattr(self, "_measured_cost", None)
+        if measured is not None:
+            return measured.cost_ratio
+        return self._estimated_cost_ratio()
+
+    def _estimated_cost_ratio(self) -> float:
         return 0.0
+
+    def calibrate_cost_ratio(self, nfe_fn: Callable[[], jax.Array], *,
+                             rng: jax.Array, num: int, seq_len: int,
+                             iters: int = 5):
+        """Replace the estimated cost_ratio with a measured one.
+
+        ``nfe_fn()`` must execute exactly one backbone function
+        evaluation (+ Euler update) at the same (num, seq_len) the draft
+        produces; timing is wall-clock best-of-``iters`` (see
+        :func:`repro.drafting.quality.measure_cost_ratio`). The measured
+        ratio then flows through ``cost_ratio`` into
+        ``guarantees.speedup_report`` so ``effective_speedup`` reflects
+        what the draft stage actually costs instead of assuming zero.
+        """
+        from repro.drafting.quality import measure_cost_ratio
+
+        report = measure_cost_ratio(
+            lambda: self.generate(rng, num), nfe_fn,
+            batch=num, seq_len=seq_len, iters=iters)
+        self._measured_cost = report
+        return report
 
 
 @dataclasses.dataclass
@@ -96,11 +128,11 @@ class ARDraft(DraftModel):
     decode_fn: Callable
     params: object
     seq_len: int
-    _cost_ratio: float = 0.02
+    _cost_ratio: float = 0.02    # static ESTIMATE; calibrate_cost_ratio
+                                 # replaces it with the measured ratio
 
     def generate(self, rng: jax.Array, num: int) -> jax.Array:
         return self.decode_fn(self.params, rng, num, self.seq_len)
 
-    @property
-    def cost_ratio(self) -> float:
+    def _estimated_cost_ratio(self) -> float:
         return self._cost_ratio

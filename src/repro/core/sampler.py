@@ -112,6 +112,89 @@ def refine_schedule(t0: float, cold_nfe_h: float, n: int):
     return ts, hs
 
 
+def refine_schedule_rows(t0_rows, cold_nfe_h: float, cold_nfe: int):
+    """Per-row schedule matrices for a heterogeneous-t0 micro-batch.
+
+    Every row follows the SAME step size ``h = cold_nfe_h`` but enters the
+    shared scan at its own step index: row ``r`` with warm-start time
+    ``t0_rows[r]`` is inactive for the first ``n_max - n_r`` steps (where
+    ``n_r = warm_nfe(cold_nfe, t0_rows[r])`` and ``n_max = max_r n_r``)
+    and then takes exactly its guaranteed ``n_r`` Euler steps, so the
+    batch's scan length realises the worst row's guarantee factor
+    ``1/(1 - min t0)`` and no row ever exceeds its own ``warm_nfe``.
+
+    Pack invariance: ``key_idx`` is each row's LOCAL step counter
+    (0..n_r-1 on its active steps), so the PRNG fold sequence a row sees
+    is independent of ``n_max`` — i.e. of which rows it was batched with.
+    A batch whose rows all share one t0 reproduces
+    :func:`refine_schedule` bit-exactly in every column.
+
+    Returns ``(ts, hs, active, key_idx, nfe_rows)`` — the first four are
+    ``(n_max, B)`` arrays (f32 / f32 / bool / int32), ``nfe_rows`` is the
+    per-row guaranteed NFE ``(B,)`` with ``active.sum(0) == nfe_rows``.
+    """
+    from repro.core import guarantees
+
+    t0_rows = np.asarray(t0_rows, np.float64)
+    if t0_rows.ndim != 1:
+        raise ValueError(f"t0_rows must be 1-D, got shape {t0_rows.shape}")
+    nfe_rows = np.array(
+        [guarantees.warm_nfe(cold_nfe, float(t)) for t in t0_rows], np.int32
+    )
+    n_max = int(nfe_rows.max())
+    local = np.arange(n_max, dtype=np.int64)[:, None] - (n_max - nfe_rows)[None, :]
+    active = local >= 0
+    # same float path as refine_schedule: f64 accumulate, f32 cast, f32 h clip
+    ts = (t0_rows[None, :] + np.where(active, local, 0) * cold_nfe_h).astype(np.float32)
+    hs = np.where(
+        active,
+        np.minimum(np.float32(cold_nfe_h), np.float32(1.0) - ts),
+        np.float32(0.0),
+    ).astype(np.float32)
+    key_idx = np.where(active, local, 0).astype(np.int32)
+    return ts, hs, active, key_idx, nfe_rows
+
+
+def scan_refine_loop_rows(
+    logits_fn: Callable[[jax.Array, jax.Array], jax.Array],
+    one_step: Callable,
+    x_init: jax.Array,
+    flow_keys: jax.Array,
+    ts: jax.Array,
+    hs: jax.Array,
+    active: jax.Array,
+    key_idx: jax.Array,
+):
+    """Masked per-row refine loop: ONE ``lax.scan`` serving rows whose t0
+    (and therefore NFE) differ, each on its own slice of the shared
+    schedule (see :func:`refine_schedule_rows`).
+
+    Args:
+      logits_fn: ``(tokens (B,N), t (B,)) -> logits (B,N,V)``.
+      one_step: row-keyed step (see :func:`make_euler_one_step_rows`).
+      x_init: (B, N) int32 draft state.
+      flow_keys: (B,) typed per-row PRNG keys; step keys are
+        ``fold_in(flow_keys[b], key_idx[i, b])`` so a row's noise stream
+        is a function of its own key and local step counter only.
+      ts / hs / active / key_idx: ``(n, B)`` schedule matrices.
+
+    Rows are frozen (``x`` passes through unchanged) on steps where
+    ``active`` is False; the backbone still evaluates the full batch each
+    step — heterogeneity inside a micro-batch should therefore stay small
+    (the batcher's t0-bins bound it).
+    """
+
+    def body(x, inp):
+        t, h, act, idx = inp
+        keys = jax.vmap(jax.random.fold_in)(flow_keys, idx)
+        logits = logits_fn(x, t)
+        x_next = one_step(keys, logits, x, t, h)
+        return jnp.where(act[:, None], x_next, x), None
+
+    x, _ = jax.lax.scan(body, x_init, (ts, hs, active, key_idx))
+    return x
+
+
 def make_euler_one_step(
     path: WarmStartPath,
     *,

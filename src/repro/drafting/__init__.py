@@ -1,0 +1,32 @@
+"""Drafting subsystem: real draft models for warm-start flow matching.
+
+Three pillars (see README.md):
+  * ``ar_engine``  — KV-cached autoregressive decode engine (the paper's
+    lightweight draft stage as a real serving component: preallocated
+    donated caches, single-dispatch scan decode, cross-micro-batch cache
+    reuse, row-keyed pack-invariant determinism) + zoo adapters.
+  * ``quality``    — draft-quality scoring under the learned flow path,
+    score -> t0 calibration from the corruption tiers, and measured
+    draft/NFE cost-ratio accounting.
+  * ``policy``     — per-request adaptive t0 (quality-matched warm-start
+    times, binned so the serving jit cache stays bounded).
+"""
+
+from repro.drafting.ar_engine import (
+    ARDraftEngine, DraftEngineStats, LSTMDraftAdapter, TransformerDraftAdapter,
+)
+from repro.drafting.quality import (
+    CostRatioReport, T0Calibration, fit_t0_calibration, make_quality_scorer,
+    measure_cost_ratio,
+)
+from repro.drafting.policy import AdaptiveT0Policy, bin_t0
+from repro.drafting.ref import oracle_generate_rows
+
+__all__ = [
+    "ARDraftEngine", "DraftEngineStats", "LSTMDraftAdapter",
+    "TransformerDraftAdapter",
+    "T0Calibration", "fit_t0_calibration", "make_quality_scorer",
+    "measure_cost_ratio", "CostRatioReport",
+    "AdaptiveT0Policy", "bin_t0",
+    "oracle_generate_rows",
+]

@@ -1,0 +1,79 @@
+"""Per-request adaptive warm-start time (quality-matched t0).
+
+The serving-side face of :mod:`repro.drafting.quality`: given the drafts
+a request is about to refine, decide its t0 from their measured quality
+— a pretty-good draft enters the flow deep (few steps), a poor one
+shallow (more steps) — while keeping the paper's guarantee machinery
+intact:
+
+  * the chosen t0 is SNAPPED DOWN to a bin grid (:func:`bin_t0`): the
+    serving jit cache stays bounded by the bin count, and snapping down
+    (never up) can only ADD refine steps vs the calibrated value —
+    guarantee-conservative;
+  * a request's NFE bound is ``warm_nfe(cold_nfe, t0_request)`` exactly,
+    enforced per row by the scheduler
+    (:func:`repro.core.guarantees.require_row_guarantees`);
+  * the batch worst case stays ``1/(1 - min t0)``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional
+
+import jax
+import numpy as np
+
+from repro.drafting.quality import T0Calibration
+from repro.serving.batcher import t0_bin
+
+
+def bin_t0(t0: float, *, width: float = 0.05, floor: float = 0.0) -> float:
+    """Snap ``t0`` DOWN to the bin grid ``floor + k * width``.
+
+    Snapping down means the served t0 is never deeper than the calibrated
+    one — the refine loop only ever takes MORE steps than the quality
+    score asked for, so the per-request guarantee derived from the binned
+    t0 dominates the calibrated intent.
+
+    The grid snap itself is :func:`repro.serving.batcher.t0_bin` — the
+    SAME function the batcher uses to form (bucket, t0-bin) group keys,
+    so a policy-binned t0 can never straddle a batcher bin edge.
+    """
+    if width <= 0.0:
+        return max(float(t0), floor)
+    return max(floor, floor + t0_bin(float(t0) - floor, width))
+
+
+@dataclasses.dataclass
+class AdaptiveT0Policy:
+    """score drafts -> calibrated t0 -> binned per-request t0.
+
+    Args:
+      scorer: ``tokens (B, N) -> (B,) scores`` (see
+        :func:`repro.drafting.quality.make_quality_scorer`) — costs one
+        backbone NFE per scored batch, charged to the draft stage.
+      calibration: fitted score -> t0 mapping.
+      bin_width: t0 bin grid pitch (also the batcher's grouping bin).
+      t0_floor: lower clamp applied after binning (a request can never be
+        served shallower than this).
+    """
+
+    scorer: Callable[[jax.Array], jax.Array]
+    calibration: T0Calibration
+    bin_width: float = 0.05
+    t0_floor: float = 0.0
+
+    def t0_for_drafts(self, tokens) -> np.ndarray:
+        """(B, N) draft tokens -> (B,) binned per-row t0."""
+        scores = np.asarray(self.scorer(tokens))
+        t0 = self.calibration.t0_for_scores(scores)
+        return np.array(
+            [bin_t0(v, width=self.bin_width, floor=self.t0_floor)
+             for v in t0], np.float64)
+
+    def t0_for_request(self, tokens) -> float:
+        """One t0 for a whole request: the MINIMUM over its sample rows —
+        the worst draft in the request dictates how shallow it enters
+        (all rows of a request share one schedule slice)."""
+        return float(self.t0_for_drafts(tokens).min())

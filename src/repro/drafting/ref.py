@@ -1,0 +1,69 @@
+"""Cache-free full-recompute oracle for the KV-cached AR draft engine.
+
+For every generated token the oracle starts from a FRESH cache and
+replays the whole prefix (prompt + tokens sampled so far) one token at a
+time — O(L^2) model evaluations, no state carried across tokens. Because
+every model evaluation is the same single-token decode shape the engine
+uses (``prefill_mode="scan"``), the oracle is bit-identical to the
+engine: any divergence means the engine mismanaged its cache (stale KV
+leaking past the validity mask, wrong write cursor after a prefix
+rewind, wrong rope offset after partial reuse, ...).
+
+Deliberately slow — this is the correctness reference for tests and
+debugging, never a serving path.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def oracle_generate_rows(
+    adapter,
+    params,
+    keys: jax.Array,
+    seq_len: int,
+    *,
+    prompt: Optional[jax.Array] = None,
+    temperature: float = 1.0,
+    bos: int = 0,
+    max_len: Optional[int] = None,
+) -> jax.Array:
+    """Reference for :meth:`ARDraftEngine.generate_rows` (same signature
+    semantics, same row-keyed sampling rule ``fold_in(keys[b], i)``)."""
+    b = keys.shape[0]
+    if prompt is None:
+        prompt = jnp.full((b, 1), bos, jnp.int32)
+    prompt = jnp.asarray(prompt, jnp.int32)
+    p = prompt.shape[1]
+    cap = max_len if max_len is not None else p + seq_len
+
+    @partial(jax.jit, static_argnums=2)
+    def replay(params, toks, n):
+        """Fresh cache; feed toks[:, :n] one token at a time; return the
+        next-token logits after the last of them."""
+        cache = adapter.init_cache(b, cap)
+        logits = None
+        for j in range(n):
+            logits, cache = adapter.decode_step(params, toks[:, j], cache, j)
+        return logits
+
+    def sample(i, logits):
+        step_keys = jax.vmap(jax.random.fold_in, in_axes=(0, None))(
+            keys, jnp.asarray(i, jnp.int32))
+        return jax.vmap(
+            lambda k, lg: jax.random.categorical(k, lg / temperature)
+        )(step_keys, logits).astype(jnp.int32)
+
+    toks = prompt
+    out = []
+    for i in range(seq_len):
+        logits = replay(params, toks, int(toks.shape[1]))
+        nxt = sample(i, logits)
+        out.append(nxt)
+        toks = jnp.concatenate([toks, nxt[:, None]], axis=1)
+    return jnp.stack(out, axis=1)

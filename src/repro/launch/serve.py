@@ -4,6 +4,15 @@
 + DFM denoiser on the synthetic corpus (or restores a checkpoint produced
 by train.py) and serves a batch of requests through the WarmStartServer,
 printing the guarantee report.
+
+Drafting subsystem modes (see ``src/repro/drafting/``):
+  --draft ar-kv   serve drafts through the KV-cached row-keyed
+                  ``ARDraftEngine`` (pack-invariant, cross-micro-batch
+                  cache reuse) instead of the batch-keyed LSTM adapter;
+  --t0 auto       per-request adaptive t0: drafts are quality-scored
+                  under the learned path and each request enters the
+                  refine at its calibrated (binned) warm-start time.
+                  Implies --scheduler.
 """
 
 from __future__ import annotations
@@ -25,7 +34,9 @@ from repro.training import Trainer
 
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--t0", type=float, default=0.8)
+    ap.add_argument("--t0", default="0.8",
+                    help="warm-start time in [0,1), or 'auto' for "
+                         "per-request quality-adaptive t0")
     ap.add_argument("--cold-nfe", type=int, default=32)
     ap.add_argument("--num", type=int, default=4)
     ap.add_argument("--seq-len", type=int, default=64)
@@ -38,7 +49,25 @@ def main():
                     help="serve a mixed-size request stream through the "
                          "continuous-batching WarmStartScheduler instead of "
                          "the one-shot WarmStartServer")
+    ap.add_argument("--draft", choices=("lstm", "ar-kv"), default="lstm",
+                    help="draft stage: 'lstm' = batch-keyed LSTM.generate "
+                         "adapter (demo), 'ar-kv' = row-keyed KV-cached "
+                         "ARDraftEngine (pack-invariant serving)")
     args = ap.parse_args()
+
+    t0_auto = str(args.t0).lower() == "auto"
+    if t0_auto and not args.scheduler:
+        print("--t0 auto implies --scheduler; enabling it")
+        args.scheduler = True
+    # adaptive serving may go as shallow as the calibration floor (the
+    # worst tier's target t0); train the flow path there so every served
+    # t >= t0_train is in-distribution. Fixed-t0 serving trains at the
+    # served t0.
+    if t0_auto:
+        from repro.drafting.quality import DEFAULT_TIERS
+        t0_train = min(t0 for _, t0 in DEFAULT_TIERS)
+    else:
+        t0_train = float(args.t0)
 
     cfg = tiny_config(vocab_size=TEXT_VOCAB, seq_len=args.seq_len)
     model = build_model(cfg)
@@ -63,9 +92,9 @@ def main():
     drafts = np.asarray(lstm.generate(lparams, jax.random.key(3), 512, args.seq_len))
     coupling = KNNRefinementCoupling(k=2, k_inject=2, max_candidates=2048)
     src, tgt = coupling.build(data, drafts, rng)
-    run = RunConfig(total_steps=args.train_steps, batch_size=32, t0=args.t0,
+    run = RunConfig(total_steps=args.train_steps, batch_size=32, t0=t0_train,
                     learning_rate=1e-3, log_every=50)
-    trainer = Trainer(model, cfg, run, path=WarmStartPath(t0=args.t0))
+    trainer = Trainer(model, cfg, run, path=WarmStartPath(t0=t0_train))
     state = trainer.init_state(jax.random.key(0))
     state = trainer.fit(state, pair_iterator(src, tgt, 32, rng),
                         log_fn=lambda i, m: print(f"  flow step {i}: {m['ce']:.3f}"))
@@ -74,44 +103,85 @@ def main():
         # largest pow2 bucket the flow model's positions cover; min_bucket
         # must not exceed it or every submit would overflow the bucket cap
         max_bucket = 1 << (args.seq_len.bit_length() - 1)
+        if args.draft == "ar-kv":
+            from repro.drafting import ARDraftEngine, LSTMDraftAdapter
+
+            engine = ARDraftEngine(LSTMDraftAdapter(model=lstm), lparams,
+                                   max_len=max_bucket)
+            draft_fn = engine.as_draft_fn()
+            print("draft stage: KV-cached row-keyed ARDraftEngine "
+                  "(pack-invariant, cross-micro-batch cache reuse)")
+        else:
+            engine = None
+            draft_fn = batch_keyed_draft(
+                lambda key, num, L: lstm.generate(lparams, key, num, L))
+            print("note: LSTM draft is batch-keyed (batch_keyed_draft) — "
+                  "outputs are reproducible for a fixed packing but not "
+                  "invariant to micro-batch composition; use --draft ar-kv "
+                  "for request-seeded serving")
+        t0_policy = None
+        if t0_auto:
+            from repro.drafting import (
+                AdaptiveT0Policy, fit_t0_calibration, make_quality_scorer,
+            )
+
+            scorer = make_quality_scorer(model.dfm_apply, state.params)
+            calib = fit_t0_calibration(scorer, data[:, :max_bucket],
+                                       TEXT_VOCAB, seed=args.seed)
+            t0_policy = AdaptiveT0Policy(scorer=scorer, calibration=calib)
+            print(f"adaptive t0 calibration: scores {calib.scores} -> "
+                  f"t0 {calib.t0s}")
         sched = WarmStartScheduler(
             flow_model=model, flow_params=state.params,
-            draft_fn=batch_keyed_draft(
-                lambda key, num, L: lstm.generate(lparams, key, num, L)),
-            cold_nfe=args.cold_nfe, default_t0=args.t0,
+            draft_fn=draft_fn,
+            cold_nfe=args.cold_nfe,
+            default_t0=t0_train if t0_auto else float(args.t0),
             min_bucket=min(8, max_bucket), max_bucket=max_bucket,
+            t0_policy=t0_policy,
         )
-        print("note: LSTM draft is batch-keyed (batch_keyed_draft) — outputs "
-              "are reproducible for a fixed packing but not invariant to "
-              "micro-batch composition; use a row-keyed draft_fn for "
-              "request-seeded serving")
         rng_sizes = np.random.default_rng(args.seed + 1)
         for i in range(args.num):
             sched.submit(
                 seq_len=int(rng_sizes.integers(max_bucket // 2, max_bucket + 1)),
-                num_samples=1, seed=100 + i)
+                num_samples=1, seed=100 + i,
+                t0=None)                   # None -> policy / default
         results, rep = sched.run()
         print(f"\nscheduler: {rep['num_requests']} requests in "
               f"{rep['num_micro_batches']} micro-batches, "
               f"{rep['requests_per_s']:.2f} req/s, "
               f"overlap_eff={rep['overlap_efficiency']:.2f}, "
+              f"mean NFE {rep['mean_request_nfe']:.1f}, "
               f"jit cache {rep['jit_cache']}")
+        if t0_auto:
+            print(f"adaptive t0 histogram: {rep['policy']['t0_histogram']}")
+        if engine is not None:
+            print(f"draft engine: {engine.stats.as_dict()}")
         for rid in sorted(results)[:4]:
             r = results[rid]
-            print(f"[{rid}] nfe={r.nfe} bucket={r.bucket_len} "
+            print(f"[{rid}] t0={r.t0:.2f} nfe={r.nfe} bucket={r.bucket_len} "
                   f"{decode(np.asarray(r.tokens[0]))}")
         return
 
-    gen = jax.jit(lambda rng, num: lstm.generate(lparams, rng, num, args.seq_len),
-                  static_argnums=1)
+    t0 = float(args.t0)
+    if args.draft == "ar-kv":
+        from repro.drafting import ARDraftEngine, LSTMDraftAdapter
+
+        engine = ARDraftEngine(LSTMDraftAdapter(model=lstm), lparams,
+                               max_len=args.seq_len)
+        draft_generate = lambda rng, num: engine.generate_rows(
+            jax.random.split(rng, num), args.seq_len)
+    else:
+        gen = jax.jit(lambda rng, num: lstm.generate(lparams, rng, num, args.seq_len),
+                      static_argnums=1)
+        draft_generate = lambda rng, num: gen(rng, num)
     step_fn = None
     if args.fused_step:
         from repro.kernels.ws_step import make_ws_step_fn
-        step_fn = make_ws_step_fn(WarmStartPath(t0=args.t0))
+        step_fn = make_ws_step_fn(WarmStartPath(t0=t0))
     server = WarmStartServer(
         flow_model=model, flow_cfg=cfg, flow_params=state.params,
-        draft_generate=lambda rng, num: gen(rng, num),
-        path=WarmStartPath(t0=args.t0), cold_nfe=args.cold_nfe,
+        draft_generate=draft_generate,
+        path=WarmStartPath(t0=t0), cold_nfe=args.cold_nfe,
         step_fn=step_fn,
     )
     out, report = server.serve(jax.random.key(11), args.num)

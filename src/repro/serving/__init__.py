@@ -1,7 +1,10 @@
 from repro.serving.batcher import (
     MicroBatch, RowSpan, ServeRequest, bucket_seq_len, pack_requests, pad_rows,
+    t0_bin,
 )
-from repro.serving.drafts import batch_keyed_draft, corruption_draft, uniform_draft
+from repro.serving.drafts import (
+    BatchKeyedDraftWarning, batch_keyed_draft, corruption_draft, uniform_draft,
+)
 from repro.serving.engine import (
     WarmStartServer, ar_generate, make_prefill_fn, make_refine_step_fn,
     make_serve_step,
@@ -12,7 +15,8 @@ __all__ = [
     "WarmStartServer", "ar_generate", "make_prefill_fn", "make_refine_step_fn",
     "make_serve_step",
     "ServeRequest", "MicroBatch", "RowSpan", "bucket_seq_len", "pad_rows",
-    "pack_requests",
+    "pack_requests", "t0_bin",
     "WarmStartScheduler", "RequestResult",
     "uniform_draft", "corruption_draft", "batch_keyed_draft",
+    "BatchKeyedDraftWarning",
 ]

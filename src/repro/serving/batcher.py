@@ -74,18 +74,45 @@ class RowSpan:
 
 @dataclasses.dataclass(frozen=True)
 class MicroBatch:
-    """A shape-padded unit of work for the draft/refine pipeline."""
+    """A shape-padded unit of work for the draft/refine pipeline.
+
+    Requests in one micro-batch may carry DIFFERENT warm-start times
+    (``t0_spans``, one per span) when the batcher groups by t0-bin: the
+    refine loop is then the masked per-row scan
+    (:func:`repro.core.sampler.scan_refine_loop_rows`) whose length
+    ``n_steps`` realises the worst (minimum) t0 — stored as ``t0``.
+    """
 
     bucket_len: int                 # padded (pow2) sequence length
-    t0: float                       # effective warm-start time
-    n_steps: int                    # warm NFE for (cold_nfe, t0)
+    t0: float                       # worst (min) effective t0 in the batch
+    n_steps: int                    # warm NFE for (cold_nfe, min t0)
     spans: Tuple[RowSpan, ...]
     padded_rows: int                # quantum-padded row count
+    t0_spans: Tuple[float, ...] = ()  # per-span effective t0 (len(spans))
+
+    def __post_init__(self):
+        if not self.t0_spans:
+            object.__setattr__(
+                self, "t0_spans", tuple(self.t0 for _ in self.spans))
+        elif len(self.t0_spans) != len(self.spans):
+            raise ValueError(
+                f"t0_spans has {len(self.t0_spans)} entries for "
+                f"{len(self.spans)} spans")
 
     @property
     def rows(self) -> int:
         """Real (non-padding) rows."""
         return sum(s.rows for s in self.spans)
+
+    @property
+    def row_t0s(self) -> np.ndarray:
+        """(padded_rows,) float64 per-row effective t0. Padding rows get
+        the batch's LARGEST t0 (fewest steps) so they can never extend
+        the scan; their outputs are discarded anyway."""
+        t0s = np.full((self.padded_rows,), max(self.t0_spans), np.float64)
+        for span, t0 in zip(self.spans, self.t0_spans):
+            t0s[span.row_offset:span.row_offset + span.rows] = t0
+        return t0s
 
     @property
     def row_mask(self) -> np.ndarray:
@@ -128,6 +155,16 @@ def pad_rows(rows: int, quantum: int = 4) -> int:
     return -(-rows // quantum) * quantum
 
 
+def t0_bin(t0: float, bin_width: float) -> float:
+    """Group label for a t0: the exact value when ``bin_width == 0``
+    (legacy: only identical t0s share a micro-batch), else the lower edge
+    of its bin — requests whose t0 fall in one bin share micro-batches
+    and refine on one masked per-row schedule."""
+    if bin_width <= 0.0:
+        return float(t0)
+    return math.floor(float(t0) / bin_width + 1e-12) * bin_width
+
+
 def pack_requests(
     requests: Sequence[ServeRequest],
     *,
@@ -138,15 +175,23 @@ def pack_requests(
     max_bucket: Optional[int] = None,
     row_quantum: int = 4,
     row_multiple: int = 1,
+    t0_bin_width: float = 0.0,
 ) -> List[MicroBatch]:
     """Group requests into micro-batches.
 
-    FIFO within each (bucket_len, n_steps, t0) group: arrival order is
+    FIFO within each (bucket_len, t0-bin) group: arrival order is
     preserved inside a group so early requests are not starved by later
     small ones, and the packing is deterministic. Padded row counts are
     multiples of ``lcm(row_quantum, row_multiple)`` — the scheduler sets
     ``row_multiple`` to the mesh batch-axis size so sharded refine
     batches always divide the data axis.
+
+    ``t0_bin_width = 0`` (default) groups by exact t0 — every micro-batch
+    is t0-homogeneous, the legacy behaviour. ``> 0`` groups by t0-bin:
+    per-request adaptive t0 values land in at most ``1/t0_bin_width``
+    groups per bucket (the jit cache stays bounded), each micro-batch
+    keeps its spans' exact t0s in ``t0_spans``, and its scan length
+    realises the bin's worst (minimum) t0.
     """
     unit = math.lcm(row_quantum, row_multiple)
     if unit > max_rows:
@@ -163,31 +208,35 @@ def pack_requests(
                 f"{max_rows} (split the request upstream)"
             )
         t0 = default_t0 if req.t0 is None else req.t0
-        n_steps = guarantees.warm_nfe(cold_nfe, t0)
         blen = bucket_seq_len(req.seq_len, min_bucket=min_bucket,
                               max_bucket=max_bucket)
-        groups.setdefault((blen, n_steps, t0), []).append(req)
+        groups.setdefault((blen, t0_bin(t0, t0_bin_width)), []).append(
+            (req, t0))
 
     batches: List[MicroBatch] = []
-    for (blen, n_steps, t0), reqs in groups.items():
+
+    def emit(blen, spans, t0s, used):
+        t0_min = min(t0s)
+        batches.append(MicroBatch(
+            bucket_len=blen, t0=t0_min,
+            n_steps=guarantees.warm_nfe(cold_nfe, t0_min),
+            spans=tuple(spans), padded_rows=pad_rows(used, unit),
+            t0_spans=tuple(t0s),
+        ))
+
+    for (blen, _bin), reqs in groups.items():
         spans: List[RowSpan] = []
+        t0s: List[float] = []
         used = 0
-        for req in reqs:
+        for req, t0 in reqs:
             # flush BEFORE the padded row count would exceed max_rows, so
             # padded_rows (the actual dispatch size) respects the cap
             if used and pad_rows(used + req.num_samples, unit) > max_rows:
-                batches.append(MicroBatch(
-                    bucket_len=blen, t0=t0, n_steps=n_steps,
-                    spans=tuple(spans),
-                    padded_rows=pad_rows(used, unit),
-                ))
-                spans, used = [], 0
+                emit(blen, spans, t0s, used)
+                spans, t0s, used = [], [], 0
             spans.append(RowSpan(request=req, row_offset=used))
+            t0s.append(t0)
             used += req.num_samples
         if spans:
-            batches.append(MicroBatch(
-                bucket_len=blen, t0=t0, n_steps=n_steps,
-                spans=tuple(spans),
-                padded_rows=pad_rows(used, unit),
-            ))
+            emit(blen, spans, t0s, used)
     return batches

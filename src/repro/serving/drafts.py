@@ -11,6 +11,7 @@ the cost of the per-request determinism guarantee.
 
 from __future__ import annotations
 
+import warnings
 from functools import partial
 from typing import Callable
 
@@ -57,16 +58,41 @@ def corruption_draft(data, vocab_size: int, corruption: float = 0.25) -> Callabl
     return draft
 
 
-def batch_keyed_draft(generate: Callable) -> Callable:
+class BatchKeyedDraftWarning(UserWarning):
+    """A batch-keyed draft was adapted into the row-keyed contract —
+    per-request determinism is NOT guaranteed (see
+    :func:`batch_keyed_draft`)."""
+
+
+def batch_keyed_draft(generate: Callable, *, warn: bool = True) -> Callable:
     """Adapt a batch-keyed generator ``(key, num, seq_len) -> (num, L)``
     (e.g. ``LSTMModel.generate``) to the row-keyed contract.
 
-    The whole batch is keyed off the first row's key, so outputs ARE
-    deterministic for a fixed packing but NOT invariant to micro-batch
-    composition — fine for demos, wrong for request-seeded serving.
+    **This silently drops the per-request determinism guarantee**: the
+    whole batch is keyed off the FIRST row's key and every row's noise
+    stream is drawn from that one shared key in batch order, so outputs
+    are deterministic for a fixed packing but NOT invariant to
+    micro-batch composition — pack the same request next to different
+    neighbours (or at a different row offset) and its tokens change.
+    Fine for demos; wrong for request-seeded serving. A
+    :class:`BatchKeyedDraftWarning` is emitted once per process on first
+    use (silence with ``warn=False`` or the ``warnings`` module). For a
+    genuinely row-keyed AR draft use
+    :class:`repro.drafting.ARDraftEngine` instead.
     """
 
+    warned = []
+
     def draft(keys, seq_len):
+        if warn and not warned:
+            warned.append(True)
+            warnings.warn(
+                "batch_keyed_draft: drafts are keyed off the first row's "
+                "key — outputs are NOT invariant to micro-batch packing "
+                "(per-request determinism is lost). Use a row-keyed draft "
+                "(e.g. repro.drafting.ARDraftEngine.as_draft_fn()) for "
+                "request-seeded serving.",
+                BatchKeyedDraftWarning, stacklevel=2)
         return generate(keys[0], keys.shape[0], seq_len)
 
     return draft

@@ -41,7 +41,8 @@ import numpy as np
 from repro.core import guarantees
 from repro.core.paths import WarmStartPath
 from repro.core.sampler import (
-    make_euler_one_step_rows, refine_schedule, scan_refine_loop,
+    make_euler_one_step_rows, refine_schedule, refine_schedule_rows,
+    scan_refine_loop, scan_refine_loop_rows,
 )
 from repro.serving.batcher import (
     DRAFT_STREAM, FLOW_STREAM, MicroBatch, ServeRequest, bucket_seq_len,
@@ -92,6 +93,14 @@ class WarmStartScheduler:
         refine of batch k (off -> strictly serial, for debugging/timing).
       mesh: optional ``jax.sharding.Mesh``; enables the SERVE_RULES
         sharded refine dispatch. ``None`` is the single-device path.
+      t0_policy: optional :class:`repro.drafting.AdaptiveT0Policy`.
+        When set, requests submitted WITHOUT a t0 override are drafted in
+        a scoring pre-pass, their warm-start time chosen from measured
+        draft quality (binned — see ``t0_bin_width``), and the pre-pass
+        drafts are reused by the pipeline (never drafted twice).
+      t0_bin_width: grouping bin for per-request t0 values (see
+        ``batcher.pack_requests``); defaults to ``t0_policy.bin_width``
+        when a policy is given, else 0 (exact-t0 grouping).
     """
 
     def __init__(
@@ -109,6 +118,8 @@ class WarmStartScheduler:
         row_quantum: int = 4,
         overlap: bool = True,
         mesh: Optional[Any] = None,
+        t0_policy: Optional[Any] = None,
+        t0_bin_width: Optional[float] = None,
     ):
         if cold_nfe < 1:
             raise ValueError(f"cold_nfe must be >= 1, got {cold_nfe}")
@@ -123,6 +134,11 @@ class WarmStartScheduler:
         self.row_quantum = row_quantum
         self.overlap = overlap
         self.mesh = mesh
+        self.t0_policy = t0_policy
+        if t0_bin_width is None:
+            t0_bin_width = (getattr(t0_policy, "bin_width", 0.0)
+                            if t0_policy is not None else 0.0)
+        self.t0_bin_width = float(t0_bin_width)
 
         self._queue: List[ServeRequest] = []
         self._next_id = 0
@@ -132,17 +148,17 @@ class WarmStartScheduler:
 
         # velocity_scale is t0-independent for the linear schedule, so one
         # stepping path serves every per-request t0 (the t0 only moves the
-        # (ts, hs) schedule, which is a dynamic input).
+        # per-row (ts, hs, active, key_idx) schedule, a dynamic input).
         one_step = make_euler_one_step_rows(
             WarmStartPath(t0=0.0), temperature=temperature)
 
-        def refine(params, flow_keys, x, ts, hs):
-            n = ts.shape[0]
-            step_keys = jax.vmap(
-                lambda i: jax.vmap(lambda k: jax.random.fold_in(k, i))(flow_keys)
-            )(jnp.arange(n))
+        def refine(params, flow_keys, x, ts, hs, active, key_idx):
+            # masked per-row loop: rows enter the shared scan at their own
+            # step index; a t0-homogeneous batch reduces bit-exactly to
+            # the plain scan_refine_loop schedule.
             logits_fn = lambda xt, tb: self.flow_model.dfm_apply(params, xt, tb)
-            return scan_refine_loop(logits_fn, one_step, x, step_keys, ts, hs)
+            return scan_refine_loop_rows(
+                logits_fn, one_step, x, flow_keys, ts, hs, active, key_idx)
 
         # donate the draft token buffer into the refine loop off-CPU, as
         # the one-shot engine does — it is dead after the dispatch
@@ -162,15 +178,16 @@ class WarmStartScheduler:
             rows2 = shd.batch_sharding(mesh, 2)
             repl = jax.sharding.NamedSharding(mesh, jax.sharding.PartitionSpec())
 
-            def refine_sharded(params, flow_keys, x, ts, hs):
+            def refine_sharded(params, flow_keys, x, ts, hs, active, key_idx):
                 # rules in scope at trace time so model-internal
                 # `constrain` annotations resolve against SERVE_RULES
                 with shd.axis_rules(shd.SERVE_RULES, mesh):
-                    return refine(params, flow_keys, x, ts, hs)
+                    return refine(params, flow_keys, x, ts, hs, active, key_idx)
 
             self._refine_loop = jax.jit(
                 refine_sharded,
-                in_shardings=(self._param_shardings, rows1, rows2, repl, repl),
+                in_shardings=(self._param_shardings, rows1, rows2,
+                              repl, repl, repl, repl),
                 out_shardings=rows2,
                 donate_argnums=donate,
             )
@@ -180,6 +197,11 @@ class WarmStartScheduler:
     def submit(self, *, seq_len: int, num_samples: int = 1, seed: int = 0,
                t0: Optional[float] = None) -> int:
         """Enqueue one request; returns its request_id.
+
+        ``t0=None`` means "engine decides": the adaptive policy scores
+        the request's drafts when ``t0_policy`` is set, else
+        ``default_t0``. An explicit t0 is always honoured verbatim (and
+        never scored).
 
         Rejects unservable requests HERE (bucket overflow, too many
         samples) so one bad request can never poison a queued batch.
@@ -201,10 +223,8 @@ class WarmStartScheduler:
 
     # ---- stages ----------------------------------------------------------
 
-    def _stage_keys_and_draft(self, mb: MicroBatch):
-        """Draft stage for one micro-batch (runs on the worker thread):
-        derive per-row keys, generate drafts at bucket length, block."""
-        t0 = time.perf_counter()
+    def _mb_row_streams(self, mb: MicroBatch):
+        """(seeds, idx) int32 arrays deriving the per-row key streams."""
         # int32 end to end — ServeRequest rejects seeds outside [0, 2**31)
         seeds = np.zeros((mb.padded_rows,), np.int32)
         idx = np.zeros((mb.padded_rows,), np.int32)
@@ -216,14 +236,37 @@ class WarmStartScheduler:
         # negative sample indices can't collide with real rows of seed 0)
         for r in range(mb.rows, mb.padded_rows):
             seeds[r], idx[r] = 0, -(r + 1)
+        return seeds, idx
+
+    def _stage_keys_and_draft(self, mb: MicroBatch,
+                              predrafted: Optional[Dict[int, np.ndarray]] = None):
+        """Draft stage for one micro-batch (runs on the worker thread):
+        derive per-row keys, generate drafts at bucket length, block.
+
+        ``predrafted`` (adaptive-t0 mode) maps request_id -> that
+        request's (num_samples, bucket_len) drafts from the scoring
+        pre-pass; they are assembled instead of re-drafted (the pre-pass
+        used the same per-row keys, so the tokens are identical either
+        way — padding rows just stay zero).
+        """
+        t0 = time.perf_counter()
+        seeds, idx = self._mb_row_streams(mb)
         draft_keys, flow_keys = _derive_row_keys(
             jnp.asarray(seeds), jnp.asarray(idx))
-        x = self.draft_fn(draft_keys, mb.bucket_len)
+        if predrafted is not None:
+            x = np.zeros((mb.padded_rows, mb.bucket_len), np.int32)
+            for span in mb.spans:
+                x[span.row_offset:span.row_offset + span.rows] = \
+                    predrafted[span.request.request_id]
+            x = jnp.asarray(x)
+        else:
+            x = self.draft_fn(draft_keys, mb.bucket_len)
         x = jax.block_until_ready(x)
         return x, flow_keys, time.perf_counter() - t0
 
     def _stage_refine(self, mb: MicroBatch, x, flow_keys):
-        """Flow stage for one micro-batch: one jitted scan dispatch."""
+        """Flow stage for one micro-batch: one jitted scan dispatch over
+        the per-row masked schedule."""
         t0 = time.perf_counter()
         key = mb.compile_key
         if key in self._compiled:
@@ -231,16 +274,26 @@ class WarmStartScheduler:
         else:
             self._compiled.add(key)
             self._cache_misses += 1
-        ts, hs = refine_schedule(mb.t0, 1.0 / self.cold_nfe, mb.n_steps)
+        ts, hs, active, key_idx, nfe_rows = refine_schedule_rows(
+            mb.row_t0s, 1.0 / self.cold_nfe, self.cold_nfe)
         x = self._refine_loop(
-            self.flow_params, flow_keys, x, jnp.asarray(ts), jnp.asarray(hs))
+            self.flow_params, flow_keys, x, jnp.asarray(ts), jnp.asarray(hs),
+            jnp.asarray(active), jnp.asarray(key_idx))
         x = jax.block_until_ready(x)
-        # observed NFE = the schedule length the scan actually executed;
-        # the gate cross-checks it against an independent recomputation of
-        # warm_nfe(cold_nfe, t0), so a batcher/schedule regression (wrong
-        # n_steps, wrong grouping, stale cold_nfe) raises here
+        # observed NFE = what the executed schedule actually spent: the
+        # scan length for the batch (cross-checked against an independent
+        # warm_nfe(cold_nfe, min t0) recomputation — the worst-case
+        # 1/(1 - min t0) guarantee), and per ROW the active-step count,
+        # which must equal each row's own warm_nfe(cold_nfe, t0_row). A
+        # batcher/schedule regression (wrong n_steps, wrong grouping,
+        # stale cold_nfe, a row overshooting its bound) raises here.
         guarantees.require_bucket_guarantee(
             self.cold_nfe, mb.t0, len(ts),
+            bucket_len=mb.bucket_len, rows=mb.rows)
+        observed_rows = active.sum(axis=0)
+        mask = mb.row_mask
+        guarantees.require_row_guarantees(
+            self.cold_nfe, mb.row_t0s[mask], observed_rows[mask],
             bucket_len=mb.bucket_len, rows=mb.rows)
         return x, time.perf_counter() - t0
 
@@ -261,33 +314,113 @@ class WarmStartScheduler:
             self._queue = requests + self._queue
             raise
 
+    def _policy_prepass(self, requests: Sequence[ServeRequest]):
+        """Adaptive-t0 scoring pre-pass (t0_policy mode).
+
+        Drafts every request at its bucket length (row-keyed, batched per
+        bucket), scores the drafts of requests WITHOUT a t0 override, and
+        resolves their warm-start time through the policy. Returns
+        ``(resolved_requests, predrafted, policy_report)`` — the drafts
+        are kept and reused by the pipeline (requests are never drafted
+        twice), identical to what the draft stage would have produced
+        because the pre-pass derives the same per-row key streams.
+        """
+        t_start = time.perf_counter()
+        by_bucket: Dict[int, List[ServeRequest]] = {}
+        for req in requests:
+            blen = bucket_seq_len(req.seq_len, min_bucket=self.min_bucket,
+                                  max_bucket=self.max_bucket)
+            by_bucket.setdefault(blen, []).append(req)
+
+        predrafted: Dict[int, np.ndarray] = {}
+        resolved_t0: Dict[int, float] = {}
+        scored = 0
+        for blen, reqs in sorted(by_bucket.items()):
+            seeds, idx, offsets = [], [], {}
+            for req in reqs:
+                offsets[req.request_id] = len(seeds)
+                seeds.extend([req.seed] * req.num_samples)
+                idx.extend(range(req.num_samples))
+            draft_keys, _ = _derive_row_keys(
+                jnp.asarray(np.asarray(seeds, np.int32)),
+                jnp.asarray(np.asarray(idx, np.int32)))
+            x = np.asarray(jax.block_until_ready(self.draft_fn(draft_keys, blen)))
+            need_score = [r for r in reqs if r.t0 is None]
+            if need_score:
+                rows = np.concatenate([
+                    x[offsets[r.request_id]:offsets[r.request_id] + r.num_samples]
+                    for r in need_score])
+                t0_rows = self.t0_policy.t0_for_drafts(rows)
+                at = 0
+                for r in need_score:
+                    resolved_t0[r.request_id] = float(
+                        t0_rows[at:at + r.num_samples].min())
+                    at += r.num_samples
+                scored += len(need_score)
+            for req in reqs:
+                o = offsets[req.request_id]
+                predrafted[req.request_id] = x[o:o + req.num_samples]
+
+        resolved = [
+            req if req.t0 is not None
+            else dataclasses.replace(req, t0=resolved_t0[req.request_id])
+            for req in requests
+        ]
+        report = {
+            "scored_requests": scored,
+            "prepass_time_s": time.perf_counter() - t_start,
+            "t0_histogram": dict(sorted(_histogram(
+                list(resolved_t0.values())).items())),
+        }
+        return resolved, predrafted, report
+
     def serve_requests(
         self, requests: Sequence[ServeRequest]
     ) -> Tuple[Dict[int, RequestResult], dict]:
+        # the wall clock starts BEFORE the policy pre-pass: in adaptive
+        # mode the pre-pass IS the draft stage (plus scoring), so
+        # wall_time_s / requests_per_s must pay for it
+        wall0 = time.perf_counter()
+        policy_report = None
+        predrafted = None
+        if self.t0_policy is not None:
+            requests_resolved, predrafted, policy_report = \
+                self._policy_prepass(requests)
+        else:
+            requests_resolved = list(requests)
+
         batches = pack_requests(
-            requests, cold_nfe=self.cold_nfe, default_t0=self.default_t0,
+            requests_resolved, cold_nfe=self.cold_nfe,
+            default_t0=self.default_t0,
             max_rows=self.max_rows, min_bucket=self.min_bucket,
             max_bucket=self.max_bucket, row_quantum=self.row_quantum,
-            row_multiple=self._row_multiple)
+            row_multiple=self._row_multiple,
+            t0_bin_width=self.t0_bin_width)
 
         results: Dict[int, RequestResult] = {}
         batch_reports: List[dict] = []
         hits0, misses0 = self._cache_hits, self._cache_misses
-        wall0 = time.perf_counter()
-        draft_total = flow_total = 0.0
+        # pre-pass drafting+scoring counts as draft-stage time; it is
+        # serial (never hidden behind a refine), which the overlap
+        # arithmetic below reflects automatically since it sits in both
+        # draft_total and the wall clock
+        draft_total = (policy_report["prepass_time_s"]
+                       if policy_report is not None else 0.0)
+        flow_total = 0.0
 
         def finish(k: int, mb: MicroBatch, x, t_draft: float, t_flow: float):
             nonlocal draft_total, flow_total
             draft_total += t_draft
             flow_total += t_flow
             x_host = np.asarray(x)
-            for span in mb.spans:
+            for span, span_t0 in zip(mb.spans, mb.t0_spans):
                 req = span.request
                 results[req.request_id] = RequestResult(
                     request_id=req.request_id,
                     tokens=x_host[span.row_offset:span.row_offset + span.rows,
                                   :req.seq_len],
-                    nfe=mb.n_steps, t0=mb.t0,
+                    nfe=guarantees.warm_nfe(self.cold_nfe, span_t0),
+                    t0=span_t0,
                     bucket_len=mb.bucket_len, micro_batch=k)
             batch_reports.append({
                 "micro_batch": k,
@@ -295,24 +428,26 @@ class WarmStartScheduler:
                 "rows": mb.rows,
                 "padded_rows": mb.padded_rows,
                 "t0": mb.t0,
+                "t0_spans": list(mb.t0_spans),
                 "nfe": mb.n_steps,
                 "draft_time_s": t_draft,
                 "flow_time_s": t_flow,
             })
 
+        stage_draft = partial(self._stage_keys_and_draft,
+                              predrafted=predrafted)
         if not self.overlap or len(batches) <= 1:
             for k, mb in enumerate(batches):
-                x, flow_keys, t_draft = self._stage_keys_and_draft(mb)
+                x, flow_keys, t_draft = stage_draft(mb)
                 x, t_flow = self._stage_refine(mb, x, flow_keys)
                 finish(k, mb, x, t_draft, t_flow)
         else:
             with ThreadPoolExecutor(max_workers=1) as pool:
-                fut = pool.submit(self._stage_keys_and_draft, batches[0])
+                fut = pool.submit(stage_draft, batches[0])
                 for k, mb in enumerate(batches):
                     x, flow_keys, t_draft = fut.result()
                     if k + 1 < len(batches):
-                        fut = pool.submit(
-                            self._stage_keys_and_draft, batches[k + 1])
+                        fut = pool.submit(stage_draft, batches[k + 1])
                     x, t_flow = self._stage_refine(mb, x, flow_keys)
                     finish(k, mb, x, t_draft, t_flow)
 
@@ -320,6 +455,7 @@ class WarmStartScheduler:
         overlapped = max(0.0, draft_total + flow_total - wall)
         denom = min(draft_total, flow_total)
         rows = sum(mb.rows for mb in batches)
+        nfe_values = [r.nfe for r in results.values()]
         report = {
             "num_requests": len(requests),
             "num_micro_batches": len(batches),
@@ -332,10 +468,22 @@ class WarmStartScheduler:
             "overlap_efficiency": (overlapped / denom) if denom > 0 else 0.0,
             "requests_per_s": len(requests) / wall if wall > 0 else float("inf"),
             "samples_per_s": rows / wall if wall > 0 else float("inf"),
+            "mean_request_nfe": (float(np.mean(nfe_values))
+                                 if nfe_values else 0.0),
             # this run's counts; lifetime totals live on the instance
             "jit_cache": {"hits": self._cache_hits - hits0,
                           "misses": self._cache_misses - misses0},
             "mesh": None if self.mesh is None else dict(self.mesh.shape),
+            "adaptive_t0": self.t0_policy is not None,
+            "policy": policy_report,
             "batches": batch_reports,
         }
         return results, report
+
+
+def _histogram(values: List[float]) -> Dict[str, int]:
+    out: Dict[str, int] = {}
+    for v in values:
+        k = f"{v:.3f}"
+        out[k] = out.get(k, 0) + 1
+    return out

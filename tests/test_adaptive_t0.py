@@ -1,0 +1,329 @@
+"""Per-request adaptive-t0 serving: masked per-row refine schedules,
+per-row guarantee accounting, t0-binned packing, the scheduler policy
+pre-pass, float-edge warm_nfe/refine_schedule behaviour, and the
+batch-keyed vs row-keyed draft determinism contract."""
+
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import guarantees
+from repro.core.guarantees import GuaranteeViolation, warm_nfe, warm_nfe_rows
+from repro.core.paths import WarmStartPath
+from repro.core.sampler import (
+    make_euler_one_step_rows, refine_schedule, refine_schedule_rows,
+    scan_refine_loop_rows,
+)
+from repro.drafting import AdaptiveT0Policy, T0Calibration, bin_t0
+from repro.serving import (
+    BatchKeyedDraftWarning, ServeRequest, WarmStartScheduler,
+    batch_keyed_draft, pack_requests, t0_bin, uniform_draft,
+)
+
+
+class ToyFlow:
+    def __init__(self, vocab=11, mode=2):
+        self.vocab, self.mode = vocab, mode
+
+    def dfm_apply(self, params, x, t, extras=None):
+        return jnp.zeros(x.shape + (self.vocab,)).at[..., self.mode].set(30.0)
+
+
+def make_policy(bin_width=0.1):
+    # deterministic fake scorer: mean token value scaled into [0, 1.1)
+    scorer = lambda toks: jnp.asarray(toks, jnp.float32).mean(axis=-1) / 10.0
+    calib = T0Calibration(scores=(0.1, 0.9), t0s=(0.5, 0.9),
+                          t0_floor=0.5, t0_ceil=0.9)
+    return AdaptiveT0Policy(scorer=scorer, calibration=calib,
+                            bin_width=bin_width)
+
+
+def make_scheduler(**kw):
+    flow = ToyFlow()
+    sched = WarmStartScheduler(
+        flow_model=flow, flow_params={},
+        draft_fn=kw.pop("draft_fn", uniform_draft(11)),
+        cold_nfe=kw.pop("cold_nfe", 20),
+        default_t0=kw.pop("default_t0", 0.8), **kw)
+    return sched, flow
+
+
+# ---------------------------------------------------------------------------
+# per-row schedule
+# ---------------------------------------------------------------------------
+
+def test_refine_schedule_rows_homogeneous_matches_scalar_schedule():
+    ts_ref, hs_ref = refine_schedule(0.8, 1.0 / 20, 4)
+    ts, hs, active, key_idx, nfe = refine_schedule_rows([0.8] * 3, 1.0 / 20, 20)
+    assert active.all()
+    for b in range(3):
+        np.testing.assert_array_equal(ts[:, b], ts_ref)
+        np.testing.assert_array_equal(hs[:, b], hs_ref)
+        np.testing.assert_array_equal(key_idx[:, b], np.arange(4))
+    np.testing.assert_array_equal(nfe, [4, 4, 4])
+
+
+def test_refine_schedule_rows_heterogeneous_entry_indices():
+    # t0 = 0.5 -> 10 steps, 0.8 -> 4 steps: the 0.8 row sits out the
+    # first 6 steps and runs its OWN 4-step schedule (local key indices)
+    ts, hs, active, key_idx, nfe = refine_schedule_rows(
+        [0.5, 0.8], 1.0 / 20, 20)
+    assert ts.shape == (10, 2)
+    np.testing.assert_array_equal(nfe, [10, 4])
+    np.testing.assert_array_equal(active.sum(0), nfe)
+    assert not active[:6, 1].any() and active[6:, 1].all()
+    ts_ref, hs_ref = refine_schedule(0.8, 1.0 / 20, 4)
+    np.testing.assert_array_equal(ts[6:, 1], ts_ref)
+    np.testing.assert_array_equal(hs[6:, 1], hs_ref)
+    np.testing.assert_array_equal(key_idx[6:, 1], np.arange(4))
+    assert (hs[:6, 1] == 0).all()
+
+
+def test_scan_refine_loop_rows_pack_invariance():
+    """A row's trajectory depends only on its own key and t0 slice —
+    identical whether batched with a worse-t0 neighbour or alone."""
+    flow = ToyFlow()
+    path = WarmStartPath(t0=0.0)
+    one_step = make_euler_one_step_rows(path)
+    logits_fn = lambda x, t: flow.dfm_apply(None, x, t)
+    keys = jax.random.split(jax.random.key(0), 2)
+    x0 = jax.random.randint(jax.random.key(1), (2, 6), 0, 11, jnp.int32)
+
+    ts, hs, active, key_idx, _ = refine_schedule_rows([0.5, 0.8], 1 / 20, 20)
+    both = scan_refine_loop_rows(
+        logits_fn, one_step, x0, keys, jnp.asarray(ts), jnp.asarray(hs),
+        jnp.asarray(active), jnp.asarray(key_idx))
+
+    ts1, hs1, a1, k1, _ = refine_schedule_rows([0.8], 1 / 20, 20)
+    alone = scan_refine_loop_rows(
+        logits_fn, one_step, x0[1:], keys[1:], jnp.asarray(ts1),
+        jnp.asarray(hs1), jnp.asarray(a1), jnp.asarray(k1))
+    np.testing.assert_array_equal(np.asarray(both)[1], np.asarray(alone)[0])
+
+
+# ---------------------------------------------------------------------------
+# guarantees: per-row accounting + float edges (satellite)
+# ---------------------------------------------------------------------------
+
+def test_require_row_guarantees():
+    guarantees.require_row_guarantees(20, [0.5, 0.8], [10, 4])
+    with pytest.raises(GuaranteeViolation, match="row 1"):
+        guarantees.require_row_guarantees(20, [0.5, 0.8], [10, 5])
+    with pytest.raises(GuaranteeViolation, match="bucket_len=16"):
+        guarantees.require_row_guarantees(20, [0.5], [9], bucket_len=16,
+                                          rows=1)
+    with pytest.raises(GuaranteeViolation, match="2 observed"):
+        guarantees.require_row_guarantees(20, [0.5], [10, 4])
+
+
+def test_warm_nfe_rows_matches_scalar():
+    t0s = [0.0, 0.5, 0.8, 0.95]
+    assert warm_nfe_rows(20, t0s) == [warm_nfe(20, t) for t in t0s]
+
+
+def test_warm_nfe_float_edges():
+    # t0 within one ulp of 1: still a valid warm start, exactly 1 step
+    assert warm_nfe(20, 1.0 - 1e-12) == 1
+    assert warm_nfe(1 << 20, 1.0 - 1e-12) == 1
+    # t0 exactly on a step boundary: no spurious extra step from fp error
+    assert warm_nfe(20, 0.75) == 5            # 20 * 0.25 == 5.0 exactly
+    assert warm_nfe(20, 0.9) == 2
+    assert warm_nfe(10, 0.7) == 3             # 10*0.3 = 2.9999...8 in fp
+    # cold_nfe = 1: a single-step baseline still warm-starts to 1 step
+    assert warm_nfe(1, 0.0) == 1
+    assert warm_nfe(1, 0.99) == 1
+    with pytest.raises(ValueError):
+        warm_nfe(20, 1.0)
+
+
+def test_refine_schedule_float_edges():
+    # t0 ~ 1 (one ulp away): one step, lands exactly on t = 1, h >= 0
+    ts, hs = refine_schedule(1.0 - 1e-12, 1.0 / 20, 1)
+    assert ts.shape == (1,) and hs[0] >= 0.0
+    assert float(ts[-1]) + float(hs[-1]) == pytest.approx(1.0, abs=1e-6)
+    # cold_nfe = 1: single full-length step
+    ts, hs = refine_schedule(0.0, 1.0, 1)
+    np.testing.assert_allclose(ts, [0.0])
+    np.testing.assert_allclose(hs, [1.0])
+    # per-row variant at the same edges
+    ts, hs, active, _, nfe = refine_schedule_rows(
+        [1.0 - 1e-12, 0.75], 1.0 / 20, 20)
+    np.testing.assert_array_equal(nfe, [1, 5])
+    assert active.sum(0).tolist() == [1, 5]
+    assert (hs >= 0.0).all()
+
+
+def test_heterogeneous_rows_guarantee_accounting_end_to_end():
+    """Per-row NFE accounting through the scheduler: mixed t0s in one
+    bin, every request's NFE equals its own warm_nfe and the batch ran
+    the worst row's schedule length."""
+    sched, _ = make_scheduler(t0_bin_width=0.1)
+    a = sched.submit(seq_len=8, seed=1, t0=0.62)
+    b = sched.submit(seq_len=8, seed=2, t0=0.68)
+    c = sched.submit(seq_len=8, seed=3, t0=0.8)    # other bin
+    results, rep = sched.run()
+    assert rep["num_micro_batches"] == 2
+    assert results[a].nfe == warm_nfe(20, 0.62)
+    assert results[b].nfe == warm_nfe(20, 0.68)
+    assert results[c].nfe == warm_nfe(20, 0.8)
+    shared = [x for x in rep["batches"] if x["rows"] == 2][0]
+    assert shared["nfe"] == warm_nfe(20, 0.62)     # worst row's length
+
+
+# ---------------------------------------------------------------------------
+# t0-binned packing
+# ---------------------------------------------------------------------------
+
+def _req(rid, seq, n=1, seed=0, t0=None):
+    return ServeRequest(request_id=rid, seq_len=seq, num_samples=n,
+                        seed=seed, t0=t0)
+
+
+def test_t0_bin_zero_width_is_exact_grouping():
+    assert t0_bin(0.8123, 0.0) == 0.8123
+    assert t0_bin(0.8123, 0.1) == pytest.approx(0.8)
+    assert t0_bin(0.8, 0.1) == pytest.approx(0.8)   # boundary stays put
+
+
+def test_pack_requests_t0_bins_share_micro_batch():
+    reqs = [_req(0, 8, t0=0.62), _req(1, 8, t0=0.68), _req(2, 8, t0=0.74)]
+    # exact grouping: three batches
+    assert len(pack_requests(reqs, cold_nfe=20, default_t0=0.8)) == 3
+    # 0.1-wide bins: {0.62, 0.68} share, 0.74 separate
+    batches = pack_requests(reqs, cold_nfe=20, default_t0=0.8,
+                            t0_bin_width=0.1)
+    assert sorted(len(mb.spans) for mb in batches) == [1, 2]
+    shared = [mb for mb in batches if len(mb.spans) == 2][0]
+    assert shared.t0 == 0.62                        # worst t0 drives n_steps
+    assert shared.n_steps == warm_nfe(20, 0.62)
+    assert shared.t0_spans == (0.62, 0.68)
+    # per-row t0 vector: padding rows carry the LARGEST t0 (fewest steps)
+    t0s = shared.row_t0s
+    assert t0s.shape == (shared.padded_rows,)
+    np.testing.assert_allclose(t0s[:2], [0.62, 0.68])
+    assert (t0s[2:] == 0.68).all()
+
+
+def test_bin_t0_snaps_down_only():
+    assert bin_t0(0.87, width=0.1) == pytest.approx(0.8)
+    assert bin_t0(0.8, width=0.1) == pytest.approx(0.8)
+    assert bin_t0(0.55, width=0.1, floor=0.5) == pytest.approx(0.5)
+    assert bin_t0(0.3, width=0.1, floor=0.5) == 0.5     # clamped up to floor
+    assert bin_t0(0.87, width=0.0) == 0.87              # no binning
+
+
+# ---------------------------------------------------------------------------
+# scheduler policy pre-pass (adaptive t0)
+# ---------------------------------------------------------------------------
+
+def test_adaptive_t0_end_to_end_and_guarantees():
+    sched, _ = make_scheduler(t0_policy=make_policy())
+    rids = [sched.submit(seq_len=8 + i, num_samples=1 + (i % 2),
+                         seed=10 + i) for i in range(5)]
+    fixed = sched.submit(seq_len=8, seed=99, t0=0.75)   # override: unscored
+    results, rep = sched.run()
+    assert rep["adaptive_t0"] and rep["policy"]["scored_requests"] == 5
+    for rid in rids:
+        r = results[rid]
+        assert 0.5 <= r.t0 <= 0.9
+        assert r.nfe == warm_nfe(20, r.t0)
+    assert results[fixed].t0 == 0.75
+    assert results[fixed].nfe == warm_nfe(20, 0.75)
+    assert sum(rep["policy"]["t0_histogram"].values()) == 5
+
+
+def test_adaptive_t0_output_invariant_to_packing():
+    """The determinism contract survives the policy pre-pass: same
+    request -> same (t0, nfe, tokens) regardless of neighbours."""
+    outs = []
+    for extra in ([], [(9, 2, 77), (6, 1, 88)]):
+        sched, _ = make_scheduler(t0_policy=make_policy(), max_rows=8)
+        rid = sched.submit(seq_len=12, num_samples=3, seed=5)
+        for L, n, s in extra:
+            sched.submit(seq_len=L, num_samples=n, seed=s)
+        results, _ = sched.run()
+        outs.append(results[rid])
+    np.testing.assert_array_equal(outs[0].tokens, outs[1].tokens)
+    assert outs[0].t0 == outs[1].t0 and outs[0].nfe == outs[1].nfe
+
+
+def test_adaptive_drafts_not_generated_twice():
+    """The pre-pass drafts are reused by the pipeline: draft_fn runs once
+    per bucket group, not again per micro-batch."""
+    calls = []
+    base = uniform_draft(11)
+
+    def counting_draft(keys, seq_len):
+        calls.append(int(keys.shape[0]))
+        return base(keys, seq_len)
+
+    sched, _ = make_scheduler(t0_policy=make_policy(),
+                              draft_fn=counting_draft)
+    for i in range(4):
+        sched.submit(seq_len=12, seed=i)
+    sched.run()
+    assert calls == [4]        # one pre-pass call for the shared bucket
+
+
+# ---------------------------------------------------------------------------
+# batch-keyed vs row-keyed drafts (satellite: the determinism trade-off)
+# ---------------------------------------------------------------------------
+
+class IdentityFlow:
+    """Logits peaked on the CURRENT token: the refine is a fixed point,
+    so served tokens == draft tokens and draft determinism is directly
+    observable at the scheduler output."""
+
+    def dfm_apply(self, params, x, t, extras=None):
+        return jax.nn.one_hot(x, 11) * 30.0
+
+
+def _serve_target(draft_fn, extra_first):
+    sched = WarmStartScheduler(
+        flow_model=IdentityFlow(), flow_params={}, draft_fn=draft_fn,
+        cold_nfe=20, default_t0=0.8, max_rows=8)
+    if extra_first:                       # shifts the target's row offset
+        sched.submit(seq_len=12, num_samples=2, seed=88)
+    rid = sched.submit(seq_len=12, num_samples=1, seed=5)
+    results, _ = sched.run()
+    return results[rid].tokens
+
+
+def test_batch_keyed_draft_is_pack_variant_row_keyed_is_not():
+    """batch_keyed_draft drops the per-request determinism guarantee:
+    the same request's drafts change when packed behind a neighbour.
+    The row-keyed draft is invariant under the identical scenario."""
+    def batch_gen(key, num, seq_len):
+        return jax.random.randint(key, (num, seq_len), 0, 11, jnp.int32)
+
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", BatchKeyedDraftWarning)
+        bk_alone = _serve_target(batch_keyed_draft(batch_gen), False)
+        bk_packed = _serve_target(batch_keyed_draft(batch_gen), True)
+    assert (np.asarray(bk_alone) != np.asarray(bk_packed)).any()
+
+    rk_alone = _serve_target(uniform_draft(11), False)
+    rk_packed = _serve_target(uniform_draft(11), True)
+    np.testing.assert_array_equal(rk_alone, rk_packed)
+
+
+def test_batch_keyed_draft_warns_once():
+    def gen(key, num, seq_len):
+        return jnp.zeros((num, seq_len), jnp.int32)
+
+    draft = batch_keyed_draft(gen)
+    keys = jax.random.split(jax.random.key(0), 2)
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        draft(keys, 4)
+        draft(keys, 4)
+    assert len(w) == 1
+    assert issubclass(w[0].category, BatchKeyedDraftWarning)
+    # opt-out path stays silent
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        batch_keyed_draft(gen, warn=False)(keys, 4)
+    assert not w
