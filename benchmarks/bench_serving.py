@@ -15,8 +15,16 @@ steady state of serving ongoing heterogeneous traffic. Bucketing keeps
 the scheduler's compiled-shape set closed (timed passes are jit-cache
 hits); the one-shot engine keeps meeting novel exact shapes and pays
 the retrace, which is exactly the failure mode the scheduler removes.
-Writes ``BENCH_serving.json`` (per-stage latency, overlap efficiency,
-jit-cache hit counts, requests/s for both engines and the speedup).
+
+The STREAMING section then replays the same fresh streams as a Poisson
+open-loop arrival process through ``serve_stream`` (the SLO-aware
+admission loop) and measures what batch serving cannot: per-request
+time-to-result percentiles (p50/p95/p99), SLO attainment at the
+benchmarked arrival rate, and time-to-first-result against the
+end-of-run baseline (where every result lands only when the whole run
+finishes). Writes ``BENCH_serving.json`` (per-stage latency, overlap
+efficiency, jit-cache hit counts, requests/s for both engines, the
+speedup, and the streaming latency columns).
 
 Run:  PYTHONPATH=src python benchmarks/bench_serving.py [--smoke] [--out F]
 """
@@ -25,6 +33,7 @@ from __future__ import annotations
 
 import argparse
 import json
+import threading
 import time
 
 import jax
@@ -33,7 +42,8 @@ import numpy as np
 from repro.configs.dfm_dit import tiny_config
 from repro.models import build_model
 from repro.serving import (
-    ServeRequest, WarmStartScheduler, WarmStartServer, uniform_draft,
+    AdmissionQueue, ServeRequest, WarmStartScheduler, WarmStartServer,
+    uniform_draft,
 )
 
 VOCAB = 27
@@ -71,7 +81,79 @@ def run_scheduler(model, params, draft_fn, warmup, streams, *, cold_nfe,
         results, report = sched.serve_requests(stream)
         wall += report["wall_time_s"]
     n = sum(len(s) for s in streams)
-    return results, report, wall, n / wall
+    return sched, results, report, wall, n / wall
+
+
+def run_streaming(sched, streams, *, slo_ms, rate_rps, seed=0):
+    """Poisson open-loop replay of the fresh streams through the
+    SLO-aware streaming admission loop, on the already-warm scheduler.
+
+    For each pass: (1) time the same request set end-of-run
+    (``serve_requests`` — every result lands at wall end, the
+    time-to-first-result baseline), then (2) replay it as Poisson
+    arrivals at ``rate_rps`` into an :class:`AdmissionQueue` from a
+    producer thread while the main thread consumes ``serve_stream``.
+    """
+    rng = np.random.default_rng(seed)
+    latencies, reasons = [], {}
+    slo_met = slo_total = 0
+    ttfrs, baseline_walls = [], []
+    last_report = None
+    for stream in streams:
+        t0 = time.perf_counter()
+        sched.serve_requests(stream)
+        baseline_walls.append(time.perf_counter() - t0)
+
+        queue = AdmissionQueue()
+        delays = rng.exponential(1.0 / rate_rps, size=len(stream))
+
+        def replay(queue=queue, stream=stream, delays=delays):
+            for req, dt in zip(stream, delays):
+                time.sleep(float(dt))
+                queue.push(req)
+            queue.close()
+
+        producer = threading.Thread(target=replay)
+        producer.start()
+        for res in sched.serve_stream(source=queue, slo_ms=slo_ms,
+                                      idle_timeout_s=0.005):
+            latencies.append(res.latency_s)
+            if res.slo_met is not None:
+                slo_total += 1
+                slo_met += int(res.slo_met)
+        producer.join()
+        last_report = sched.stream_report
+        ttfrs.append(last_report["time_to_first_result_s"])
+        for k, v in last_report["flush_reasons"].items():
+            reasons[k] = reasons.get(k, 0) + v
+
+    lat_ms = np.asarray(latencies) * 1e3
+    return {
+        "arrival_rate_rps": rate_rps,
+        "slo_ms": slo_ms,
+        "num_requests": int(len(latencies)),
+        "latency_ms": {
+            "p50": float(np.percentile(lat_ms, 50)),
+            "p95": float(np.percentile(lat_ms, 95)),
+            "p99": float(np.percentile(lat_ms, 99)),
+            "mean": float(lat_ms.mean()),
+        },
+        "slo_attainment": slo_met / slo_total if slo_total else None,
+        "time_to_first_result_s": {
+            "per_pass": ttfrs,
+            "p95": float(np.percentile(ttfrs, 95)),
+        },
+        "baseline_end_of_run_s": {
+            "per_pass": baseline_walls,
+            "p95": float(np.percentile(baseline_walls, 95)),
+        },
+        "ttfr_speedup_vs_end_of_run": (
+            float(np.percentile(baseline_walls, 95))
+            / max(float(np.percentile(ttfrs, 95)), 1e-9)),
+        "flush_reasons": dict(sorted(reasons.items())),
+        "last_pass": {k: v for k, v in last_report.items()
+                      if k != "batches"},
+    }
 
 
 def run_one_shot_baseline(model, params, draft_fn, warmup, streams, *,
@@ -116,6 +198,12 @@ def main():
     ap.add_argument("--passes", type=int, default=3,
                     help="timed fresh-stream passes per engine; wall times "
                          "are summed into one aggregate requests/s")
+    ap.add_argument("--slo-ms", type=float, default=0.0,
+                    help="streaming latency SLO in ms (0 = auto: 4x the "
+                         "warm end-of-run wall, floored at 500ms)")
+    ap.add_argument("--arrival-rate", type=float, default=0.0,
+                    help="streaming Poisson arrival rate in req/s (0 = "
+                         "auto: half the warm batch service rate)")
     args = ap.parse_args()
 
     if args.smoke:
@@ -136,11 +224,20 @@ def main():
 
     print(f"stream: {args.passes} x {n_requests} requests, buckets up to "
           f"{max_bucket}, cold_nfe={args.cold_nfe}")
-    results, sched_rep, sched_wall, sched_rps = run_scheduler(
+    sched, results, sched_rep, sched_wall, sched_rps = run_scheduler(
         model, params, draft_fn, warmup, streams,
         cold_nfe=args.cold_nfe, max_rows=max_rows)
     base_wall, base_rps = run_one_shot_baseline(
         model, params, draft_fn, warmup, streams, cold_nfe=args.cold_nfe)
+
+    # streaming replay on the warm scheduler: auto-scale the arrival rate
+    # and SLO to this machine's measured warm service rate so the bench
+    # exercises the admission loop below saturation on any hardware
+    warm_wall = sched_wall / max(args.passes, 1)
+    rate = args.arrival_rate or 0.5 * n_requests / warm_wall
+    slo_ms = args.slo_ms or max(500.0, 4e3 * warm_wall)
+    streaming = run_streaming(sched, streams, slo_ms=slo_ms, rate_rps=rate,
+                              seed=99)
 
     speedup = sched_rps / base_rps
     # cross-check every served request's NFE against an independent
@@ -173,21 +270,45 @@ def main():
             "requests_per_s": base_rps,
         },
         "speedup_requests_per_s": speedup,
+        "streaming": streaming,
         "guarantees_enforced": nfe_ok,
     }
     with open(args.out, "w") as f:
         json.dump(out, f, indent=2)
 
+    lat = streaming["latency_ms"]
+    att = streaming["slo_attainment"]
     print(f"scheduler : {sched_rps:.2f} req/s "
           f"(last pass: draft {sched_rep['draft_time_s']*1e3:.0f}ms, "
           f"flow {sched_rep['flow_time_s']*1e3:.0f}ms, "
           f"overlap_eff {sched_rep['overlap_efficiency']:.2f}, "
           f"jit cache {sched_rep['jit_cache']})")
     print(f"one-shot  : {base_rps:.2f} req/s")
-    print(f"speedup   : {speedup:.2f}x  -> {args.out}")
-    if args.smoke and speedup < 1.1:
-        raise SystemExit(
-            f"smoke threshold failed: scheduler speedup {speedup:.2f}x < 1.1x")
+    print(f"speedup   : {speedup:.2f}x")
+    print(f"streaming : {rate:.0f} req/s Poisson, SLO {slo_ms:.0f}ms -> "
+          f"time-to-result p50/p95/p99 = "
+          f"{lat['p50']:.0f}/{lat['p95']:.0f}/{lat['p99']:.0f} ms, "
+          f"SLO attainment {att:.0%}, "
+          f"first result {streaming['time_to_first_result_s']['p95']:.3f}s "
+          f"vs end-of-run {streaming['baseline_end_of_run_s']['p95']:.3f}s "
+          f"({streaming['ttfr_speedup_vs_end_of_run']:.1f}x), "
+          f"flushes {streaming['flush_reasons']}  -> {args.out}")
+    if args.smoke:
+        if speedup < 1.1:
+            raise SystemExit(
+                f"smoke threshold failed: scheduler speedup {speedup:.2f}x "
+                f"< 1.1x")
+        if (streaming["time_to_first_result_s"]["p95"]
+                >= streaming["baseline_end_of_run_s"]["p95"]):
+            raise SystemExit(
+                "smoke threshold failed: streaming p95 time-to-first-result "
+                f"{streaming['time_to_first_result_s']['p95']:.3f}s is not "
+                f"below the end-of-run baseline "
+                f"{streaming['baseline_end_of_run_s']['p95']:.3f}s")
+        if att is not None and att < 0.95:
+            raise SystemExit(
+                f"smoke threshold failed: SLO attainment {att:.0%} < 95% "
+                f"at {rate:.0f} req/s")
 
 
 if __name__ == "__main__":

@@ -89,6 +89,40 @@ def main():
         print(f"  [{rid}] nfe={r.nfe} t0={r.t0} bucket={r.bucket_len}: "
               f"{decode(np.asarray(r.tokens[0]))}")
 
+    # --- streaming + SLO-aware admission ----------------------------------
+    # same engine, but results are YIELDED as each micro-batch finishes
+    # (bit-identical tokens to the batch path), while an AdmissionQueue
+    # keeps accepting requests mid-serve; partial buckets flush when a
+    # request's latency SLO would otherwise be blown
+    print("\nstreaming serve (5s SLO, open admission) ...")
+    import threading
+
+    from repro.serving import AdmissionQueue
+
+    queue = AdmissionQueue()
+    arr = np.random.default_rng(8)
+
+    def replay():
+        import time
+        for i in range(8):
+            time.sleep(float(arr.exponential(0.02)))
+            queue.submit(seq_len=int(arr.integers(8, 33)), seed=2000 + i)
+        queue.close()
+
+    producer = threading.Thread(target=replay)
+    producer.start()
+    for res in sched.serve_stream(source=queue, slo_ms=5000.0,
+                                  idle_timeout_s=0.01):
+        print(f"  [{res.request_id}] latency={res.latency_s * 1e3:.0f}ms "
+              f"slo_met={res.slo_met} flush={res.flush_reason}: "
+              f"{decode(np.asarray(res.tokens[0]))}")
+    producer.join()
+    srep = sched.stream_report
+    print(f"  first result {srep['time_to_first_result_s'] * 1e3:.0f}ms "
+          f"after first admission, p95 latency "
+          f"{srep['latency_s']['p95'] * 1e3:.0f}ms, SLO attainment "
+          f"{srep['slo_attainment']:.0%}, flushes {srep['flush_reasons']}")
+
     # --- drafting subsystem: AR-KV drafts + adaptive t0 -------------------
     print("\ndrafting subsystem (KV-cached AR drafts, quality-adaptive t0) ...")
     from repro.drafting import (

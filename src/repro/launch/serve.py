@@ -13,11 +13,22 @@ Drafting subsystem modes (see ``src/repro/drafting/``):
                   under the learned path and each request enters the
                   refine at its calibrated (binned) warm-start time.
                   Implies --scheduler.
+
+Streaming / SLO admission modes (imply --scheduler):
+  --stream           serve through the streaming admission loop
+                     (``serve_stream``): results print as each
+                     micro-batch finishes, not at end-of-run;
+  --slo-ms MS        per-request latency SLO — partial buckets flush
+                     when a request's deadline budget (minus the
+                     measured per-NFE refine-cost estimate) runs out;
+  --arrival-rate R   Poisson open-loop arrival replay at R requests/s
+                     (0 = admit the whole set up front).
 """
 
 from __future__ import annotations
 
 import argparse
+import threading
 
 import jax
 import numpy as np
@@ -53,11 +64,22 @@ def main():
                     help="draft stage: 'lstm' = batch-keyed LSTM.generate "
                          "adapter (demo), 'ar-kv' = row-keyed KV-cached "
                          "ARDraftEngine (pack-invariant serving)")
+    ap.add_argument("--stream", action="store_true",
+                    help="stream results through the SLO-aware admission "
+                         "loop (serve_stream) instead of end-of-run batch "
+                         "serving; implies --scheduler")
+    ap.add_argument("--slo-ms", type=float, default=None,
+                    help="per-request latency SLO in ms (streaming mode): "
+                         "partial buckets flush when a deadline would blow")
+    ap.add_argument("--arrival-rate", type=float, default=0.0,
+                    help="Poisson arrival replay rate in requests/s for "
+                         "--stream (0 = admit everything up front)")
     args = ap.parse_args()
 
     t0_auto = str(args.t0).lower() == "auto"
-    if t0_auto and not args.scheduler:
-        print("--t0 auto implies --scheduler; enabling it")
+    if (t0_auto or args.stream) and not args.scheduler:
+        print(f"--{'t0 auto' if t0_auto else 'stream'} implies --scheduler; "
+              "enabling it")
         args.scheduler = True
     # adaptive serving may go as shallow as the calibration floor (the
     # worst tier's target t0); train the flow path there so every served
@@ -140,11 +162,58 @@ def main():
             t0_policy=t0_policy,
         )
         rng_sizes = np.random.default_rng(args.seed + 1)
-        for i in range(args.num):
-            sched.submit(
-                seq_len=int(rng_sizes.integers(max_bucket // 2, max_bucket + 1)),
-                num_samples=1, seed=100 + i,
-                t0=None)                   # None -> policy / default
+        sizes = [int(rng_sizes.integers(max_bucket // 2, max_bucket + 1))
+                 for _ in range(args.num)]
+
+        if args.stream:
+            from repro.serving import AdmissionQueue
+
+            queue = AdmissionQueue()
+            rng_arr = np.random.default_rng(args.seed + 2)
+
+            def replay():
+                for i, L in enumerate(sizes):
+                    if args.arrival_rate > 0:
+                        import time as _time
+                        _time.sleep(float(
+                            rng_arr.exponential(1.0 / args.arrival_rate)))
+                    queue.submit(seq_len=L, num_samples=1, seed=100 + i,
+                                 t0=None)  # None -> policy / default
+                queue.close()
+
+            producer = threading.Thread(target=replay, daemon=True)
+            producer.start()
+            print(f"\nstreaming {args.num} requests "
+                  f"(arrival rate {args.arrival_rate or 'inf'} req/s, "
+                  f"SLO {args.slo_ms or '-'} ms):")
+            for res in sched.serve_stream(source=queue, slo_ms=args.slo_ms,
+                                          idle_timeout_s=0.02):
+                slo = ("" if res.slo_met is None
+                       else f" slo={'OK' if res.slo_met else 'MISS'}")
+                print(f"  [{res.request_id}] t0={res.t0:.2f} nfe={res.nfe} "
+                      f"bucket={res.bucket_len} mb={res.micro_batch} "
+                      f"flush={res.flush_reason} "
+                      f"latency={res.latency_s * 1e3:.0f}ms{slo}  "
+                      f"{decode(np.asarray(res.tokens[0]))}")
+            producer.join()
+            rep = sched.stream_report
+            lat = rep["latency_s"]
+            att = rep["slo_attainment"]
+            print(f"\nstream: {rep['completed']} results in "
+                  f"{rep['num_micro_batches']} micro-batches, "
+                  f"first result at {rep['time_to_first_result_s']:.3f}s, "
+                  f"latency p50/p95/p99 = {lat['p50'] * 1e3:.0f}/"
+                  f"{lat['p95'] * 1e3:.0f}/{lat['p99'] * 1e3:.0f} ms, "
+                  f"SLO attainment "
+                  f"{'-' if att is None else f'{att:.0%}'}, "
+                  f"flushes {rep['flush_reasons']}")
+            if engine is not None:
+                print(f"draft engine: {engine.stats.as_dict()}")
+            return
+
+        for i, L in enumerate(sizes):
+            sched.submit(seq_len=L, num_samples=1, seed=100 + i,
+                         t0=None)          # None -> policy / default
         results, rep = sched.run()
         print(f"\nscheduler: {rep['num_requests']} requests in "
               f"{rep['num_micro_batches']} micro-batches, "

@@ -1,22 +1,27 @@
 from repro.serving.batcher import (
-    MicroBatch, RowSpan, ServeRequest, bucket_seq_len, pack_requests, pad_rows,
-    t0_bin,
+    DEADLINE_ARMED, DISPATCHED, FILLING, FillingBucket, MicroBatch, RowSpan,
+    ServeRequest, bucket_seq_len, pack_requests, pad_rows, split_request,
+    t0_bin, usable_rows,
 )
 from repro.serving.drafts import (
     BatchKeyedDraftWarning, batch_keyed_draft, corruption_draft, uniform_draft,
 )
 from repro.serving.engine import (
-    WarmStartServer, ar_generate, make_prefill_fn, make_refine_step_fn,
-    make_serve_step,
+    PerNFECostModel, WarmStartServer, ar_generate, make_prefill_fn,
+    make_refine_step_fn, make_serve_step,
 )
-from repro.serving.scheduler import RequestResult, WarmStartScheduler
+from repro.serving.scheduler import (
+    AdmissionQueue, CompletedRequest, RequestResult, WarmStartScheduler,
+)
 
 __all__ = [
     "WarmStartServer", "ar_generate", "make_prefill_fn", "make_refine_step_fn",
-    "make_serve_step",
+    "make_serve_step", "PerNFECostModel",
     "ServeRequest", "MicroBatch", "RowSpan", "bucket_seq_len", "pad_rows",
-    "pack_requests", "t0_bin",
-    "WarmStartScheduler", "RequestResult",
+    "pack_requests", "t0_bin", "usable_rows", "split_request",
+    "FillingBucket", "FILLING", "DEADLINE_ARMED", "DISPATCHED",
+    "WarmStartScheduler", "RequestResult", "CompletedRequest",
+    "AdmissionQueue",
     "uniform_draft", "corruption_draft", "batch_keyed_draft",
     "BatchKeyedDraftWarning",
 ]

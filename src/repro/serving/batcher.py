@@ -39,13 +39,30 @@ FLOW_STREAM = 1
 
 @dataclasses.dataclass(frozen=True)
 class ServeRequest:
-    """One user request to the warm-start serving engine."""
+    """One user request to the warm-start serving engine.
+
+    ``arrival_s`` is the admission timestamp on the serving clock (0 for
+    batch-mode requests); the streaming admission loop uses it to form
+    per-request deadlines (``arrival_s + SLO``).
+
+    ``sample_offset`` / ``parent_id`` / ``parent_samples`` describe an
+    oversize-request *chunk* (see :func:`split_request`): a request whose
+    rows could not fit one micro-batch is split into chunks that keep
+    their rows' ORIGINAL sample indices, so each row's PRNG stream —
+    ``fold_in(key(seed), sample_offset + r)`` — is identical to what the
+    unsplit request would have used, and the reassembled output is
+    bit-identical to serving the request whole.
+    """
 
     request_id: int
     seq_len: int
     num_samples: int = 1
     seed: int = 0
     t0: Optional[float] = None      # None -> engine default
+    arrival_s: float = 0.0          # admission time on the serving clock
+    sample_offset: int = 0          # first sample index (chunks only)
+    parent_id: Optional[int] = None     # original request id (chunks only)
+    parent_samples: int = 0         # parent's total num_samples (chunks only)
 
     def __post_init__(self):
         if self.seq_len < 1:
@@ -58,6 +75,15 @@ class ServeRequest:
             raise ValueError(f"seed must lie in [0, 2**31), got {self.seed}")
         if self.t0 is not None and not (0.0 <= self.t0 < 1.0):
             raise ValueError(f"t0 override must lie in [0, 1), got {self.t0}")
+        if self.sample_offset < 0:
+            raise ValueError(
+                f"sample_offset must be >= 0, got {self.sample_offset}")
+        if self.parent_id is not None and (
+                self.parent_samples < self.sample_offset + self.num_samples):
+            raise ValueError(
+                f"chunk [{self.sample_offset}, "
+                f"{self.sample_offset + self.num_samples}) exceeds "
+                f"parent_samples {self.parent_samples}")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -155,6 +181,147 @@ def pad_rows(rows: int, quantum: int = 4) -> int:
     return -(-rows // quantum) * quantum
 
 
+def usable_rows(max_rows: int, unit: int = 1) -> int:
+    """Largest request row count that fits one micro-batch: the biggest
+    multiple of the padding ``unit`` (``lcm(row_quantum, row_multiple)``)
+    not exceeding ``max_rows``. Requests above this are split
+    (:func:`split_request`) by the streaming admission path."""
+    if unit < 1 or max_rows < 1:
+        raise ValueError(f"need unit >= 1 and max_rows >= 1, got "
+                         f"unit={unit} max_rows={max_rows}")
+    cap = (max_rows // unit) * unit
+    if cap < 1:
+        raise ValueError(
+            f"padding unit {unit} exceeds max_rows {max_rows}: no request "
+            f"fits a micro-batch")
+    return cap
+
+
+def split_request(req: ServeRequest, *, max_rows: int, unit: int = 1,
+                  alloc_id=None) -> List[ServeRequest]:
+    """Split an oversize request into servable chunks.
+
+    Each chunk carries at most :func:`usable_rows` samples, remembers its
+    rows' original sample indices (``sample_offset``) so per-row PRNG
+    streams are unchanged, and points back at the parent request
+    (``parent_id`` / ``parent_samples``) so the streaming loop can
+    reassemble the chunks into one result. A request that already fits is
+    returned unchanged (no chunk metadata added).
+
+    ``alloc_id()`` supplies a fresh request_id per chunk (chunks need
+    distinct ids in micro-batch bookkeeping and the predraft maps);
+    splitting an oversize request without an allocator is an error.
+    """
+    cap = usable_rows(max_rows, unit)
+    if req.num_samples <= cap:
+        return [req]
+    if alloc_id is None:
+        raise ValueError(
+            "split_request needs alloc_id to mint chunk request_ids")
+    chunks = []
+    parent = req.request_id if req.parent_id is None else req.parent_id
+    total = req.num_samples if req.parent_id is None else req.parent_samples
+    for off in range(0, req.num_samples, cap):
+        n = min(cap, req.num_samples - off)
+        chunks.append(dataclasses.replace(
+            req, request_id=alloc_id(), num_samples=n,
+            sample_offset=req.sample_offset + off,
+            parent_id=parent, parent_samples=total))
+    return chunks
+
+
+# FillingBucket states (the SLO admission state machine)
+FILLING = "filling"                 # accepting requests
+DEADLINE_ARMED = "deadline-armed"   # an SLO deadline is ticking
+DISPATCHED = "dispatched"           # flushed to the refine pipeline
+
+
+class FillingBucket:
+    """Admission-side accumulator for one pow2 sequence bucket.
+
+    State machine::
+
+        FILLING ──(first request under an SLO)──► DEADLINE_ARMED
+           │                                           │
+           └────────────(flush)────────────────────────┴──► DISPATCHED
+
+    A bucket flushes for one of four reasons, checked by
+    :meth:`flush_decision` / :meth:`would_overflow`:
+
+      * ``"full"``     — the next request would overflow ``max_rows``;
+      * ``"deadline"`` — the oldest request's remaining SLO budget
+        (``deadline - now``) no longer covers the estimated dispatch
+        latency (measured per-NFE refine cost × worst-case steps, plus
+        pipeline backlog);
+      * ``"idle"``     — no arrival for ``idle_timeout_s`` (don't hold a
+        partial bucket when traffic has gone quiet);
+      * ``"drain"``    — the admission source closed.
+
+    Flushed requests come out in deadline order (earliest deadline
+    first; ties broken by arrival then id — FIFO for a uniform SLO).
+    """
+
+    def __init__(self, bucket_len: int):
+        self.bucket_len = bucket_len
+        self.requests: List[ServeRequest] = []
+        self._deadlines: List[Optional[float]] = []
+        self.state = FILLING
+        self.last_arrival_s: Optional[float] = None
+
+    @property
+    def rows(self) -> int:
+        return sum(r.num_samples for r in self.requests)
+
+    @property
+    def oldest_deadline_s(self) -> Optional[float]:
+        armed = [d for d in self._deadlines if d is not None]
+        return min(armed) if armed else None
+
+    def would_overflow(self, num_samples: int, *, max_rows: int,
+                       unit: int = 1) -> bool:
+        """Would adding a ``num_samples`` request exceed ``max_rows``
+        once padded? (The admission loop flushes BEFORE adding.)"""
+        if not self.requests:
+            return False
+        return pad_rows(self.rows + num_samples, unit) > max_rows
+
+    def add(self, req: ServeRequest, *, deadline_s: Optional[float] = None):
+        if self.state == DISPATCHED:
+            raise ValueError("cannot add to a dispatched bucket")
+        self.requests.append(req)
+        self._deadlines.append(deadline_s)
+        self.last_arrival_s = req.arrival_s
+        if deadline_s is not None:
+            self.state = DEADLINE_ARMED
+
+    def flush_decision(self, now: float, *, est_latency_s: float = 0.0,
+                       idle_timeout_s: Optional[float] = None,
+                       max_rows: int, unit: int = 1) -> Optional[str]:
+        """Reason to flush now, or ``None`` to keep filling."""
+        if not self.requests:
+            return None
+        if pad_rows(self.rows + 1, unit) > max_rows:
+            return "full"
+        deadline = self.oldest_deadline_s
+        if deadline is not None and now + est_latency_s >= deadline:
+            return "deadline"
+        if (idle_timeout_s is not None and self.last_arrival_s is not None
+                and now - self.last_arrival_s >= idle_timeout_s):
+            return "idle"
+        return None
+
+    def flush(self) -> List[ServeRequest]:
+        """Dispatch: return the requests in deadline order and freeze."""
+        order = sorted(
+            range(len(self.requests)),
+            key=lambda i: (
+                self._deadlines[i] if self._deadlines[i] is not None
+                else float("inf"),
+                self.requests[i].arrival_s, self.requests[i].request_id))
+        self.state = DISPATCHED
+        return [self.requests[i] for i in order]
+
+
 def t0_bin(t0: float, bin_width: float) -> float:
     """Group label for a t0: the exact value when ``bin_width == 0``
     (legacy: only identical t0s share a micro-batch), else the lower edge
@@ -205,7 +372,8 @@ def pack_requests(
             raise ValueError(
                 f"request {req.request_id}: num_samples {req.num_samples} "
                 f"pads to {pad_rows(req.num_samples, unit)} rows > max_rows "
-                f"{max_rows} (split the request upstream)"
+                f"{max_rows} (the streaming admission path splits such "
+                f"requests automatically — see split_request / serve_stream)"
             )
         t0 = default_t0 if req.t0 is None else req.t0
         blen = bucket_seq_len(req.seq_len, min_bucket=min_bucket,

@@ -24,6 +24,70 @@ from repro.core.sampler import (
 )
 
 
+class PerNFECostModel:
+    """Measured per-NFE refine cost, the SLO admission loop's latency
+    oracle.
+
+    Both serving engines time every refine dispatch; this model folds
+    those measurements into an EWMA *per compile key* — the scheduler's
+    ``(bucket_len, padded_rows, n_steps)`` jit-cache key — plus a global
+    per-NFE EWMA as the fallback for keys never dispatched before, and a
+    separate EWMA of first-compile overhead so a cache miss is charged
+    its trace+lower time. :meth:`estimate_s` is what the streaming
+    admission loop subtracts from a request's SLO budget to decide when
+    a partial bucket must flush.
+    """
+
+    def __init__(self, alpha: float = 0.3):
+        if not (0.0 < alpha <= 1.0):
+            raise ValueError(f"alpha must be in (0, 1], got {alpha}")
+        self.alpha = alpha
+        self._per_key: Dict[Any, float] = {}    # key -> per-NFE seconds
+        self._global: Optional[float] = None    # per-NFE seconds, any key
+        self._compile: Optional[float] = None   # first-dispatch overhead
+
+    def _ewma(self, old: Optional[float], new: float) -> float:
+        return new if old is None else (1 - self.alpha) * old + self.alpha * new
+
+    def observe(self, key, flow_time_s: float, nfe: int, *,
+                compiled: bool = False) -> None:
+        """Fold one measured refine dispatch into the model.
+
+        ``compiled=True`` marks a jit-cache miss: the dispatch paid
+        trace+compile on top of the steady-state cost, so it feeds the
+        compile-overhead EWMA instead of poisoning the per-NFE one.
+        """
+        per_nfe = flow_time_s / max(nfe, 1)
+        if compiled:
+            base = self.estimate_s(key, nfe)
+            self._compile = self._ewma(
+                self._compile, max(0.0, flow_time_s - (base or 0.0)))
+            return
+        self._per_key[key] = self._ewma(self._per_key.get(key), per_nfe)
+        self._global = self._ewma(self._global, per_nfe)
+
+    def per_nfe_s(self, key=None) -> Optional[float]:
+        """Best per-NFE estimate for ``key`` (global fallback); ``None``
+        until the first steady-state observation."""
+        if key is not None and key in self._per_key:
+            return self._per_key[key]
+        return self._global
+
+    def estimate_s(self, key, nfe: int, *,
+                   include_compile: bool = False) -> Optional[float]:
+        """Estimated refine latency for an ``nfe``-step dispatch at
+        ``key``; ``None`` when nothing has been measured yet (the
+        admission loop then treats the dispatch as free and flushes on
+        the raw deadline)."""
+        per = self.per_nfe_s(key)
+        if per is None:
+            return None
+        est = per * max(nfe, 1)
+        if include_compile and key not in self._per_key and self._compile:
+            est += self._compile
+        return est
+
+
 def make_serve_step(model, cfg: ModelConfig, *, global_window: Optional[int] = None,
                     temperature: float = 1.0):
     """serve_step(params, rng, tokens (B,1), cache, pos) ->
@@ -109,8 +173,12 @@ class WarmStartServer:
     cold_nfe: int
     temperature: float = 1.0
     step_fn: Optional[Callable] = None
+    cost_model: Optional[PerNFECostModel] = None
 
     def __post_init__(self):
+        if self.cost_model is None:
+            self.cost_model = PerNFECostModel()
+        self._served_shapes = set()
         one_step = make_euler_one_step(
             self.path, temperature=self.temperature, step_fn=self.step_fn,
         )
@@ -141,6 +209,10 @@ class WarmStartServer:
 
         guarantees.require_guarantee(self.cold_nfe, t0, nfe)
         per_nfe = t_flow / max(nfe, 1)
+        shape = (x.shape[-1], num, nfe)
+        self.cost_model.observe(shape, t_flow, nfe,
+                                compiled=shape not in self._served_shapes)
+        self._served_shapes.add(shape)
         report = {
             "nfe": nfe,
             "cold_nfe": self.cold_nfe,

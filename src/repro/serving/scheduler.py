@@ -28,11 +28,16 @@ output is invariant to micro-batch packing.
 from __future__ import annotations
 
 import dataclasses
+import itertools
 import math
+import threading
 import time
+from collections import deque
 from concurrent.futures import ThreadPoolExecutor
 from functools import partial
-from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+from typing import (
+    Any, Callable, Dict, Iterator, List, Optional, Sequence, Tuple,
+)
 
 import jax
 import jax.numpy as jnp
@@ -45,9 +50,10 @@ from repro.core.sampler import (
     scan_refine_loop, scan_refine_loop_rows,
 )
 from repro.serving.batcher import (
-    DRAFT_STREAM, FLOW_STREAM, MicroBatch, ServeRequest, bucket_seq_len,
-    pack_requests, pad_rows,
+    DRAFT_STREAM, FLOW_STREAM, FillingBucket, MicroBatch, ServeRequest,
+    bucket_seq_len, pack_requests, pad_rows, split_request, usable_rows,
 )
+from repro.serving.engine import PerNFECostModel
 
 
 @dataclasses.dataclass(frozen=True)
@@ -60,6 +66,108 @@ class RequestResult:
     t0: float
     bucket_len: int
     micro_batch: int
+
+
+@dataclasses.dataclass(frozen=True)
+class CompletedRequest(RequestResult):
+    """A streamed result: the same payload as :class:`RequestResult`
+    plus the request's admission/latency accounting. Yielded by
+    :meth:`WarmStartScheduler.serve_stream` as each micro-batch
+    finishes — the tokens are bit-identical to what the end-of-run batch
+    path (:meth:`WarmStartScheduler.serve_requests`) returns for the
+    same request."""
+
+    arrival_s: float = 0.0          # admission time (stream clock)
+    finished_s: float = 0.0         # micro-batch completion time
+    latency_s: float = 0.0          # finished - arrival (time-to-result)
+    flush_reason: str = ""          # full | deadline | idle | drain
+    deadline_s: Optional[float] = None   # arrival + SLO (None: no SLO)
+    slo_met: Optional[bool] = None       # finished <= deadline
+    chunks: int = 1                 # micro-batch chunks reassembled
+
+
+class _MonotonicClock:
+    """Default stream clock; tests inject a fake with the same shape."""
+
+    @staticmethod
+    def time() -> float:
+        return time.monotonic()
+
+    @staticmethod
+    def sleep(dt: float) -> None:
+        time.sleep(dt)
+
+
+# chunk request_ids are minted from here — far above any sane user id
+# space, so a chunk id can never collide with an admitted request's id
+_CHUNK_ID_BASE = 1 << 40
+
+
+class AdmissionQueue:
+    """Thread-safe request intake for :meth:`WarmStartScheduler
+    .serve_stream` — the arrival side of the admission loop.
+
+    Producers (an RPC front end, a replay thread) call :meth:`submit` or
+    :meth:`push` while the stream is being served; the serving loop
+    drains it between dispatches and keeps serving until the queue is
+    :meth:`close`-d AND empty. Arrival timestamps default to the
+    queue's clock at submission.
+    """
+
+    def __init__(self, *, clock=None):
+        self._clock = clock if clock is not None else _MonotonicClock()
+        self._lock = threading.Lock()
+        self._items: deque = deque()
+        self._closed = False
+        self._next_id = 0
+
+    def submit(self, *, seq_len: int, num_samples: int = 1, seed: int = 0,
+               t0: Optional[float] = None,
+               arrival_s: Optional[float] = None) -> int:
+        """Enqueue one request; returns its request_id."""
+        with self._lock:
+            if self._closed:
+                raise ValueError("admission queue is closed")
+            rid = self._next_id
+            self._next_id += 1
+            self._items.append(ServeRequest(
+                request_id=rid, seq_len=seq_len, num_samples=num_samples,
+                seed=seed, t0=t0,
+                arrival_s=(self._clock.time() if arrival_s is None
+                           else arrival_s)))
+        return rid
+
+    def push(self, req: ServeRequest) -> int:
+        """Enqueue a pre-built request (its request_id must be unique
+        across the stream; the submitter owns that contract)."""
+        with self._lock:
+            if self._closed:
+                raise ValueError("admission queue is closed")
+            self._next_id = max(self._next_id, req.request_id + 1)
+            if req.arrival_s == 0.0:
+                req = dataclasses.replace(req, arrival_s=self._clock.time())
+            self._items.append(req)
+        return req.request_id
+
+    def close(self) -> None:
+        """No further arrivals; the serving loop drains and terminates."""
+        with self._lock:
+            self._closed = True
+
+    def drain(self) -> List[ServeRequest]:
+        with self._lock:
+            items = list(self._items)
+            self._items.clear()
+        return items
+
+    @property
+    def closed(self) -> bool:
+        with self._lock:
+            return self._closed and not self._items
+
+    def __len__(self) -> int:
+        with self._lock:
+            return len(self._items)
 
 
 @partial(jax.jit, static_argnums=())
@@ -145,6 +253,13 @@ class WarmStartScheduler:
         self._compiled: set = set()     # compile_key accounting
         self._cache_hits = 0
         self._cache_misses = 0
+        # measured latency oracle for the SLO admission loop: per-NFE
+        # refine cost EWMA per compile key (+ global fallback), fed by
+        # every _stage_refine dispatch; draft-stage cost EWMA beside it
+        self.cost_model = PerNFECostModel()
+        self._draft_cost_ewma: Optional[float] = None
+        self._chunk_ids = itertools.count(_CHUNK_ID_BASE)
+        self.stream_report: Optional[dict] = None
 
         # velocity_scale is t0-independent for the linear schedule, so one
         # stepping path serves every per-request t0 (the t0 only moves the
@@ -231,7 +346,10 @@ class WarmStartScheduler:
         for span in mb.spans:
             for r in range(span.rows):
                 seeds[span.row_offset + r] = span.request.seed
-                idx[span.row_offset + r] = r
+                # oversize-split chunks keep their rows' ORIGINAL sample
+                # indices (sample_offset), so a chunk row's PRNG stream
+                # is the one the unsplit request would have used
+                idx[span.row_offset + r] = span.request.sample_offset + r
         # padding rows: deterministic dummy stream (seed 0, descending
         # negative sample indices can't collide with real rows of seed 0)
         for r in range(mb.rows, mb.padded_rows):
@@ -262,7 +380,11 @@ class WarmStartScheduler:
         else:
             x = self.draft_fn(draft_keys, mb.bucket_len)
         x = jax.block_until_ready(x)
-        return x, flow_keys, time.perf_counter() - t0
+        t_draft = time.perf_counter() - t0
+        self._draft_cost_ewma = (
+            t_draft if self._draft_cost_ewma is None
+            else 0.7 * self._draft_cost_ewma + 0.3 * t_draft)
+        return x, flow_keys, t_draft
 
     def _stage_refine(self, mb: MicroBatch, x, flow_keys):
         """Flow stage for one micro-batch: one jitted scan dispatch over
@@ -271,9 +393,11 @@ class WarmStartScheduler:
         key = mb.compile_key
         if key in self._compiled:
             self._cache_hits += 1
+            was_miss = False
         else:
             self._compiled.add(key)
             self._cache_misses += 1
+            was_miss = True
         ts, hs, active, key_idx, nfe_rows = refine_schedule_rows(
             mb.row_t0s, 1.0 / self.cold_nfe, self.cold_nfe)
         x = self._refine_loop(
@@ -295,7 +419,9 @@ class WarmStartScheduler:
         guarantees.require_row_guarantees(
             self.cold_nfe, mb.row_t0s[mask], observed_rows[mask],
             bucket_len=mb.bucket_len, rows=mb.rows)
-        return x, time.perf_counter() - t0
+        t_flow = time.perf_counter() - t0
+        self.cost_model.observe(key, t_flow, len(ts), compiled=was_miss)
+        return x, t_flow
 
     # ---- the pipeline ----------------------------------------------------
 
@@ -340,7 +466,8 @@ class WarmStartScheduler:
             for req in reqs:
                 offsets[req.request_id] = len(seeds)
                 seeds.extend([req.seed] * req.num_samples)
-                idx.extend(range(req.num_samples))
+                idx.extend(range(req.sample_offset,
+                                 req.sample_offset + req.num_samples))
             draft_keys, _ = _derive_row_keys(
                 jnp.asarray(np.asarray(seeds, np.int32)),
                 jnp.asarray(np.asarray(idx, np.int32)))
@@ -479,6 +606,365 @@ class WarmStartScheduler:
             "batches": batch_reports,
         }
         return results, report
+
+    # ---- streaming / SLO-aware admission ---------------------------------
+
+    def _t0_lower_bound(self, req: ServeRequest) -> float:
+        """Shallowest t0 this request could be served at — the
+        conservative bound the deadline estimator prices refine work at
+        before the actual t0 is known (scored only at flush time)."""
+        if req.t0 is not None:
+            return float(req.t0)
+        if self.t0_policy is not None:
+            cal = getattr(self.t0_policy, "calibration", None)
+            floor = getattr(cal, "t0_floor", None)
+            if floor is not None:
+                # the policy snaps the calibrated t0 DOWN onto its bin
+                # grid, which can land up to one bin_width below the
+                # calibration floor — back off a full bin so this stays
+                # a true lower bound on the served t0
+                width = float(getattr(self.t0_policy, "bin_width", 0.0))
+                pfloor = float(getattr(self.t0_policy, "t0_floor", 0.0))
+                return max(0.0, pfloor, float(floor) - width)
+            return 0.0
+        return self.default_t0
+
+    def _stream_est_latency_s(self, fb: FillingBucket, unit: int,
+                              backlog_s: float) -> float:
+        """Estimated time from 'flush now' to 'results out' for a
+        filling bucket: pipeline backlog + draft-stage EWMA + measured
+        per-NFE refine cost x worst-case steps (compile surcharge when
+        the compile key is novel). Zero until the first measurement —
+        the admission loop then flushes on the raw deadline."""
+        t0_lb = min(self._t0_lower_bound(r) for r in fb.requests)
+        n_steps = guarantees.warm_nfe(self.cold_nfe, t0_lb)
+        key = (fb.bucket_len, pad_rows(fb.rows, unit), n_steps)
+        est = self.cost_model.estimate_s(key, n_steps, include_compile=True)
+        return backlog_s + (self._draft_cost_ewma or 0.0) + (est or 0.0)
+
+    def _mb_est_latency_s(self, mb: MicroBatch) -> float:
+        est = self.cost_model.estimate_s(
+            mb.compile_key, mb.n_steps, include_compile=True)
+        return (self._draft_cost_ewma or 0.0) + (est or 0.0)
+
+    def _score_chunks_t0(self, chunks: Sequence[ServeRequest]) -> float:
+        """Admission-time t0 for an oversize request under the adaptive
+        policy: draft + score the request's rows CHUNK BY CHUNK (each
+        dispatch stays within the micro-batch row cap and reuses the
+        pipeline's compiled shapes — never one oversized draft batch)
+        and take the min across all rows, so every chunk inherits the
+        same request-level min-over-rows t0 the batch path's pre-pass
+        would have chosen."""
+        t0_min = 1.0
+        for chunk in chunks:
+            blen = bucket_seq_len(chunk.seq_len, min_bucket=self.min_bucket,
+                                  max_bucket=self.max_bucket)
+            seeds = np.full((chunk.num_samples,), chunk.seed, np.int32)
+            idx = np.arange(chunk.sample_offset,
+                            chunk.sample_offset + chunk.num_samples,
+                            dtype=np.int32)
+            draft_keys, _ = _derive_row_keys(jnp.asarray(seeds),
+                                             jnp.asarray(idx))
+            x = np.asarray(
+                jax.block_until_ready(self.draft_fn(draft_keys, blen)))
+            t0_min = min(t0_min, float(self.t0_policy.t0_for_drafts(x).min()))
+        return t0_min
+
+    def _flush_bucket(self, fb: FillingBucket, reason: str, now: float,
+                      stats: dict) -> List[dict]:
+        """FillingBucket -> dispatched micro-batches (state machine edge
+        to DISPATCHED). Under the adaptive policy, the t0 scoring
+        pre-pass runs HERE, per flushed bucket — requests without a t0
+        override are drafted+scored in one batch and the drafts reused
+        by the pipeline, exactly as the batch path's global pre-pass
+        does per bucket."""
+        reqs = fb.flush()               # deadline order
+        predrafted = None
+        if self.t0_policy is not None:
+            reqs, predrafted, prep = self._policy_prepass(reqs)
+            stats["scored_requests"] += prep["scored_requests"]
+            stats["prepass_time_s"] += prep["prepass_time_s"]
+        batches = pack_requests(
+            reqs, cold_nfe=self.cold_nfe, default_t0=self.default_t0,
+            max_rows=self.max_rows, min_bucket=self.min_bucket,
+            max_bucket=self.max_bucket, row_quantum=self.row_quantum,
+            row_multiple=self._row_multiple, t0_bin_width=self.t0_bin_width)
+        stats["flush_reasons"][reason] = \
+            stats["flush_reasons"].get(reason, 0) + 1
+        return [{"mb": mb, "predrafted": predrafted, "reason": reason,
+                 "flushed_s": now} for mb in batches]
+
+    def serve_stream(
+        self,
+        requests: Optional[Sequence[ServeRequest]] = None,
+        *,
+        source: Optional[AdmissionQueue] = None,
+        slo_ms: Optional[float] = None,
+        idle_timeout_s: float = 0.05,
+        poll_interval_s: float = 0.002,
+        clock=None,
+    ) -> Iterator[CompletedRequest]:
+        """Streaming, continuously-admitting serve loop.
+
+        Yields a :class:`CompletedRequest` per request AS ITS MICRO-BATCH
+        FINISHES (oversize requests are split across micro-batches and
+        reassembled before yielding), instead of returning everything at
+        end-of-run. Tokens are bit-identical to
+        :meth:`serve_requests` for the same request set: per-row PRNG
+        streams, bucket choice and NFE schedules are functions of the
+        request alone, and the same per-row guarantee gates run on every
+        dispatch.
+
+        Admission: ``requests`` (admitted immediately) and/or ``source``
+        (an :class:`AdmissionQueue` producers keep filling while serving
+        is in flight). Requests accumulate in per-bucket
+        :class:`~repro.serving.batcher.FillingBucket` accumulators and
+        are dispatched when a bucket fills, when the oldest request's
+        SLO budget would otherwise be blown (``slo_ms``; the estimated
+        dispatch latency comes from the measured per-NFE cost model),
+        when arrivals go quiet (``idle_timeout_s``), or when the source
+        closes. The draft stage of the next micro-batch overlaps the
+        refine of the current one, as in the batch path.
+
+        After the generator is exhausted, ``self.stream_report`` holds
+        the run's latency percentiles, SLO attainment, flush-reason
+        counts and per-micro-batch stage timings.
+
+        ``clock`` is an object with ``time()``/``sleep(dt)`` (defaults
+        to monotonic wall time; tests inject a fake to drive deadlines).
+        """
+        clock = clock if clock is not None else _MonotonicClock()
+        slo_s = None if slo_ms is None else float(slo_ms) / 1e3
+        unit = math.lcm(self.row_quantum, self._row_multiple)
+        if requests is None and source is None:
+            raise ValueError("serve_stream needs `requests` and/or `source`")
+        own_source = source is None
+        if own_source:
+            source = AdmissionQueue(clock=clock)
+        if requests is not None:
+            now0 = clock.time()
+            with source._lock:
+                for req in requests:
+                    # arrival = stream start for pre-known request sets
+                    source._items.append(
+                        dataclasses.replace(req, arrival_s=now0)
+                        if req.arrival_s == 0.0 else req)
+                    source._next_id = max(source._next_id,
+                                          req.request_id + 1)
+        if own_source:
+            # no external producer: the pre-known set IS the stream
+            source.close()
+
+        filling: Dict[int, FillingBucket] = {}
+        ready: deque = deque()          # flushed micro-batches -> pipeline
+        partials: Dict[int, dict] = {}  # parent_id -> chunk reassembly
+        stats = {"scored_requests": 0, "prepass_time_s": 0.0,
+                 "flush_reasons": {}, "split_requests": 0}
+        mb_reports: List[dict] = []
+        latencies: List[float] = []
+        slo_total = slo_met_n = 0
+        completed_n = 0
+        admitted_n = 0
+        draft_total = flow_total = 0.0
+        t_first: Optional[float] = None
+        first_arrival_s: Optional[float] = None
+        hits0, misses0 = self._cache_hits, self._cache_misses
+        wall0 = clock.time()
+        mb_index = itertools.count()
+
+        def admit(req: ServeRequest, now: float):
+            nonlocal admitted_n, first_arrival_s
+            if req.parent_id is not None:
+                # chunk metadata is minted by THIS loop's splitter; an
+                # externally-fabricated chunk has no reassembly slot
+                raise ValueError(
+                    f"request {req.request_id} carries chunk metadata "
+                    f"(parent_id={req.parent_id}); submit the parent "
+                    f"request whole — the admission loop splits it")
+            admitted_n += 1
+            if first_arrival_s is None or req.arrival_s < first_arrival_s:
+                first_arrival_s = req.arrival_s
+            pieces = [req]
+            if req.num_samples > usable_rows(self.max_rows, unit):
+                pieces = split_request(
+                    req, max_rows=self.max_rows, unit=unit,
+                    alloc_id=lambda: next(self._chunk_ids))
+                if self.t0_policy is not None and req.t0 is None:
+                    t0 = self._score_chunks_t0(pieces)
+                    pieces = [dataclasses.replace(p, t0=t0) for p in pieces]
+                stats["split_requests"] += 1
+                partials[req.request_id] = {
+                    "tokens": None, "rows_done": 0, "chunks_done": 0,
+                    "num_chunks": len(pieces), "arrival_s": req.arrival_s,
+                    "seq_len": req.seq_len, "samples": req.num_samples,
+                }
+            for piece in pieces:
+                blen = bucket_seq_len(piece.seq_len,
+                                      min_bucket=self.min_bucket,
+                                      max_bucket=self.max_bucket)
+                fb = filling.get(blen)
+                if fb is not None and fb.would_overflow(
+                        piece.num_samples, max_rows=self.max_rows,
+                        unit=unit):
+                    ready.extend(self._flush_bucket(fb, "full", now, stats))
+                    fb = None
+                if fb is None:
+                    fb = FillingBucket(blen)
+                    filling[blen] = fb
+                fb.add(piece, deadline_s=(
+                    None if slo_s is None else piece.arrival_s + slo_s))
+
+        def complete(pending: dict, x, t_draft: float, t_flow: float):
+            """Turn one finished micro-batch into CompletedRequests."""
+            nonlocal draft_total, flow_total, completed_n, t_first
+            nonlocal slo_total, slo_met_n
+            draft_total += t_draft
+            flow_total += t_flow
+            mb = pending["mb"]
+            k = next(mb_index)
+            finished_s = clock.time()
+            mb_reports.append({
+                "micro_batch": k, "bucket_len": mb.bucket_len,
+                "rows": mb.rows, "padded_rows": mb.padded_rows,
+                "t0": mb.t0, "t0_spans": list(mb.t0_spans),
+                "nfe": mb.n_steps, "flush_reason": pending["reason"],
+                "queue_wait_s": finished_s - pending["flushed_s"],
+                "draft_time_s": t_draft, "flow_time_s": t_flow,
+            })
+            x_host = np.asarray(x)
+            out = []
+            for span, span_t0 in zip(mb.spans, mb.t0_spans):
+                req = span.request
+                toks = x_host[span.row_offset:span.row_offset + span.rows,
+                              :req.seq_len]
+                if req.parent_id is not None:
+                    part = partials[req.parent_id]
+                    if part["tokens"] is None:
+                        part["tokens"] = np.zeros(
+                            (part["samples"], part["seq_len"]), toks.dtype)
+                    part["tokens"][req.sample_offset:
+                                   req.sample_offset + req.num_samples] = toks
+                    part["rows_done"] += req.num_samples
+                    part["chunks_done"] += 1
+                    if part["rows_done"] < part["samples"]:
+                        continue
+                    rid, tokens = req.parent_id, part["tokens"]
+                    arrival, chunks = part["arrival_s"], part["num_chunks"]
+                    del partials[req.parent_id]
+                else:
+                    rid, tokens = req.request_id, toks
+                    arrival, chunks = req.arrival_s, 1
+                deadline = None if slo_s is None else arrival + slo_s
+                met = None if deadline is None else finished_s <= deadline
+                if met is not None:
+                    slo_total += 1
+                    slo_met_n += int(met)
+                latency = finished_s - arrival
+                latencies.append(latency)
+                completed_n += 1
+                if t_first is None:
+                    t_first = finished_s
+                out.append(CompletedRequest(
+                    request_id=rid, tokens=tokens,
+                    nfe=guarantees.warm_nfe(self.cold_nfe, span_t0),
+                    t0=span_t0, bucket_len=mb.bucket_len, micro_batch=k,
+                    arrival_s=arrival, finished_s=finished_s,
+                    latency_s=latency, flush_reason=pending["reason"],
+                    deadline_s=deadline, slo_met=met, chunks=chunks))
+            return out
+
+        draft_fut = None
+        draft_pending = None
+        with ThreadPoolExecutor(max_workers=1) as pool:
+            while True:
+                now = clock.time()
+                for req in source.drain():
+                    admit(req, now)
+                source_done = source.closed
+                # deadline / idle / drain flush sweep
+                backlog_s = sum(self._mb_est_latency_s(p["mb"])
+                                for p in ready)
+                if draft_pending is not None:
+                    backlog_s += self._mb_est_latency_s(draft_pending["mb"])
+                for blen in list(filling):
+                    fb = filling[blen]
+                    if not fb.requests:
+                        del filling[blen]
+                        continue
+                    reason = "drain" if source_done else fb.flush_decision(
+                        now,
+                        est_latency_s=self._stream_est_latency_s(
+                            fb, unit, backlog_s),
+                        idle_timeout_s=idle_timeout_s,
+                        max_rows=self.max_rows, unit=unit)
+                    if reason:
+                        ready.extend(
+                            self._flush_bucket(fb, reason, now, stats))
+                        del filling[blen]
+                # pipeline: draft of the NEXT micro-batch overlaps the
+                # refine of the current one (same structure as the
+                # batch path's worker thread)
+                if draft_fut is None and ready:
+                    draft_pending = ready.popleft()
+                    draft_fut = pool.submit(
+                        self._stage_keys_and_draft, draft_pending["mb"],
+                        draft_pending["predrafted"])
+                if draft_fut is not None:
+                    x, flow_keys, t_draft = draft_fut.result()
+                    current, draft_fut, draft_pending = \
+                        draft_pending, None, None
+                    if ready:
+                        draft_pending = ready.popleft()
+                        draft_fut = pool.submit(
+                            self._stage_keys_and_draft, draft_pending["mb"],
+                            draft_pending["predrafted"])
+                    x, t_flow = self._stage_refine(
+                        current["mb"], x, flow_keys)
+                    for item in complete(current, x, t_draft, t_flow):
+                        yield item
+                    continue
+                if source_done and not filling and not ready \
+                        and draft_fut is None:
+                    break
+                clock.sleep(poll_interval_s)
+
+        wall = clock.time() - wall0
+
+        def pct(q):
+            return float(np.percentile(latencies, q)) if latencies else 0.0
+
+        self.stream_report = {
+            "streaming": True,
+            "num_requests": admitted_n,
+            "completed": completed_n,
+            "num_micro_batches": len(mb_reports),
+            "split_requests": stats["split_requests"],
+            "flush_reasons": dict(sorted(stats["flush_reasons"].items())),
+            "slo_ms": slo_ms,
+            "slo_attainment": (slo_met_n / slo_total if slo_total else None),
+            "latency_s": {
+                "mean": float(np.mean(latencies)) if latencies else 0.0,
+                "p50": pct(50), "p95": pct(95), "p99": pct(99),
+                "max": float(np.max(latencies)) if latencies else 0.0,
+            },
+            # clock starts at the FIRST ADMISSION, not at generator start:
+            # an open-loop stream may idle before traffic begins, and that
+            # wait is not the engine's latency
+            "time_to_first_result_s": (
+                None if t_first is None
+                else t_first - (first_arrival_s
+                                if first_arrival_s is not None else wall0)),
+            "wall_time_s": wall,
+            "draft_time_s": draft_total,
+            "flow_time_s": flow_total,
+            "jit_cache": {"hits": self._cache_hits - hits0,
+                          "misses": self._cache_misses - misses0},
+            "adaptive_t0": self.t0_policy is not None,
+            "policy": (None if self.t0_policy is None else
+                       {"scored_requests": stats["scored_requests"],
+                        "prepass_time_s": stats["prepass_time_s"]}),
+            "batches": mb_reports,
+        }
 
 
 def _histogram(values: List[float]) -> Dict[str, int]:

@@ -1,0 +1,334 @@
+"""Streaming serving-loop tests: bit-identity with the batch path,
+micro-batch completion ordering, SLO deadline / idle / drain flushes,
+fresh buckets for late arrivals, oversize-request splitting, and the
+admission-side unit pieces (FillingBucket state machine, AdmissionQueue,
+PerNFECostModel)."""
+
+import threading
+import time
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import guarantees
+from repro.serving import (
+    DEADLINE_ARMED, DISPATCHED, FILLING, AdmissionQueue, CompletedRequest,
+    FillingBucket, PerNFECostModel, ServeRequest, WarmStartScheduler,
+    split_request, uniform_draft, usable_rows,
+)
+
+
+class ToyFlow:
+    """Constant peaked logits — the refine converges to one mode."""
+
+    def __init__(self, vocab=11, mode=2):
+        self.vocab = vocab
+        self.mode = mode
+
+    def dfm_apply(self, params, x, t, extras=None):
+        return jnp.zeros(x.shape + (self.vocab,)).at[..., self.mode].set(30.0)
+
+
+class FakeClock:
+    """Deterministic stream clock: time() advances only through sleep()."""
+
+    def __init__(self, t0=0.0):
+        self.t = t0
+
+    def time(self):
+        return self.t
+
+    def sleep(self, dt):
+        self.t += dt
+
+
+def make_scheduler(**kw):
+    return WarmStartScheduler(
+        flow_model=kw.pop("flow", ToyFlow()), flow_params={},
+        draft_fn=kw.pop("draft_fn", uniform_draft(11)),
+        cold_nfe=kw.pop("cold_nfe", 20),
+        default_t0=kw.pop("default_t0", 0.8), **kw)
+
+
+def mixed_requests():
+    return [ServeRequest(request_id=i, seq_len=L, num_samples=n, seed=100 + i,
+                         t0=t0)
+            for i, (L, n, t0) in enumerate(
+                [(5, 2, None), (12, 3, None), (8, 1, 0.5), (30, 4, None),
+                 (12, 2, None)])]
+
+
+# ---------------------------------------------------------------------------
+# the tentpole contract: streamed == batch, per request, bit for bit
+# ---------------------------------------------------------------------------
+
+def test_stream_bit_identical_to_batch_path():
+    reqs = mixed_requests()
+    batch_results, _ = make_scheduler(max_rows=8).serve_requests(reqs)
+    sched = make_scheduler(max_rows=8)
+    streamed = {c.request_id: c for c in sched.serve_stream(reqs)}
+    assert set(streamed) == set(batch_results)
+    for rid, c in streamed.items():
+        np.testing.assert_array_equal(c.tokens, batch_results[rid].tokens)
+        assert c.nfe == batch_results[rid].nfe
+        assert c.t0 == batch_results[rid].t0
+        assert isinstance(c, CompletedRequest)
+    rep = sched.stream_report
+    assert rep["completed"] == len(reqs)
+    assert rep["time_to_first_result_s"] < rep["wall_time_s"]
+
+
+def test_stream_results_arrive_in_micro_batch_completion_order():
+    sched = make_scheduler(max_rows=8)
+    order = [c.micro_batch for c in sched.serve_stream(mixed_requests())]
+    assert order == sorted(order)
+    assert sched.stream_report["num_micro_batches"] == order[-1] + 1
+
+
+def test_stream_adaptive_t0_matches_batch_path_per_flushed_bucket():
+    """The t0 scoring pre-pass runs per flushed bucket in streaming mode;
+    for the same request set it must resolve the same per-request t0 and
+    tokens as the batch path's global pre-pass."""
+
+    class StubPolicy:
+        bin_width = 0.1
+
+        def t0_for_drafts(self, tokens):
+            s = np.asarray(tokens).sum(axis=1) % 3
+            return np.choose(s, [0.5, 0.7, 0.9])
+
+    reqs = [ServeRequest(request_id=i, seq_len=L, num_samples=n, seed=40 + i)
+            for i, (L, n) in enumerate([(8, 2), (12, 1), (8, 3), (25, 2)])]
+    batch_results, batch_rep = make_scheduler(
+        max_rows=8, t0_policy=StubPolicy()).serve_requests(reqs)
+    sched = make_scheduler(max_rows=8, t0_policy=StubPolicy())
+    streamed = {c.request_id: c for c in sched.serve_stream(reqs)}
+    for rid, c in streamed.items():
+        assert c.t0 == batch_results[rid].t0
+        assert c.nfe == batch_results[rid].nfe
+        np.testing.assert_array_equal(c.tokens, batch_results[rid].tokens)
+    assert (sched.stream_report["policy"]["scored_requests"]
+            == batch_rep["policy"]["scored_requests"])
+
+
+# ---------------------------------------------------------------------------
+# SLO-aware admission
+# ---------------------------------------------------------------------------
+
+def test_slo_deadline_flush_dispatches_padded_partial_bucket():
+    clock = FakeClock()
+    q = AdmissionQueue(clock=clock)
+    q.submit(seq_len=8, num_samples=1, seed=3)
+    sched = make_scheduler(max_rows=16)
+    stream = sched.serve_stream(source=q, slo_ms=100.0,
+                                idle_timeout_s=10.0, clock=clock)
+    first = next(stream)            # queue still OPEN: only the deadline
+    assert first.flush_reason == "deadline"
+    assert first.deadline_s == pytest.approx(first.arrival_s + 0.1)
+    q.close()
+    assert list(stream) == []
+    rep = sched.stream_report
+    assert rep["flush_reasons"] == {"deadline": 1}
+    (mb,) = rep["batches"]
+    assert mb["rows"] == 1 and mb["padded_rows"] == 4   # padded partial
+    assert first.nfe == guarantees.warm_nfe(20, 0.8)    # per-row gate ran
+
+
+def test_idle_timeout_flush():
+    clock = FakeClock()
+    q = AdmissionQueue(clock=clock)
+    q.submit(seq_len=8, seed=1)
+    sched = make_scheduler(max_rows=16)
+    stream = sched.serve_stream(source=q, idle_timeout_s=0.05, clock=clock)
+    first = next(stream)
+    assert first.flush_reason == "idle"
+    q.close()
+    assert list(stream) == []
+
+
+def test_full_bucket_flushes_without_slo_or_idle():
+    clock = FakeClock()
+    q = AdmissionQueue(clock=clock)
+    for i in range(5):                      # 5 rows pad past max_rows=4
+        q.submit(seq_len=8, seed=i)
+    sched = make_scheduler(max_rows=4)
+    stream = sched.serve_stream(source=q, idle_timeout_s=1e9, clock=clock)
+    first = next(stream)
+    assert first.flush_reason == "full"
+    q.close()
+    rest = list(stream)
+    # the remaining 3 rows of the full bucket, then the 5th request,
+    # flushed from its fresh bucket when the source drained
+    assert [r.flush_reason for r in rest] == ["full"] * 3 + ["drain"]
+    assert rest[-1].micro_batch > first.micro_batch
+
+
+def test_late_arrivals_land_in_fresh_buckets():
+    clock = FakeClock()
+    q = AdmissionQueue(clock=clock)
+    a = q.submit(seq_len=8, seed=1)
+    sched = make_scheduler(max_rows=16)
+    stream = sched.serve_stream(source=q, slo_ms=50.0, idle_timeout_s=10.0,
+                                clock=clock)
+    first = next(stream)
+    assert first.request_id == a
+    b = q.submit(seq_len=8, seed=2)         # same bucket, AFTER the flush
+    q.close()
+    (second,) = list(stream)
+    assert second.request_id == b
+    assert second.micro_batch > first.micro_batch
+    assert second.flush_reason == "drain"
+    # the late request's output is still the packing-invariant one
+    solo, _ = make_scheduler(max_rows=16).serve_requests(
+        [ServeRequest(request_id=0, seq_len=8, seed=2)])
+    np.testing.assert_array_equal(second.tokens, solo[0].tokens)
+
+
+def test_slo_attainment_accounting():
+    sched = make_scheduler(max_rows=8)
+    list(sched.serve_stream(mixed_requests(), slo_ms=1e7))
+    rep = sched.stream_report
+    assert rep["slo_attainment"] == 1.0
+    assert rep["latency_s"]["p95"] >= rep["latency_s"]["p50"] > 0
+
+
+# ---------------------------------------------------------------------------
+# oversize-request splitting
+# ---------------------------------------------------------------------------
+
+def test_oversize_request_split_and_reassembled_bit_identical():
+    big = [ServeRequest(request_id=0, seq_len=10, num_samples=12, seed=7)]
+    whole = list(make_scheduler(max_rows=16).serve_stream(big))[0]
+    assert whole.chunks == 1
+    sched = make_scheduler(max_rows=4)
+    (split,) = list(sched.serve_stream(big))
+    assert split.chunks == 3
+    assert split.tokens.shape == (12, 10)
+    np.testing.assert_array_equal(split.tokens, whole.tokens)
+    assert sched.stream_report["split_requests"] == 1
+    # the batch-mode intake still rejects what it cannot split
+    with pytest.raises(ValueError, match="split"):
+        make_scheduler(max_rows=4).submit(seq_len=10, num_samples=12)
+
+
+def test_oversize_split_under_policy_shares_one_request_t0():
+    """Chunk-by-chunk admission scoring must resolve the same
+    request-level min-over-rows t0 (and tokens) as serving unsplit."""
+
+    class StubPolicy:
+        bin_width = 0.1
+
+        def t0_for_drafts(self, tokens):
+            s = np.asarray(tokens).sum(axis=1) % 3
+            return np.choose(s, [0.5, 0.7, 0.9])
+
+    big = [ServeRequest(request_id=0, seq_len=10, num_samples=10, seed=9)]
+    (whole,) = list(make_scheduler(
+        max_rows=16, t0_policy=StubPolicy()).serve_stream(big))
+    sched = make_scheduler(max_rows=4, t0_policy=StubPolicy())
+    (split,) = list(sched.serve_stream(big))
+    assert split.chunks == 3
+    assert split.t0 == whole.t0 and split.nfe == whole.nfe
+    np.testing.assert_array_equal(split.tokens, whole.tokens)
+
+
+def test_admission_rejects_externally_fabricated_chunks():
+    q = AdmissionQueue()
+    q.push(ServeRequest(request_id=1, seq_len=8, num_samples=1,
+                        parent_id=0, parent_samples=2))
+    q.close()
+    with pytest.raises(ValueError, match="chunk metadata"):
+        list(make_scheduler().serve_stream(source=q))
+
+
+def test_split_request_chunk_metadata():
+    req = ServeRequest(request_id=5, seq_len=8, num_samples=10)
+    ids = iter(range(100, 110))
+    chunks = split_request(req, max_rows=4, unit=4,
+                           alloc_id=lambda: next(ids))
+    assert [c.num_samples for c in chunks] == [4, 4, 2]
+    assert [c.sample_offset for c in chunks] == [0, 4, 8]
+    assert all(c.parent_id == 5 and c.parent_samples == 10 for c in chunks)
+    # fits -> returned unchanged, no allocator needed
+    assert split_request(req, max_rows=16, unit=4) == [req]
+    assert usable_rows(10, 4) == 8
+
+
+# ---------------------------------------------------------------------------
+# admission-side units
+# ---------------------------------------------------------------------------
+
+def test_filling_bucket_state_machine():
+    fb = FillingBucket(16)
+    assert fb.state == FILLING
+    fb.add(ServeRequest(request_id=0, seq_len=12, arrival_s=1.0))
+    assert fb.state == FILLING          # no SLO -> never deadline-armed
+    fb.add(ServeRequest(request_id=1, seq_len=12, arrival_s=2.0),
+           deadline_s=2.5)
+    assert fb.state == DEADLINE_ARMED
+    assert fb.oldest_deadline_s == 2.5
+    # deadline minus estimated latency decides the flush
+    assert fb.flush_decision(2.0, est_latency_s=0.1, max_rows=16) is None
+    assert fb.flush_decision(2.45, est_latency_s=0.1,
+                             max_rows=16) == "deadline"
+    # idle only after idle_timeout_s of no arrivals
+    assert fb.flush_decision(2.04, idle_timeout_s=0.05, max_rows=16) is None
+    assert fb.flush_decision(2.06, idle_timeout_s=0.05,
+                             max_rows=16) == "idle"
+    out = fb.flush()
+    assert fb.state == DISPATCHED
+    # deadline order: armed request first, deadline-free request last
+    assert [r.request_id for r in out] == [1, 0]
+    with pytest.raises(ValueError):
+        fb.add(ServeRequest(request_id=2, seq_len=12))
+
+
+def test_filling_bucket_full_and_overflow():
+    fb = FillingBucket(8)
+    fb.add(ServeRequest(request_id=0, seq_len=8, num_samples=3))
+    assert fb.would_overflow(3, max_rows=4)            # 6 rows pad past 4
+    assert not fb.would_overflow(1, max_rows=4, unit=1)
+    fb.add(ServeRequest(request_id=1, seq_len=8, num_samples=1))
+    assert fb.flush_decision(0.0, max_rows=4) == "full"
+
+
+def test_admission_queue_threaded_and_close():
+    q = AdmissionQueue()
+    rid = q.submit(seq_len=8)
+    assert len(q) == 1 and not q.closed
+
+    def produce():
+        for i in range(3):
+            q.submit(seq_len=16, seed=i)
+        q.close()
+
+    t = threading.Thread(target=produce)
+    t.start()
+    t.join()
+    with pytest.raises(ValueError):
+        q.submit(seq_len=8)
+    drained = q.drain()
+    assert [r.request_id for r in drained] == [rid, 1, 2, 3]
+    assert all(r.arrival_s > 0 for r in drained)
+    assert q.closed                      # closed AND drained
+
+
+def test_per_nfe_cost_model():
+    m = PerNFECostModel(alpha=0.5)
+    assert m.estimate_s(("k", 4), 4) is None
+    m.observe(("k", 4), flow_time_s=0.4, nfe=4)
+    assert m.per_nfe_s(("k", 4)) == pytest.approx(0.1)
+    assert m.estimate_s(("k", 4), 8) == pytest.approx(0.8)
+    # unknown key falls back to the global per-NFE EWMA
+    assert m.estimate_s(("other", 2), 2) == pytest.approx(0.2)
+    # a compile observation feeds the overhead term, not the per-NFE one
+    m.observe(("new", 2), flow_time_s=1.2, nfe=2, compiled=True)
+    assert m.per_nfe_s(("k", 4)) == pytest.approx(0.1)
+    est = m.estimate_s(("new2", 2), 2, include_compile=True)
+    assert est == pytest.approx(0.2 + 1.0)
+
+
+def test_serve_stream_requires_some_input():
+    with pytest.raises(ValueError, match="requests.*source"):
+        next(make_scheduler().serve_stream())

@@ -1,0 +1,56 @@
+#!/usr/bin/env python
+"""Markdown link checker: every relative link in every tracked *.md must
+resolve to a real file, so the README's subsystem map and the
+cross-references between subsystem docs cannot rot.
+
+Checks ``[text](target)`` links, skipping absolute URLs
+(http/https/mailto) and pure in-page anchors (``#...``). Anchors on
+file links (``path.md#section``) are checked for file existence only.
+
+Run:  python tools/check_md_links.py [root]        (exit 1 on breakage)
+"""
+
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+SKIP_DIRS = {".git", "__pycache__", ".pytest_cache", "node_modules"}
+SKIP_SCHEMES = ("http://", "https://", "mailto:", "ftp://")
+
+
+def md_files(root: Path):
+    for path in sorted(root.rglob("*.md")):
+        if not any(part in SKIP_DIRS for part in path.parts):
+            yield path
+
+
+def check(root: Path) -> int:
+    broken = []
+    n_links = 0
+    for md in md_files(root):
+        text = md.read_text(encoding="utf-8")
+        for m in LINK_RE.finditer(text):
+            target = m.group(1)
+            if target.startswith(SKIP_SCHEMES) or target.startswith("#"):
+                continue
+            n_links += 1
+            rel = target.split("#", 1)[0]
+            if not rel:
+                continue
+            resolved = (md.parent / rel).resolve()
+            if not resolved.exists():
+                line = text[:m.start()].count("\n") + 1
+                broken.append((md.relative_to(root), line, target))
+    for md, line, target in broken:
+        print(f"BROKEN {md}:{line}: ({target})")
+    print(f"checked {n_links} relative links in "
+          f"{sum(1 for _ in md_files(root))} markdown files: "
+          f"{len(broken)} broken")
+    return 1 if broken else 0
+
+
+if __name__ == "__main__":
+    sys.exit(check(Path(sys.argv[1] if len(sys.argv) > 1 else ".")))

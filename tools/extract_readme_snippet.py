@@ -1,0 +1,41 @@
+#!/usr/bin/env python
+"""Extract the README's executable quickstart snippet, so CI can run
+exactly what the docs show (the snippet between the
+``<!-- quickstart:begin -->`` / ``<!-- quickstart:end -->`` markers).
+
+Run:  python tools/extract_readme_snippet.py README.md out.py
+      PYTHONPATH=src python out.py
+"""
+
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+BEGIN = "<!-- quickstart:begin -->"
+END = "<!-- quickstart:end -->"
+FENCE_RE = re.compile(r"```python\n(.*?)```", re.DOTALL)
+
+
+def extract(readme: Path) -> str:
+    text = readme.read_text(encoding="utf-8")
+    try:
+        region = text.split(BEGIN, 1)[1].split(END, 1)[0]
+    except IndexError:
+        raise SystemExit(f"{readme}: quickstart markers "
+                         f"{BEGIN!r} / {END!r} not found")
+    m = FENCE_RE.search(region)
+    if m is None:
+        raise SystemExit(f"{readme}: no ```python fence between the "
+                         f"quickstart markers")
+    return m.group(1)
+
+
+if __name__ == "__main__":
+    if len(sys.argv) != 3:
+        raise SystemExit(
+            "usage: extract_readme_snippet.py README.md out.py")
+    snippet = extract(Path(sys.argv[1]))
+    Path(sys.argv[2]).write_text(snippet, encoding="utf-8")
+    print(f"wrote {len(snippet.splitlines())} lines -> {sys.argv[2]}")
