@@ -1,6 +1,9 @@
 """Kernel micro-bench: (a) correctness re-assertion at bench shapes,
 (b) modeled per-step HBM traffic of the streamed vocab-tiled ws_step
-kernel vs the seed fused kernel and the unfused XLA path.
+kernel vs the seed fused kernel and the unfused XLA path, (c) the
+K-step ws_fused megakernel vs K independent streamed dispatches —
+bit-exactness re-asserted against the composed oracle and the modeled
+HBM-bytes reduction gated in CI (>= 30% at K >= 4).
 
 The streamed kernel's value is structural: the (R, V) logits are the
 only full-vocab HBM read per step — the Gumbel noise is generated
@@ -26,25 +29,11 @@ import numpy as np
 from benchmarks.common import report
 from repro.core.paths import WarmStartPath
 from repro.core.sampler import categorical_from_probs, euler_step_probs
+from repro.kernels.ws_fused import pick_tiles_fused, ws_fused_steps
 from repro.kernels.ws_step import (
     pick_tiles, seed_from_key, threefry_gumbel, ws_step, ws_step_ref,
 )
-
-
-def model_hbm_bytes(r: int, v: int) -> dict:
-    """Per-step HBM traffic model (f32 logits).
-
-    streamed: logits read once; noise in-kernel; tokens/weights O(R).
-    seed fused: logits + a pre-drawn (R, V) Gumbel tensor (written by the
-      XLA RNG kernel, read by the sampler: 3 passes over R*V*4 extra).
-    unfused XLA: logits, probs write+read, onehot, gumbel.
-    """
-    small = r * 12  # x, a, out vectors
-    return {
-        "streamed": r * v * 4 + small,
-        "seed_fused": r * v * 4 * 3 + small,
-        "unfused": r * v * 4 * 5 + small,
-    }
+from repro.launch.roofline import model_fused_hbm_bytes, model_hbm_bytes
 
 
 def bench_ws_step(results: list, seed: int = 0):
@@ -110,6 +99,68 @@ def bench_ws_step(results: list, seed: int = 0):
         assert reduction_vs_seed >= 0.40, "HBM traffic reduction target missed"
 
 
+def bench_ws_fused(results: list, seed: int = 0):
+    """K-step fused refine block vs K streamed single-step dispatches.
+
+    Correctness: the fused megakernel must be BIT-EXACT against the
+    composed oracle (the same resolved tiling run as K single-step
+    slices) at every bench shape. Perf: the modeled HBM traffic of the
+    fused block must undercut K independent streamed steps by >= 30%
+    whenever K >= 4 — this is the CI gate; interpret-mode wall clock is
+    recorded but not gated.
+    """
+    path = WarmStartPath(t0=0.8)
+    shapes = [(8, 256, 27, 4), (4, 256, 2048, 4), (2, 128, 32768, 6),
+              (8, 64, 2048, 3)]
+    for (b, n, v, k) in shapes:
+        logits = jax.random.normal(jax.random.key(seed), (b, n, v))
+        x = jax.random.randint(jax.random.key(seed + 1), (b, n), 0, v)
+        r = b * n
+        h = 1.0 / 64
+        ts = jnp.asarray([0.8 + i * h for i in range(k)])
+        hs = jnp.full((k,), h)
+        keys = jax.random.split(jax.random.key(seed + 2), k)
+
+        fused = ws_fused_steps(keys, logits, x, ts, hs, path,
+                               impl="fused", hw_prng=False)
+        composed = ws_fused_steps(keys, logits, x, ts, hs, path,
+                                  impl="composed", hw_prng=False)
+        parity = float(np.mean(np.asarray(fused) == np.asarray(composed)))
+
+        fused_jit = jax.jit(lambda kk: ws_fused_steps(
+            kk, logits, x, ts, hs, path, impl="fused", hw_prng=False))
+        jax.block_until_ready(fused_jit(keys))
+        t0 = time.perf_counter()
+        jax.block_until_ready(fused_jit(keys))
+        dt_f = time.perf_counter() - t0
+
+        vp = -(-v // 128) * 128
+        rb, bv = pick_tiles_fused(r, vp, k)
+        tiles = vp // bv
+        hbm = model_fused_hbm_bytes(r, v, k, vocab_tiles=tiles)
+        entry = {
+            "name": f"ws_fused_B{b}_N{n}_V{v}_K{k}",
+            "rows": r, "vocab": v, "num_steps": k,
+            "row_block": rb, "vocab_tile": bv, "vocab_tiles": tiles,
+            "oracle_parity": parity,
+            "us_per_block_interpret": dt_f * 1e6,
+            "hbm_bytes_fused": hbm["fused"],
+            "hbm_bytes_unfused_streamed": hbm["unfused_streamed"],
+            "hbm_reduction_vs_unfused_pct": hbm["reduction_pct"],
+        }
+        results.append(entry)
+        report(f"kernels/ws_fused_B{b}_N{n}_V{v}_K{k}", dt_f * 1e6,
+               f"row_block={rb};vocab_tile={bv};parity={parity:.4f};"
+               f"hbm_fused={hbm['fused']};"
+               f"hbm_unfused={hbm['unfused_streamed']};"
+               f"reduction={hbm['reduction_pct']:.1f}%")
+        assert parity == 1.0, \
+            f"fused megakernel diverged from composed oracle at {entry['name']}"
+        if k >= 4:
+            assert hbm["reduction_pct"] >= 30.0, \
+                f"fused HBM reduction gate missed at {entry['name']}"
+
+
 def bench_flash_window(results: list):
     from repro.kernels.flash_attn import flash_attention
     for (s, w) in [(512, 128), (1024, 128)]:
@@ -135,13 +186,15 @@ def bench_flash_window(results: list):
 
 
 def run(seed: int = 0, out_path: str = "BENCH_kernels.json"):
-    ws, fw = [], []
+    ws, wsf, fw = [], [], []
     bench_ws_step(ws, seed=seed)
+    bench_ws_fused(wsf, seed=seed)
     bench_flash_window(fw)
     payload = {
         "schema": "bench_kernels/v1",
         "backend": jax.default_backend(),
         "ws_step": ws,
+        "ws_fused": wsf,
         "flash_window": fw,
     }
     with open(out_path, "w") as f:

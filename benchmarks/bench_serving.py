@@ -69,10 +69,11 @@ def make_request_stream(n_requests: int, max_bucket: int, seed: int = 0,
 
 
 def run_scheduler(model, params, draft_fn, warmup, streams, *, cold_nfe,
-                  max_rows):
+                  max_rows, fused_block=1):
     sched = WarmStartScheduler(
         flow_model=model, flow_params=params, draft_fn=draft_fn,
-        cold_nfe=cold_nfe, default_t0=T0, max_rows=max_rows)
+        cold_nfe=cold_nfe, default_t0=T0, max_rows=max_rows,
+        fused_block=fused_block)
     for w in warmup:                               # warm the bucket caches
         sched.serve_requests(w)
     wall = 0.0
@@ -204,6 +205,9 @@ def main():
     ap.add_argument("--arrival-rate", type=float, default=0.0,
                     help="streaming Poisson arrival rate in req/s (0 = "
                          "auto: half the warm batch service rate)")
+    ap.add_argument("--fused-block", type=int, default=1,
+                    help="refine in fused K-step ws_fused megakernel "
+                         "blocks (1 = per-step loop)")
     args = ap.parse_args()
 
     if args.smoke:
@@ -226,7 +230,8 @@ def main():
           f"{max_bucket}, cold_nfe={args.cold_nfe}")
     sched, results, sched_rep, sched_wall, sched_rps = run_scheduler(
         model, params, draft_fn, warmup, streams,
-        cold_nfe=args.cold_nfe, max_rows=max_rows)
+        cold_nfe=args.cold_nfe, max_rows=max_rows,
+        fused_block=args.fused_block)
     base_wall, base_rps = run_one_shot_baseline(
         model, params, draft_fn, warmup, streams, cold_nfe=args.cold_nfe)
 
@@ -293,6 +298,17 @@ def main():
           f"vs end-of-run {streaming['baseline_end_of_run_s']['p95']:.3f}s "
           f"({streaming['ttfr_speedup_vs_end_of_run']:.1f}x), "
           f"flushes {streaming['flush_reasons']}  -> {args.out}")
+    jc = streaming["last_pass"]["jit_cache"]
+    fz = jc["fused"]
+    fused_note = (f", fused K={fz['fused_block']}: "
+                  f"{fz['blocks_dispatched']} megakernel blocks covering "
+                  f"{fz['steps_fused']} steps"
+                  if fz["fused_block"] > 1 else "")
+    print(f"streaming jit cache (last pass): {jc['hits']} hits / "
+          f"{jc['misses']} misses across {len(jc['per_key'])} compile keys"
+          f"{fused_note}; per key: "
+          + ", ".join(f"{k}={v['hits']}h/{v['misses']}m"
+                      for k, v in jc["per_key"].items()))
     if args.smoke:
         if speedup < 1.1:
             raise SystemExit(

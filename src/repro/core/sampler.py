@@ -164,6 +164,9 @@ def scan_refine_loop_rows(
     hs: jax.Array,
     active: jax.Array,
     key_idx: jax.Array,
+    *,
+    fused_block: int = 1,
+    fused_fn: Optional[Callable] = None,
 ):
     """Masked per-row refine loop: ONE ``lax.scan`` serving rows whose t0
     (and therefore NFE) differ, each on its own slice of the shared
@@ -177,12 +180,41 @@ def scan_refine_loop_rows(
         ``fold_in(flow_keys[b], key_idx[i, b])`` so a row's noise stream
         is a function of its own key and local step counter only.
       ts / hs / active / key_idx: ``(n, B)`` schedule matrices.
+      fused_block / fused_fn: with ``K > 1`` the scan runs over
+        ceil(n/K) blocks of K sampling steps against one backbone
+        evaluation each (see :func:`scan_refine_loop`); ``fused_fn``
+        receives the block's per-(step, row) folded keys as a (K, B) key
+        matrix. Per-row entry masks are preserved exactly: inactive steps
+        carry ``h = 0``, which the megakernel freezes bit-exactly — a row
+        entering mid-block stays untouched until its first active step.
 
     Rows are frozen (``x`` passes through unchanged) on steps where
     ``active`` is False; the backbone still evaluates the full batch each
     step — heterogeneity inside a micro-batch should therefore stay small
     (the batcher's t0-bins bound it).
     """
+    if fused_block > 1:
+        if fused_fn is None:
+            raise ValueError("fused_block > 1 requires fused_fn "
+                             "(see repro.kernels.make_ws_fused_fn)")
+        n = ts.shape[0]
+        k = min(fused_block, n)
+        nb = -(-n // k)
+        bts = _pad_blocks(ts, nb * k, n, 1.0).reshape((nb, k) + ts.shape[1:])
+        bhs = _pad_blocks(hs, nb * k, n, 0.0).reshape((nb, k) + hs.shape[1:])
+        bidx = _pad_blocks(key_idx, nb * k, n, 0).reshape(
+            (nb, k) + key_idx.shape[1:])
+
+        def fused_body(x, inp):
+            bt, bh, bi = inp                              # (K, B) each
+            keys = jax.vmap(
+                lambda idx: jax.vmap(jax.random.fold_in)(flow_keys, idx)
+            )(bi)                                         # (K, B) typed keys
+            logits = logits_fn(x, bt[0])
+            return fused_fn(keys, logits, x, bt, bh), None
+
+        x, _ = jax.lax.scan(fused_body, x_init, (bts, bhs, bidx))
+        return x
 
     def body(x, inp):
         t, h, act, idx = inp
@@ -230,6 +262,15 @@ def refine_loop_inputs(rng: jax.Array, t0: float, h: float, n: int):
     return keys, jnp.asarray(ts), jnp.asarray(hs)
 
 
+def _pad_blocks(arr, n: int, nf: int, pad_value):
+    """Pad a leading-``nf`` schedule array up to ``n`` steps (block tail)."""
+    if n == nf:
+        return arr
+    pad = jnp.broadcast_to(jnp.asarray(pad_value, arr.dtype),
+                           (n - nf,) + arr.shape[1:])
+    return jnp.concatenate([arr, pad], axis=0)
+
+
 def scan_refine_loop(
     logits_fn: Callable[[jax.Array, jax.Array], jax.Array],
     one_step: Callable,
@@ -239,6 +280,8 @@ def scan_refine_loop(
     hs: jax.Array,
     *,
     argmax_final: bool = False,
+    fused_block: int = 1,
+    fused_fn: Optional[Callable] = None,
 ):
     """The whole refine loop as ONE ``lax.scan`` over ``(keys, t, h)``.
 
@@ -256,9 +299,49 @@ def scan_refine_loop(
       keys / ts / hs: leading-``n`` scan inputs (see
         :func:`refine_loop_inputs`).
       argmax_final: replace the last stochastic step with argmax(p1).
+      fused_block / fused_fn: with ``fused_block = K > 1`` the scan runs
+        over ceil(n/K) *blocks*: each block evaluates the backbone ONCE
+        (at the block's first step time) and hands K consecutive sampling
+        steps to ``fused_fn(keys (K,...), logits, x, ts (K,), hs (K,))``
+        — the ``kernels.ws_fused`` megakernel (see
+        :func:`repro.kernels.make_ws_fused_fn`). The final partial block
+        is padded with ``h = 0`` steps, which the kernel freezes
+        bit-exactly. This trades per-step logits refresh for HBM traffic
+        (and NFE: ceil(n/K) backbone evals instead of n) — an OPT-IN
+        approximation; ``fused_block=1`` is the paper-faithful loop.
+        ``argmax_final`` keeps its final step unfused on fresh logits.
     """
     b = x_init.shape[0]
     n = ts.shape[0]
+
+    if fused_block > 1:
+        if fused_fn is None:
+            raise ValueError("fused_block > 1 requires fused_fn "
+                             "(see repro.kernels.make_ws_fused_fn)")
+        nf = n - 1 if argmax_final else n
+        x = x_init
+        if nf > 0:
+            k = min(fused_block, nf)
+            nb = -(-nf // k)
+            # h=0 tail padding: frozen rows, any key/t — use the last ones
+            bts = _pad_blocks(ts[:nf], nb * k, nf, 1.0).reshape(nb, k)
+            bhs = _pad_blocks(hs[:nf], nb * k, nf, 0.0).reshape(nb, k)
+            bkeys = jnp.concatenate(
+                [keys[:nf]] + [keys[nf - 1:nf]] * (nb * k - nf), axis=0
+            ).reshape((nb, k) + keys.shape[1:])
+
+            def fused_body(x, inp):
+                bk, bt, bh = inp
+                tb = jnp.full((b,), bt[0], jnp.float32)
+                logits = logits_fn(x, tb)
+                return fused_fn(bk, logits, x, bt, bh), None
+
+            x, _ = jax.lax.scan(fused_body, x, (bkeys, bts, bhs))
+        if argmax_final:
+            tb = jnp.full((b,), ts[n - 1], jnp.float32)
+            x = jnp.argmax(logits_fn(x, tb), axis=-1).astype(jnp.int32)
+        return x
+
     last = np.arange(n) == n - 1
 
     def body(x, inp):
@@ -291,6 +374,10 @@ class EulerSampler:
       step_fn: optional fused replacement for the probability update +
         categorical draw, signature (rng, logits, x_t, t, h) -> x_next
         (the Pallas kernel plugs in here).
+      fused_block: K > 1 chunks the refine loop into fused K-step blocks
+        (one backbone evaluation + one ``kernels.ws_fused`` megakernel
+        dispatch per block); backbone evals drop to ceil(nfe/K). Opt-in
+        approximation — 1 (default) is the paper-faithful per-step loop.
       jit: compile the whole refine loop into one dispatch (skipped
         automatically under an outer trace). ``x_init`` is NOT donated —
         callers may reuse it; the serving engine donates at its own
@@ -302,6 +389,7 @@ class EulerSampler:
     temperature: float = 1.0
     argmax_final: bool = False
     step_fn: Optional[Callable] = None
+    fused_block: int = 1
     jit: bool = True
 
     def __post_init__(self):
@@ -319,15 +407,31 @@ class EulerSampler:
         """Guaranteed function-evaluation count (see guarantees.py)."""
         return self.path.num_steps(self.h)
 
+    @property
+    def backbone_evals(self) -> int:
+        """Backbone evaluations actually dispatched (<= nfe; fused blocks
+        amortise one evaluation over ``fused_block`` sampling steps)."""
+        if self.fused_block <= 1:
+            return self.nfe
+        nf = self.nfe - 1 if self.argmax_final else self.nfe
+        evals = -(-nf // self.fused_block) if nf > 0 else 0
+        return evals + (1 if self.argmax_final else 0)
+
     def _scan_loop(self, model_fn, rng, x_init):
         """The whole refine loop as one lax.scan over (keys, t, h)."""
         keys, ts, hs = refine_loop_inputs(rng, self.path.t0, self.h, self.nfe)
         one_step = make_euler_one_step(
             self.path, temperature=self.temperature, step_fn=self.step_fn
         )
+        fused_fn = None
+        if self.fused_block > 1:
+            from repro.kernels import make_ws_fused_fn
+            fused_fn = make_ws_fused_fn(
+                self.path, temperature=self.temperature)
         return scan_refine_loop(
             model_fn, one_step, x_init, keys, ts, hs,
             argmax_final=self.argmax_final,
+            fused_block=self.fused_block, fused_fn=fused_fn,
         )
 
     def sample(
@@ -358,8 +462,9 @@ class EulerSampler:
                 self._jit_cache[model_fn] = fn
             x = fn(rng, x_init)
         # nfe is a static property of the schedule — keep it a python int so
-        # the guarantee check works under jit tracing.
-        stats = SamplerStats(nfe=self.nfe, final_t=1.0)
+        # the guarantee check works under jit tracing. Fused blocks only
+        # ever LOWER the count below the guaranteed bound.
+        stats = SamplerStats(nfe=self.backbone_evals, final_t=1.0)
         return x, stats
 
 

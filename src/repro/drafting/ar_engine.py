@@ -27,25 +27,42 @@ transformers):
     a row's first ``m`` tokens agree between ``seq_len = m`` and ``> m``).
 
 Bit-exactness contract (tested against ``ref.oracle_generate_rows``):
-with ``prefill_mode="scan"`` (default) every model evaluation is the
-single-token decode shape, so the cached engine is **bit-identical** to
-the cache-free full-recompute oracle across prefill lengths, batch sizes
-and partial cache reuse. ``prefill_mode="batched"`` processes the prompt
-in one multi-token call — faster for long prompts, but XLA tiles the
-batched matmuls differently, so logits agree only to float tolerance
-(~1e-6), not bitwise; keep "scan" wherever determinism is part of the
-serving contract.
+every adapter evaluation a request sees must reproduce the cache-free
+full-recompute oracle **bitwise** across prefill lengths, batch sizes
+and partial cache reuse. How that is achieved depends on the substrate:
+
+  * ``prefill_mode="scan"`` consumes the prompt single-token-at-a-time,
+    so every evaluation is the decode shape — bit-exact by construction
+    on any substrate, at O(P) dispatches.
+  * ``prefill_mode="batched"`` consumes the prompt in ONE multi-token
+    call. For adapters whose ``exact_batched_prefill`` is True this is
+    *also* bit-exact: the LSTM's "batched" prefill is itself a scan of
+    decode steps, and the transformer adapter routes through the
+    ``kernels.draft_decode`` Pallas path, which processes every token in
+    its own fixed-shape grid program so the reduction order of each dot,
+    norm and softmax is identical at S=1 and S=P. Only the legacy XLA
+    transformer path (``decode_impl="xla"``, or configs outside
+    ``draft_decode_supported``) is float-tolerance (~1e-6), because XLA
+    tiles batched matmuls differently than decode-shaped ones.
+
+``prefill_mode=None`` (default) picks "batched" when the adapter
+advertises ``exact_batched_prefill`` and "scan" otherwise — fast AND
+bit-exact in the common case, degrading to the scan path only where
+exactness would be lost.
 """
 
 from __future__ import annotations
 
 import dataclasses
+import functools
 import hashlib
 from typing import Any, Callable, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+from repro.kernels import DraftDecoder, draft_decode_supported
 
 
 # ---------------------------------------------------------------------------
@@ -74,18 +91,53 @@ class TransformerDraftAdapter:
 
     model: Any                       # repro.models.Model
     cache_dtype: Any = jnp.float32   # draft models are small; keep f32
+    decode_impl: str = "auto"        # "auto" | "kernel" | "xla"
 
     positional = True
+
+    @functools.cached_property
+    def _decoder(self):
+        """The fixed-reduction-order Pallas path, or None for XLA.
+
+        "auto" takes the kernel path whenever the config is inside the
+        ``draft_decode_supported`` subset (and the cache is f32);
+        "kernel" demands it; "xla" keeps the legacy float-tolerance path.
+        """
+        if self.decode_impl == "xla":
+            return None
+        supported = (draft_decode_supported(self.model.cfg)
+                     and self.cache_dtype == jnp.float32)
+        if self.decode_impl == "kernel":
+            return DraftDecoder(model=self.model)   # raises if unsupported
+        if self.decode_impl != "auto":
+            raise ValueError(
+                f"decode_impl must be auto|kernel|xla, got {self.decode_impl}")
+        return DraftDecoder(model=self.model) if supported else None
+
+    @property
+    def exact_batched_prefill(self) -> bool:
+        """True when ``prefill_batched`` is bit-identical to scanning."""
+        return self._decoder is not None
 
     def init_cache(self, batch: int, max_len: int):
         return self.model.init_cache(batch, max_len, self.cache_dtype)
 
     def decode_step(self, params, tok, cache, pos):
-        logits, cache = self.model.decode_step(params, tok[:, None], cache, pos)
+        if self._decoder is not None:
+            logits, cache = self._decoder.forward_chunk(
+                params, tok[:, None], cache, pos)
+        else:
+            logits, cache = self.model.decode_step(
+                params, tok[:, None], cache, pos)
         return logits[:, 0].astype(jnp.float32), cache
 
     def prefill_batched(self, params, toks, cache):
-        logits, cache = self.model.prefill(params, {"tokens": toks}, cache)
+        # prefill always starts from an empty (or rewound-to-0) cache, so
+        # the chunk's rope/mask offset is 0 on both implementations
+        if self._decoder is not None:
+            logits, cache = self._decoder.forward_chunk(params, toks, cache, 0)
+        else:
+            logits, cache = self.model.prefill(params, {"tokens": toks}, cache)
         return logits[:, -1].astype(jnp.float32), cache
 
     def set_pos(self, cache, pos: int):
@@ -110,6 +162,8 @@ class LSTMDraftAdapter:
     model: Any                       # repro.models.LSTMModel
 
     positional = False
+    # recurrent stepping IS the batched prefill: bit-exact by construction
+    exact_batched_prefill = True
 
     def init_cache(self, batch: int, max_len: int):
         cfg = self.model.cfg
@@ -176,13 +230,19 @@ class ARDraftEngine:
         largest request bucket served.
       temperature: sampling temperature.
       bos: prompt used when ``generate_rows`` is called without one.
-      prefill_mode: "scan" (default, bit-exact vs the oracle) or
-        "batched" (multi-token prefill; float-tolerance only).
+      prefill_mode: "scan" (single-token prompt replay, bit-exact on any
+        adapter), "batched" (one multi-token prefill dispatch; bit-exact
+        iff ``adapter.exact_batched_prefill``), or None (default) to pick
+        "batched" when the adapter advertises exactness, else "scan".
     """
 
     def __init__(self, adapter, params, *, max_len: int,
                  temperature: float = 1.0, bos: int = 0,
-                 prefill_mode: str = "scan"):
+                 prefill_mode: Optional[str] = None):
+        if prefill_mode is None:
+            prefill_mode = ("batched"
+                            if getattr(adapter, "exact_batched_prefill", False)
+                            else "scan")
         if prefill_mode not in ("scan", "batched"):
             raise ValueError(f"prefill_mode must be scan|batched, got {prefill_mode}")
         self.adapter = adapter

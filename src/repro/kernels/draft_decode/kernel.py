@@ -1,0 +1,330 @@
+"""Pallas decode-step kernels with a FIXED per-token reduction order.
+
+Why this exists: the AR draft engine's bit-exactness contract
+(drafting/ar_engine.py) requires batched prefill to reproduce the
+scan-prefill token stream *bitwise*. Under plain XLA that fails — a
+(B, S, D) matmul/layernorm/softmax tiles its reductions differently at
+S=1 (decode) and S=P (prefill), drifting ~1e-6 in the logits and
+eventually flipping a sampled token. These kernels pin the reduction
+order by construction: every token is processed by its own grid program
+at the SAME block shapes regardless of how many tokens share the
+dispatch, so the only thing that changes between decode and prefill is
+the grid size — never the shape (and therefore never the reduction
+order) of any dot, norm or softmax.
+
+Four kernels cover every reduction in the draft transformer forward:
+
+  ``_qkv_rope_kernel``   ln1 -> q/k/v projections -> RoPE, one token per
+                         program (grid over the flattened B*S tokens).
+  ``_attn_kernel``       one query token against the FULL (T = max_len)
+                         KV cache buffer — the cache length is static,
+                         so the softmax/PV reductions run over the same
+                         T lanes in decode and prefill; masking handles
+                         causality and cache validity.
+  ``_post_attn_kernel``  wo projection + residual + ln2 + MLP + residual.
+  ``_head_kernel``       final norm + vocab projection.
+
+Everything *between* kernels is exact data movement (embedding gather,
+``dynamic_update_slice`` cache writes, reshapes) which cannot change
+values. See ops.py for the dispatcher and the supported-config gate.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -2.3819763e38  # matches models/attention.py's mask constant
+
+
+def _norm_row(x, scale, bias, *, kind: str, eps: float):
+    """Row norm at fixed (1, D) shape; mirrors models/common.py formulas."""
+    xf = x.astype(jnp.float32)
+    if kind == "layernorm":
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.mean(jnp.square(xf - mu), axis=-1, keepdims=True)
+        y = (xf - mu) * jax.lax.rsqrt(var + eps)
+        return y * scale.astype(jnp.float32) + bias.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return y * (1.0 + scale.astype(jnp.float32))
+
+
+def _act(name: str, x):
+    if name == "silu":
+        return jax.nn.silu(x)
+    if name == "gelu":
+        return jax.nn.gelu(x, approximate=True)
+    if name == "relu":
+        return jax.nn.relu(x)
+    raise ValueError(name)
+
+
+def _dot(a, b):
+    return jax.lax.dot_general(
+        a, b, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+
+
+def _rope_row(x, pos, *, heads: int, head_dim: int, theta: float):
+    """RoPE for one token: x (heads*head_dim,), pos scalar int32."""
+    half = head_dim // 2
+    freq = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = pos.astype(jnp.float32) * freq                     # (half,)
+    sin, cos = jnp.sin(ang), jnp.cos(ang)
+    xh = x.reshape(heads, head_dim)
+    x1, x2 = xh[:, :half], xh[:, half:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.reshape(heads * head_dim)
+
+
+def _qkv_rope_kernel(
+    x_ref,        # (1, D)
+    pos_ref,      # (1, 1) int32 — absolute position of this token
+    lns_ref,      # (1, D) ln1 scale
+    lnb_ref,      # (1, D) ln1 bias (zeros for rmsnorm)
+    wq_ref,       # (D, H*hd)
+    wk_ref,       # (D, KH*hd)
+    wv_ref,       # (D, KH*hd)
+    bq_ref, bk_ref, bv_ref,   # (1, *) biases (zeros when use_bias=False)
+    q_ref, k_ref, v_ref,      # outputs (1, H*hd) / (1, KH*hd) / (1, KH*hd)
+    *,
+    norm: str, eps: float, use_bias: bool, use_rope: bool, theta: float,
+    heads: int, kv_heads: int, head_dim: int,
+):
+    h = _norm_row(x_ref[...], lns_ref[...], lnb_ref[...], kind=norm, eps=eps)
+    q = _dot(h, wq_ref[...].astype(jnp.float32))
+    k = _dot(h, wk_ref[...].astype(jnp.float32))
+    v = _dot(h, wv_ref[...].astype(jnp.float32))
+    if use_bias:
+        q = q + bq_ref[...].astype(jnp.float32)
+        k = k + bk_ref[...].astype(jnp.float32)
+        v = v + bv_ref[...].astype(jnp.float32)
+    if use_rope:
+        pos = pos_ref[0, 0]
+        q = _rope_row(q[0], pos, heads=heads, head_dim=head_dim,
+                      theta=theta)[None]
+        k = _rope_row(k[0], pos, heads=kv_heads, head_dim=head_dim,
+                      theta=theta)[None]
+    q_ref[...] = q
+    k_ref[...] = k
+    v_ref[...] = v
+
+
+def _attn_kernel(
+    q_ref,        # (1, 1, H*hd) — this token's query
+    k_ref,        # (1, T, KH*hd) — the row's FULL cache buffer
+    v_ref,        # (1, T, KH*hd)
+    pos_ref,      # (1, 1) int32 — this token's absolute position
+    end_ref,      # (1, 1) int32 — cache validity end (start + s)
+    out_ref,      # (1, 1, H*hd)
+    *,
+    heads: int, kv_heads: int, head_dim: int,
+):
+    g = heads // kv_heads
+    t = k_ref.shape[1]
+    scale = 1.0 / math.sqrt(head_dim)
+    pos = pos_ref[0, 0]
+    end = end_ref[0, 0]
+
+    qh = q_ref[0, 0].astype(jnp.float32).reshape(kv_heads, g, head_dim)
+    kh = k_ref[0].astype(jnp.float32).reshape(t, kv_heads, head_dim)
+    vh = v_ref[0].astype(jnp.float32).reshape(t, kv_heads, head_dim)
+
+    col = jax.lax.broadcasted_iota(jnp.int32, (g, t), 1)
+    valid = (col <= pos) & (col < end)
+
+    outs = []
+    for i in range(kv_heads):
+        sc = _dot(qh[i], kh[:, i, :].T) * scale            # (G, T)
+        sc = jnp.where(valid, sc, NEG_INF)
+        m = jnp.max(sc, axis=-1, keepdims=True)
+        p = jnp.exp(sc - m)
+        l = jnp.sum(p, axis=-1, keepdims=True)
+        outs.append(_dot(p, vh[:, i, :]) / l)              # (G, hd)
+    out = jnp.stack(outs, axis=0)                          # (KH, G, hd)
+    out_ref[...] = out.reshape(1, 1, heads * head_dim)
+
+
+def _post_attn_kernel(
+    a_ref,        # (1, H*hd) — attention output for this token
+    x_ref,        # (1, D) — residual stream input
+    wo_ref, bo_ref,           # (H*hd, D), (1, D)
+    lns_ref, lnb_ref,         # ln2 scale/bias
+    wup_ref, bup_ref,         # (D, F), (1, F)
+    wgate_ref, bgate_ref,     # (D, F), (1, F) (zeros when ungated)
+    wdown_ref, bdown_ref,     # (F, D), (1, D)
+    out_ref,      # (1, D)
+    *,
+    norm: str, eps: float, use_bias: bool, act: str, gated: bool,
+):
+    h = _dot(a_ref[...].astype(jnp.float32), wo_ref[...].astype(jnp.float32))
+    if use_bias:
+        h = h + bo_ref[...].astype(jnp.float32)
+    x = x_ref[...].astype(jnp.float32) + h
+    hn = _norm_row(x, lns_ref[...], lnb_ref[...], kind=norm, eps=eps)
+    up = _dot(hn, wup_ref[...].astype(jnp.float32))
+    if use_bias:
+        up = up + bup_ref[...].astype(jnp.float32)
+    if gated:
+        gate = _dot(hn, wgate_ref[...].astype(jnp.float32))
+        if use_bias:
+            gate = gate + bgate_ref[...].astype(jnp.float32)
+        up = _act(act, gate) * up
+    else:
+        up = _act(act, up)
+    down = _dot(up, wdown_ref[...].astype(jnp.float32))
+    if use_bias:
+        down = down + bdown_ref[...].astype(jnp.float32)
+    out_ref[...] = x + down
+
+
+def _head_kernel(
+    x_ref,        # (1, D)
+    lns_ref, lnb_ref,         # final norm scale/bias
+    w_ref,        # (D, V) — the head matrix (embed table pre-transposed
+                  #          host-side when tie_embeddings)
+    out_ref,      # (1, V)
+    *,
+    norm: str, eps: float,
+):
+    h = _norm_row(x_ref[...], lns_ref[...], lnb_ref[...], kind=norm, eps=eps)
+    out_ref[...] = _dot(h, w_ref[...].astype(jnp.float32))
+
+
+# ---------------------------------------------------------------------------
+# pallas_call wrappers (grid over tokens; weights are whole-array blocks)
+# ---------------------------------------------------------------------------
+
+def _row_spec():
+    return pl.BlockSpec((1, 1), lambda i: (i, 0))
+
+
+def _full2(a):
+    return pl.BlockSpec(a.shape, lambda i: (0, 0))
+
+
+def qkv_rope_pallas(x, pos_r, ln, attn_p, *, norm, eps, use_bias, use_rope,
+                    theta, heads, kv_heads, head_dim, interpret):
+    """x (R, D); pos_r (R, 1) int32 -> (q (R, H*hd), k, v (R, KH*hd))."""
+    r, d = x.shape
+    qd, kd = heads * head_dim, kv_heads * head_dim
+    lns = ln["scale"].reshape(1, d)
+    lnb = (ln["bias"] if "bias" in ln else jnp.zeros_like(ln["scale"])
+           ).reshape(1, d)
+    zq, zk = jnp.zeros((1, qd), jnp.float32), jnp.zeros((1, kd), jnp.float32)
+    bq = attn_p["wq"].get("b", zq[0]).reshape(1, qd)
+    bk = attn_p["wk"].get("b", zk[0]).reshape(1, kd)
+    bv = attn_p["wv"].get("b", zk[0]).reshape(1, kd)
+    kernel = functools.partial(
+        _qkv_rope_kernel, norm=norm, eps=eps, use_bias=use_bias,
+        use_rope=use_rope, theta=theta, heads=heads, kv_heads=kv_heads,
+        head_dim=head_dim)
+    args = (x, pos_r, lns, lnb, attn_p["wq"]["w"], attn_p["wk"]["w"],
+            attn_p["wv"]["w"], bq, bk, bv)
+    in_specs = [
+        pl.BlockSpec((1, d), lambda i: (i, 0)),
+        _row_spec(), _full2(lns), _full2(lnb),
+        _full2(attn_p["wq"]["w"]), _full2(attn_p["wk"]["w"]),
+        _full2(attn_p["wv"]["w"]), _full2(bq), _full2(bk), _full2(bv),
+    ]
+    out_specs = (
+        pl.BlockSpec((1, qd), lambda i: (i, 0)),
+        pl.BlockSpec((1, kd), lambda i: (i, 0)),
+        pl.BlockSpec((1, kd), lambda i: (i, 0)),
+    )
+    out_shape = (
+        jax.ShapeDtypeStruct((r, qd), jnp.float32),
+        jax.ShapeDtypeStruct((r, kd), jnp.float32),
+        jax.ShapeDtypeStruct((r, kd), jnp.float32),
+    )
+    return pl.pallas_call(kernel, grid=(r,), in_specs=in_specs,
+                          out_specs=out_specs, out_shape=out_shape,
+                          interpret=interpret)(*args)
+
+
+def attn_cached_pallas(q, kbuf, vbuf, q_pos, end, *, seq: int, heads,
+                       kv_heads, head_dim, interpret):
+    """q (B, S, H*hd); kbuf/vbuf (B, T, KH*hd); q_pos (R, 1); end (1, 1).
+
+    One grid program per query token; each reads its batch row's full
+    T-length cache, so the reduction order over keys is identical for
+    decode (S=1) and batched prefill (S=P).
+    """
+    b, s, qd = q.shape
+    t = kbuf.shape[1]
+    kd = kv_heads * head_dim
+    r = b * s
+    qf = q.reshape(r, 1, qd)
+    kernel = functools.partial(_attn_kernel, heads=heads, kv_heads=kv_heads,
+                               head_dim=head_dim)
+    in_specs = [
+        pl.BlockSpec((1, 1, qd), lambda i: (i, 0, 0)),
+        pl.BlockSpec((1, t, kd), lambda i: (i // seq, 0, 0)),
+        pl.BlockSpec((1, t, kd), lambda i: (i // seq, 0, 0)),
+        _row_spec(),
+        pl.BlockSpec((1, 1), lambda i: (0, 0)),
+    ]
+    out = pl.pallas_call(
+        kernel, grid=(r,), in_specs=in_specs,
+        out_specs=pl.BlockSpec((1, 1, qd), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((r, 1, qd), jnp.float32),
+        interpret=interpret)(qf, kbuf, vbuf, q_pos, end)
+    return out.reshape(b, s, qd)
+
+
+def post_attn_pallas(a, x, attn_p, ln, mlp_p, *, norm, eps, use_bias, act,
+                     interpret):
+    """a (R, H*hd) attention out; x (R, D) residual -> (R, D)."""
+    r, d = x.shape
+    qd = a.shape[1]
+    f = mlp_p["up"]["w"].shape[1]
+    gated = "gate" in mlp_p
+    lns = ln["scale"].reshape(1, d)
+    lnb = (ln["bias"] if "bias" in ln else jnp.zeros_like(ln["scale"])
+           ).reshape(1, d)
+    zd = jnp.zeros((1, d), jnp.float32)
+    zf = jnp.zeros((1, f), jnp.float32)
+    bo = attn_p["wo"].get("b", zd[0]).reshape(1, d)
+    bup = mlp_p["up"].get("b", zf[0]).reshape(1, f)
+    wgate = mlp_p["gate"]["w"] if gated else jnp.zeros((d, f), jnp.float32)
+    bgate = (mlp_p["gate"].get("b", zf[0]) if gated else zf[0]).reshape(1, f)
+    bdown = mlp_p["down"].get("b", zd[0]).reshape(1, d)
+    kernel = functools.partial(_post_attn_kernel, norm=norm, eps=eps,
+                               use_bias=use_bias, act=act, gated=gated)
+    args = (a, x, attn_p["wo"]["w"], bo, lns, lnb, mlp_p["up"]["w"], bup,
+            wgate, bgate, mlp_p["down"]["w"], bdown)
+    in_specs = [
+        pl.BlockSpec((1, qd), lambda i: (i, 0)),
+        pl.BlockSpec((1, d), lambda i: (i, 0)),
+        _full2(attn_p["wo"]["w"]), _full2(bo), _full2(lns), _full2(lnb),
+        _full2(mlp_p["up"]["w"]), _full2(bup), _full2(wgate), _full2(bgate),
+        _full2(mlp_p["down"]["w"]), _full2(bdown),
+    ]
+    return pl.pallas_call(
+        kernel, grid=(r,), in_specs=in_specs,
+        out_specs=pl.BlockSpec((1, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((r, d), jnp.float32),
+        interpret=interpret)(*args)
+
+
+def head_pallas(x, fn, w, *, norm, eps, interpret):
+    """x (R, D); w (D, V) -> logits (R, V)."""
+    r, d = x.shape
+    v = w.shape[1]
+    lns = fn["scale"].reshape(1, d)
+    lnb = (fn["bias"] if "bias" in fn else jnp.zeros_like(fn["scale"])
+           ).reshape(1, d)
+    kernel = functools.partial(_head_kernel, norm=norm, eps=eps)
+    in_specs = [
+        pl.BlockSpec((1, d), lambda i: (i, 0)),
+        _full2(lns), _full2(lnb), _full2(w),
+    ]
+    return pl.pallas_call(
+        kernel, grid=(r,), in_specs=in_specs,
+        out_specs=pl.BlockSpec((1, v), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((r, v), jnp.float32),
+        interpret=interpret)(x, lns, lnb, w)

@@ -1,6 +1,11 @@
 """Jit'd wrapper for the Pallas flash attention kernel: GQA head expansion,
 seq padding to block multiples, head folding, and the interpret switch
-(CPU validation vs TPU execution)."""
+(CPU validation vs TPU execution).
+
+``interpret=None`` (default) goes through the central
+``kernels.resolve_interpret``: compiled on a real TPU backend, interpret
+elsewhere — the old hardcoded ``interpret=True`` default silently ran
+the interpreter on TPU."""
 
 from __future__ import annotations
 
@@ -9,6 +14,7 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import resolve_interpret
 from repro.kernels.flash_attn.kernel import flash_attention_pallas
 
 
@@ -22,8 +28,9 @@ def flash_attention(
     scale: Optional[float] = None,
     block_q: int = 128,
     block_k: int = 128,
-    interpret: bool = True,
+    interpret: Optional[bool] = None,
 ) -> jax.Array:
+    interpret = resolve_interpret(interpret)
     b, s, h, d = q.shape
     t, kh = k.shape[1], k.shape[2]
     if kh != h:                      # GQA: expand kv heads to query heads

@@ -1,0 +1,13 @@
+"""K-step fused warm-start refine megakernel (single Pallas dispatch)."""
+from repro.kernels.ws_fused.kernel import ws_fused_streamed_pallas
+from repro.kernels.ws_fused.ops import (
+    fused_row_bytes, make_ws_fused_fn, pick_tiles_fused, ws_fused_steps,
+)
+
+__all__ = [
+    "fused_row_bytes",
+    "make_ws_fused_fn",
+    "pick_tiles_fused",
+    "ws_fused_steps",
+    "ws_fused_streamed_pallas",
+]

@@ -1,0 +1,241 @@
+"""Backend-aware dispatcher for the K-step fused warm-start megakernel.
+
+``ws_fused_steps(keys, logits, x_t, ts, hs, path)`` executes K Euler
+warm-start sampling steps against ONE frozen logits buffer in a single
+Pallas dispatch, carrying the per-row token state in VMEM scratch so the
+intermediate (R,) token buffers never round-trip HBM. Its oracle is the
+composition of K single-step ``ws_step`` calls on the same logits
+(feeding each step's tokens into the next) — the ``impl="composed"``
+path materialises exactly that composition and is what the parity tests
+assert bit-exactness against.
+
+Two key layouts:
+  * single-key — ``keys`` is a (K,) vector of per-step PRNG keys shared
+    by all rows (the ``scan_refine_loop`` regime). Bit-compatible with
+    ``ws_step(keys[j], ...)`` per step: the kernel's noise counters are
+    the same absolute (row, col) pairs.
+  * per-row — ``keys`` is (K, B): one key per (step, request-row), the
+    ``scan_refine_loop_rows`` regime. Noise counters become (position-
+    within-request, col) so results are invariant to how requests are
+    packed into the batch; per-row this equals composing single-request
+    ``ws_step`` calls. Forces the threefry path (the hardware PRNG is
+    seeded per grid program, not per row).
+
+Dispatch policy (``impl=None`` is auto): ``"fused"`` — the megakernel —
+unless even a one-row block would overflow the VMEM budget (huge K), in
+which case auto falls back to ``"composed"``. ``interpret=None`` goes
+through the central ``kernels.resolve_interpret``; ``hw_prng=None``
+auto-selects the TPU hardware PRNG in single-key compiled mode only.
+
+``pick_tiles_fused`` extends ``ws_step.pick_tiles`` with the K-step
+VMEM terms: besides the ~16 B/row-lane streaming tile, every resident
+row carries 28 B of carried-state scratch, a 4 B noise counter, and
+12 B per fused step (the full-K mixing-weight and seed slabs), so deep
+fusion shrinks ``row_block`` before it ever spills.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.paths import WarmStartPath
+from repro.kernels import is_tpu_backend, resolve_interpret
+from repro.kernels.ws_fused.kernel import ws_fused_streamed_pallas
+from repro.kernels.ws_step.ops import (
+    LANE, MAX_VOCAB_TILE, VMEM_BUDGET_BYTES, pick_tiles,
+)
+
+# per resident row: carried token + 6 accumulator scratch words
+FUSED_STATE_BYTES_PER_ROW = 28
+# per resident row per fused step: mixing weight a + 2 PRNG seed words
+FUSED_STEP_BYTES_PER_ROW = 12
+# per resident row: noise counter word
+FUSED_MISC_BYTES_PER_ROW = 4
+
+
+def fused_row_bytes(vocab_tile: int, num_steps: int) -> int:
+    """Modeled resident VMEM bytes per row for a K-step fused block."""
+    return (
+        16 * vocab_tile
+        + FUSED_STATE_BYTES_PER_ROW
+        + FUSED_MISC_BYTES_PER_ROW
+        + num_steps * FUSED_STEP_BYTES_PER_ROW
+    )
+
+
+def pick_tiles_fused(
+    r: int,
+    v_padded: int,
+    num_steps: int,
+    *,
+    vmem_budget: int = VMEM_BUDGET_BYTES,
+    max_vocab_tile: int = MAX_VOCAB_TILE,
+) -> Tuple[int, int]:
+    """``(row_block, vocab_tile)`` with K-step scratch accounted.
+
+    vocab_tile is chosen exactly like ``ws_step.pick_tiles`` (largest
+    128-lane multiple dividing ``v_padded``, capped); row_block is the
+    largest power of two whose ``fused_row_bytes`` fit the budget —
+    i.e. the per-step seed/weight slabs and carried state tax the row
+    budget, so K=64 fuses with a smaller row block than K=2.
+    """
+    vocab_tile = pick_tiles(r, v_padded, vmem_budget=vmem_budget,
+                            max_vocab_tile=max_vocab_tile)[1]
+    rows_budget = max(1, vmem_budget // fused_row_bytes(vocab_tile, num_steps))
+    row_block = 1
+    while row_block * 2 <= min(rows_budget, 256):
+        row_block *= 2
+    rp2 = 1
+    while rp2 < r:
+        rp2 *= 2
+    row_block = max(1, min(row_block, rp2))
+    return row_block, vocab_tile
+
+
+def _seed_words(keys: jax.Array) -> jax.Array:
+    """(K, 2) / (K, B, 2) int32 seed words from typed or raw PRNG keys."""
+    if jnp.issubdtype(keys.dtype, jax.dtypes.prng_key):
+        kd = jax.random.key_data(keys)
+    else:
+        kd = keys
+    kd = jnp.asarray(kd, jnp.uint32)
+    return kd[..., :2].astype(jnp.int32)
+
+
+def ws_fused_steps(
+    keys: jax.Array,            # (K,) per-step keys, or (K, B) per-row keys
+    logits: jax.Array,          # (B, N, V) or (R, V) — frozen for all K steps
+    x_t: jax.Array,             # (B, N) or (R,)
+    ts: jax.Array,              # (K,) or (K, B) step times
+    hs: jax.Array,              # (K,) or (K, B) step sizes (0 => frozen row)
+    path: WarmStartPath,
+    *,
+    temperature: float = 1.0,
+    interpret: Optional[bool] = None,
+    impl: Optional[str] = None,
+    row_block: Optional[int] = None,
+    vocab_tile: Optional[int] = None,
+    hw_prng: Optional[bool] = None,
+    vmem_budget: int = VMEM_BUDGET_BYTES,
+) -> jax.Array:
+    """K fused warm-start Euler steps; returns tokens shaped like ``x_t``."""
+    ts = jnp.asarray(ts, jnp.float32)
+    hs = jnp.asarray(hs, jnp.float32)
+    if ts.shape != hs.shape:
+        raise ValueError(f"ts/hs shape mismatch: {ts.shape} vs {hs.shape}")
+    num_steps = ts.shape[0]
+    if num_steps == 0:
+        return x_t
+
+    seeds = _seed_words(keys)
+    rows_mode = seeds.ndim == 3
+    squeeze = logits.ndim == 3
+    if squeeze:
+        b, n, v = logits.shape
+        r = b * n
+        lg = logits.reshape(r, v)
+        x = x_t.reshape(r)
+    else:
+        r, v = logits.shape
+        lg, x = logits, x_t
+    if rows_mode and not squeeze:
+        raise ValueError("per-row keys (K, B) require (B, N, V) logits")
+    if rows_mode and seeds.shape[:2] != (num_steps, b):
+        raise ValueError(
+            f"per-row keys shape {seeds.shape[:2]} != (K={num_steps}, B={b})")
+    if not rows_mode and seeds.shape != (num_steps, 2):
+        raise ValueError(f"expected (K,) keys, got seed words {seeds.shape}")
+
+    if ts.ndim == 1:
+        tt = jnp.broadcast_to(ts[:, None], (num_steps, r))
+        hh = jnp.broadcast_to(hs[:, None], (num_steps, r))
+    elif ts.ndim == 2 and squeeze and ts.shape[1] == b:
+        tt = jnp.broadcast_to(ts[:, :, None], (num_steps, b, n))
+        tt = tt.reshape(num_steps, r)
+        hh = jnp.broadcast_to(hs[:, :, None], (num_steps, b, n))
+        hh = hh.reshape(num_steps, r)
+    else:
+        raise ValueError(f"bad ts shape {ts.shape}")
+    a = jnp.clip(hh * path.velocity_scale(tt), 0.0, 1.0)
+
+    run_interpret = resolve_interpret(interpret)
+    vp = -(-v // LANE) * LANE
+    auto_rb, auto_bv = pick_tiles_fused(r, vp, num_steps,
+                                        vmem_budget=vmem_budget)
+    bv = vocab_tile if vocab_tile is not None else auto_bv
+    rb = row_block if row_block is not None else auto_rb
+    if vp % bv != 0:
+        raise ValueError(f"vocab_tile {bv} must divide padded vocab {vp}")
+
+    if impl is None or impl == "auto":
+        # even a one-row block overflowing the budget (huge K) => step-wise
+        impl = ("composed" if fused_row_bytes(bv, num_steps) > vmem_budget
+                else "fused")
+    if impl == "composed":
+        x_cur = x_t
+        for j in range(num_steps):
+            x_cur = ws_fused_steps(
+                keys[j:j + 1], logits, x_cur, ts[j:j + 1], hs[j:j + 1], path,
+                temperature=temperature, interpret=interpret, impl="fused",
+                row_block=rb, vocab_tile=bv, hw_prng=hw_prng,
+                vmem_budget=vmem_budget)
+        return x_cur
+    if impl != "fused":
+        raise ValueError(f"unknown ws_fused impl {impl!r}")
+
+    if hw_prng is None:
+        use_hw = (not run_interpret) and is_tpu_backend() and not rows_mode
+    else:
+        use_hw = bool(hw_prng)
+    if use_hw and rows_mode:
+        raise ValueError("hw_prng is incompatible with per-row (K, B) keys")
+
+    if vp != v:
+        lg = jnp.pad(lg, ((0, 0), (0, vp - v)))
+    rp = -(-r // rb) * rb
+
+    if rows_mode:
+        # pack-invariant counters: position within each request
+        ctr = jnp.broadcast_to(jnp.arange(n, dtype=jnp.int32)[None, :],
+                               (b, n)).reshape(r)
+        sd = jnp.broadcast_to(seeds[:, :, None, :], (num_steps, b, n, 2))
+        sd = sd.reshape(num_steps, r, 2)
+    else:
+        # absolute row counters — bit-compatible with per-step ws_step
+        ctr = jnp.arange(r, dtype=jnp.int32)
+        sd = (seeds if use_hw
+              else jnp.broadcast_to(seeds[:, None, :], (num_steps, r, 2)))
+
+    if rp != r:
+        lg = jnp.pad(lg, ((0, rp - r), (0, 0)))
+        x = jnp.pad(x, (0, rp - r))
+        a = jnp.pad(a, ((0, 0), (0, rp - r)))   # a=0 => padded rows frozen
+        ctr = jnp.pad(ctr, (0, rp - r))
+        if not use_hw:
+            sd = jnp.pad(sd, ((0, 0), (0, rp - r), (0, 0)))
+
+    out = ws_fused_streamed_pallas(
+        lg, x[:, None].astype(jnp.int32), a[:, :, None], sd, ctr[:, None],
+        valid_v=v, row_block=rb, vocab_tile=bv, temperature=temperature,
+        use_hw_prng=use_hw, interpret=run_interpret,
+    )[:, 0]
+    return out[:r].reshape(x_t.shape)
+
+
+def make_ws_fused_fn(path: WarmStartPath, *, temperature: float = 1.0,
+                     interpret: Optional[bool] = None,
+                     impl: Optional[str] = None,
+                     hw_prng: Optional[bool] = None):
+    """Returns ``fused_fn(keys, logits, x_t, ts, hs)`` with the path and
+    dispatch knobs bound — the plug-in shape ``core/sampler.py`` expects
+    for its fused-block refine loops."""
+
+    def fused_fn(keys, logits, x_t, ts, hs):
+        return ws_fused_steps(keys, logits, x_t, ts, hs, path,
+                              temperature=temperature, interpret=interpret,
+                              impl=impl, hw_prng=hw_prng)
+
+    return fused_fn

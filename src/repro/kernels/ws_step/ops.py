@@ -29,6 +29,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.paths import WarmStartPath
+from repro.kernels import is_tpu_backend, resolve_interpret
 from repro.kernels.ws_step.kernel import ws_step_streamed_pallas
 from repro.kernels.ws_step.ref import ws_step_ref
 
@@ -83,10 +84,9 @@ def seed_from_key(rng: jax.Array) -> jax.Array:
     return kd.astype(jnp.int32)
 
 
-def _resolve_interpret(interpret: Optional[bool]) -> bool:
-    if interpret is None:
-        return jax.default_backend() != "tpu"
-    return bool(interpret)
+# central backend/interpret resolution lives in kernels/__init__.py; the
+# old per-package name is kept as an alias for existing callers.
+_resolve_interpret = resolve_interpret
 
 
 def ws_step(
@@ -137,7 +137,7 @@ def ws_step(
 
     run_interpret = _resolve_interpret(interpret)
     if hw_prng is None:
-        use_hw_prng = (not run_interpret) and jax.default_backend() == "tpu"
+        use_hw_prng = (not run_interpret) and is_tpu_backend()
     else:
         use_hw_prng = bool(hw_prng)
 

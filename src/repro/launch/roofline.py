@@ -161,6 +161,55 @@ def model_flops_estimate(n_params: int, n_active_params: int, tokens: int,
     return (6.0 if kind == "train" else 2.0) * n * tokens
 
 
+def model_hbm_bytes(r: int, v: int) -> Dict[str, int]:
+    """Per-refine-step HBM traffic model for R rows x V vocab (f32 logits).
+
+    streamed: the vocab-tiled ws_step kernel — logits read once, Gumbel
+      noise generated in-kernel, tokens/weights O(R).
+    seed_fused: logits plus a pre-drawn (R, V) Gumbel tensor (written by
+      the XLA RNG kernel, read by the sampler: 3 passes over R*V*4).
+    unfused: the XLA probability path — logits, probs write+read, onehot,
+      gumbel.
+    """
+    small = r * 12  # x, a, out vectors
+    return {
+        "streamed": r * v * 4 + small,
+        "seed_fused": r * v * 4 * 3 + small,
+        "unfused": r * v * 4 * 5 + small,
+    }
+
+
+def model_fused_hbm_bytes(r: int, v: int, k: int, *,
+                          vocab_tiles: int = 1) -> Dict[str, float]:
+    """HBM traffic model for a K-step fused refine block vs K independent
+    streamed ws_step dispatches (frozen logits, f32).
+
+    unfused_streamed: each of the K steps pays a backbone logits write
+      plus a full streamed-kernel read of the same (R, V) tensor —
+      2*R*V*4 per step — plus the O(R) x/a/out vectors.
+    fused: ONE logits write feeds all K sub-steps of the megakernel.
+      With a single vocab tile the block stays resident in VMEM across
+      the K grid steps (Pallas does not refetch an unchanged block
+      index), so the read is paid once; with multiple tiles each step
+      re-streams the vocab (K reads). Token state and accumulators live
+      in VMEM scratch either way — the intermediate (R,) tokens and
+      (R, V) probabilities never round-trip HBM.
+    """
+    if k < 1:
+        raise ValueError(f"k must be >= 1, got {k}")
+    if vocab_tiles < 1:
+        raise ValueError(f"vocab_tiles must be >= 1, got {vocab_tiles}")
+    rv = r * v * 4
+    unfused = k * (2 * rv) + k * r * 12
+    reads = rv if vocab_tiles == 1 else k * rv
+    fused = rv + reads + r * 12 + k * r * 12  # x/out once, a+seeds per step
+    return {
+        "unfused_streamed": unfused,
+        "fused": fused,
+        "reduction_pct": 100.0 * (1.0 - fused / unfused),
+    }
+
+
 def save_artifact(path: str, payload: dict):
     import os
     os.makedirs(os.path.dirname(path), exist_ok=True)

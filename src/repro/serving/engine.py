@@ -173,6 +173,9 @@ class WarmStartServer:
     cold_nfe: int
     temperature: float = 1.0
     step_fn: Optional[Callable] = None
+    # K > 1: refine in fused K-step blocks — one backbone eval + one
+    # ws_fused megakernel dispatch per block (opt-in; see core/sampler.py)
+    fused_block: int = 1
     cost_model: Optional[PerNFECostModel] = None
 
     def __post_init__(self):
@@ -182,10 +185,18 @@ class WarmStartServer:
         one_step = make_euler_one_step(
             self.path, temperature=self.temperature, step_fn=self.step_fn,
         )
+        fused_fn = None
+        if self.fused_block > 1:
+            from repro.kernels import make_ws_fused_fn
+            fused_fn = make_ws_fused_fn(self.path,
+                                        temperature=self.temperature)
+        fused_block = self.fused_block
 
         def loop(params, keys, x, ts, hs):
             logits_fn = lambda xt, tb: self.flow_model.dfm_apply(params, xt, tb)
-            return scan_refine_loop(logits_fn, one_step, x, keys, ts, hs)
+            return scan_refine_loop(logits_fn, one_step, x, keys, ts, hs,
+                                    fused_block=fused_block,
+                                    fused_fn=fused_fn)
 
         donate = () if jax.default_backend() == "cpu" else (2,)
         self._refine_loop = jax.jit(loop, donate_argnums=donate)
@@ -205,16 +216,22 @@ class WarmStartServer:
         x = self._refine_loop(self.flow_params, keys, x, ts, hs)
         x = jax.block_until_ready(x)
         t_flow = time.perf_counter() - t_flow0
+        # every one of the guaranteed sampling steps executes — fused
+        # blocks only batch them into fewer backbone evaluations
         nfe = n_steps
+        backbone_evals = (n_steps if self.fused_block <= 1
+                          else -(-n_steps // self.fused_block))
 
         guarantees.require_guarantee(self.cold_nfe, t0, nfe)
-        per_nfe = t_flow / max(nfe, 1)
+        per_nfe = t_flow / max(backbone_evals, 1)
         shape = (x.shape[-1], num, nfe)
-        self.cost_model.observe(shape, t_flow, nfe,
+        self.cost_model.observe(shape, t_flow, backbone_evals,
                                 compiled=shape not in self._served_shapes)
         self._served_shapes.add(shape)
         report = {
             "nfe": nfe,
+            "backbone_evals": backbone_evals,
+            "fused_block": self.fused_block,
             "cold_nfe": self.cold_nfe,
             "draft_time_s": t_draft,
             "flow_time_s": t_flow,

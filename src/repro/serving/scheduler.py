@@ -220,6 +220,7 @@ class WarmStartScheduler:
         cold_nfe: int,
         default_t0: float,
         temperature: float = 1.0,
+        fused_block: int = 1,
         max_rows: int = 32,
         min_bucket: int = 8,
         max_bucket: Optional[int] = None,
@@ -231,11 +232,14 @@ class WarmStartScheduler:
     ):
         if cold_nfe < 1:
             raise ValueError(f"cold_nfe must be >= 1, got {cold_nfe}")
+        if fused_block < 1:
+            raise ValueError(f"fused_block must be >= 1, got {fused_block}")
         self.flow_model = flow_model
         self.draft_fn = draft_fn
         self.cold_nfe = cold_nfe
         self.default_t0 = default_t0
         self.temperature = temperature
+        self.fused_block = fused_block
         self.max_rows = max_rows
         self.min_bucket = min_bucket
         self.max_bucket = max_bucket
@@ -253,6 +257,12 @@ class WarmStartScheduler:
         self._compiled: set = set()     # compile_key accounting
         self._cache_hits = 0
         self._cache_misses = 0
+        # per-compile-key hit/miss counters + fused-dispatch accounting
+        # (exported into run/stream reports for the bench streaming view)
+        self._key_hits: Dict[Any, int] = {}
+        self._key_misses: Dict[Any, int] = {}
+        self._fused_blocks_dispatched = 0
+        self._fused_steps_fused = 0
         # measured latency oracle for the SLO admission loop: per-NFE
         # refine cost EWMA per compile key (+ global fallback), fed by
         # every _stage_refine dispatch; draft-stage cost EWMA beside it
@@ -266,6 +276,11 @@ class WarmStartScheduler:
         # per-row (ts, hs, active, key_idx) schedule, a dynamic input).
         one_step = make_euler_one_step_rows(
             WarmStartPath(t0=0.0), temperature=temperature)
+        fused_fn = None
+        if fused_block > 1:
+            from repro.kernels import make_ws_fused_fn
+            fused_fn = make_ws_fused_fn(WarmStartPath(t0=0.0),
+                                        temperature=temperature)
 
         def refine(params, flow_keys, x, ts, hs, active, key_idx):
             # masked per-row loop: rows enter the shared scan at their own
@@ -273,7 +288,8 @@ class WarmStartScheduler:
             # the plain scan_refine_loop schedule.
             logits_fn = lambda xt, tb: self.flow_model.dfm_apply(params, xt, tb)
             return scan_refine_loop_rows(
-                logits_fn, one_step, x, flow_keys, ts, hs, active, key_idx)
+                logits_fn, one_step, x, flow_keys, ts, hs, active, key_idx,
+                fused_block=fused_block, fused_fn=fused_fn)
 
         # donate the draft token buffer into the refine loop off-CPU, as
         # the one-shot engine does — it is dead after the dispatch
@@ -393,13 +409,19 @@ class WarmStartScheduler:
         key = mb.compile_key
         if key in self._compiled:
             self._cache_hits += 1
+            self._key_hits[key] = self._key_hits.get(key, 0) + 1
             was_miss = False
         else:
             self._compiled.add(key)
             self._cache_misses += 1
+            self._key_misses[key] = self._key_misses.get(key, 0) + 1
             was_miss = True
         ts, hs, active, key_idx, nfe_rows = refine_schedule_rows(
             mb.row_t0s, 1.0 / self.cold_nfe, self.cold_nfe)
+        if self.fused_block > 1:
+            k = min(self.fused_block, len(ts))
+            self._fused_blocks_dispatched += -(-len(ts) // k)
+            self._fused_steps_fused += len(ts)
         x = self._refine_loop(
             self.flow_params, flow_keys, x, jnp.asarray(ts), jnp.asarray(hs),
             jnp.asarray(active), jnp.asarray(key_idx))
@@ -422,6 +444,37 @@ class WarmStartScheduler:
         t_flow = time.perf_counter() - t0
         self.cost_model.observe(key, t_flow, len(ts), compiled=was_miss)
         return x, t_flow
+
+    # ---- jit-cache / fused-dispatch reporting ----------------------------
+
+    def _jit_cache_snapshot(self):
+        """Counter snapshot so each run/stream reports its OWN deltas
+        (lifetime totals stay on the instance)."""
+        return (self._cache_hits, self._cache_misses,
+                dict(self._key_hits), dict(self._key_misses),
+                self._fused_blocks_dispatched, self._fused_steps_fused)
+
+    def _jit_cache_delta(self, snap) -> dict:
+        """The report's ``jit_cache`` section: aggregate + per-compile-key
+        hit/miss counts and fused-block dispatch totals since ``snap``."""
+        hits0, misses0, kh0, km0, fb0, fs0 = snap
+        per_key = {}
+        for k in sorted(set(self._key_hits) | set(self._key_misses),
+                        key=str):
+            h = self._key_hits.get(k, 0) - kh0.get(k, 0)
+            m = self._key_misses.get(k, 0) - km0.get(k, 0)
+            if h or m:
+                per_key[str(k)] = {"hits": h, "misses": m}
+        return {
+            "hits": self._cache_hits - hits0,
+            "misses": self._cache_misses - misses0,
+            "per_key": per_key,
+            "fused": {
+                "fused_block": self.fused_block,
+                "blocks_dispatched": self._fused_blocks_dispatched - fb0,
+                "steps_fused": self._fused_steps_fused - fs0,
+            },
+        }
 
     # ---- the pipeline ----------------------------------------------------
 
@@ -526,7 +579,7 @@ class WarmStartScheduler:
 
         results: Dict[int, RequestResult] = {}
         batch_reports: List[dict] = []
-        hits0, misses0 = self._cache_hits, self._cache_misses
+        cache_snap = self._jit_cache_snapshot()
         # pre-pass drafting+scoring counts as draft-stage time; it is
         # serial (never hidden behind a refine), which the overlap
         # arithmetic below reflects automatically since it sits in both
@@ -598,8 +651,7 @@ class WarmStartScheduler:
             "mean_request_nfe": (float(np.mean(nfe_values))
                                  if nfe_values else 0.0),
             # this run's counts; lifetime totals live on the instance
-            "jit_cache": {"hits": self._cache_hits - hits0,
-                          "misses": self._cache_misses - misses0},
+            "jit_cache": self._jit_cache_delta(cache_snap),
             "mesh": None if self.mesh is None else dict(self.mesh.shape),
             "adaptive_t0": self.t0_policy is not None,
             "policy": policy_report,
@@ -768,7 +820,7 @@ class WarmStartScheduler:
         draft_total = flow_total = 0.0
         t_first: Optional[float] = None
         first_arrival_s: Optional[float] = None
-        hits0, misses0 = self._cache_hits, self._cache_misses
+        cache_snap = self._jit_cache_snapshot()
         wall0 = clock.time()
         mb_index = itertools.count()
 
@@ -957,8 +1009,7 @@ class WarmStartScheduler:
             "wall_time_s": wall,
             "draft_time_s": draft_total,
             "flow_time_s": flow_total,
-            "jit_cache": {"hits": self._cache_hits - hits0,
-                          "misses": self._cache_misses - misses0},
+            "jit_cache": self._jit_cache_delta(cache_snap),
             "adaptive_t0": self.t0_policy is not None,
             "policy": (None if self.t0_policy is None else
                        {"scored_requests": stats["scored_requests"],

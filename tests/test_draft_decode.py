@@ -1,0 +1,127 @@
+"""Draft decode-step kernel tests: the fixed-reduction-order Pallas
+forward makes a multi-token batched chunk BIT-identical to composing
+one-token decode steps (the property the AR engine's batched prefill
+default rests on), stays float-close to the XLA model forward, and the
+supported-config gate + adapter ``decode_impl`` plumbing behave."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.dfm_dit import tiny_config
+from repro.drafting import TransformerDraftAdapter
+from repro.kernels import DraftDecoder, draft_decode_supported
+from repro.models import build_model
+
+VOCAB = 13
+
+
+@pytest.fixture(scope="module")
+def tiny():
+    cfg = tiny_config(vocab_size=VOCAB, seq_len=64).replace(
+        num_layers=2, d_model=32, num_heads=2, num_kv_heads=2, d_ff=64)
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+    return model, params
+
+
+def test_batched_chunk_is_bit_identical_to_token_scan(tiny):
+    """forward_chunk(B, S) == S composed forward_chunk(B, 1) calls —
+    logits AND every cache leaf, bitwise. This is the decode kernel's
+    whole reason to exist: one reduction order regardless of chunking."""
+    model, params = tiny
+    dec = DraftDecoder(model)
+    b, s, t = 3, 8, 24
+    toks = jax.random.randint(jax.random.key(1), (b, s), 0, VOCAB,
+                              dtype=jnp.int32)
+
+    cache_b = model.init_cache(b, t, jnp.float32)
+    logits_b, cache_b = dec.forward_chunk(params, toks, cache_b, 0)
+
+    cache_s = model.init_cache(b, t, jnp.float32)
+    per_tok = []
+    for i in range(s):
+        lg, cache_s = dec.forward_chunk(params, toks[:, i:i + 1], cache_s, i)
+        per_tok.append(lg)
+    logits_s = jnp.concatenate(per_tok, axis=1)
+
+    np.testing.assert_array_equal(np.asarray(logits_b), np.asarray(logits_s))
+    for leaf_b, leaf_s in zip(jax.tree.leaves(cache_b),
+                              jax.tree.leaves(cache_s)):
+        np.testing.assert_array_equal(np.asarray(leaf_b), np.asarray(leaf_s))
+
+
+def test_chunking_split_points_do_not_matter(tiny):
+    """Any partition of the token stream into chunks gives the same
+    bits — 8 = 3 + 1 + 4 here."""
+    model, params = tiny
+    dec = DraftDecoder(model)
+    b, t = 2, 24
+    toks = jax.random.randint(jax.random.key(2), (b, 8), 0, VOCAB,
+                              dtype=jnp.int32)
+    cache = model.init_cache(b, t, jnp.float32)
+    ref, _ = dec.forward_chunk(params, toks, cache, 0)
+
+    cache = model.init_cache(b, t, jnp.float32)
+    parts, pos = [], 0
+    for w in (3, 1, 4):
+        lg, cache = dec.forward_chunk(params, toks[:, pos:pos + w], cache, pos)
+        parts.append(lg)
+        pos += w
+    np.testing.assert_array_equal(np.asarray(ref),
+                                  np.asarray(jnp.concatenate(parts, axis=1)))
+
+
+def test_kernel_forward_close_to_xla_decode(tiny):
+    """Correctness, not just self-consistency: the kernel forward tracks
+    the model's own XLA decode path to float tolerance."""
+    model, params = tiny
+    dec = DraftDecoder(model)
+    b, t = 2, 16
+    toks = jax.random.randint(jax.random.key(3), (b, 6), 0, VOCAB,
+                              dtype=jnp.int32)
+    cache_k = model.init_cache(b, t, jnp.float32)
+    cache_x = model.init_cache(b, t, jnp.float32)
+    got, ref = [], []
+    for i in range(6):
+        lg_k, cache_k = dec.forward_chunk(params, toks[:, i:i + 1], cache_k, i)
+        lg_x, cache_x = model.decode_step(params, toks[:, i:i + 1], cache_x, i)
+        got.append(np.asarray(lg_k))
+        ref.append(np.asarray(lg_x))
+    np.testing.assert_allclose(np.concatenate(got, axis=1),
+                               np.concatenate(ref, axis=1),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_supported_gate(tiny):
+    model, _ = tiny
+    cfg = model.cfg
+    assert draft_decode_supported(cfg)
+    assert not draft_decode_supported(cfg.replace(qk_norm=True))
+    assert not draft_decode_supported(cfg.replace(dtype="bfloat16"))
+    assert not draft_decode_supported(cfg.replace(attn_logit_softcap=50.0))
+    assert not draft_decode_supported(None)
+
+
+def test_adapter_decode_impl_plumbing(tiny):
+    model, _ = tiny
+    assert TransformerDraftAdapter(model=model).exact_batched_prefill
+    assert TransformerDraftAdapter(
+        model=model, decode_impl="kernel").exact_batched_prefill
+    assert not TransformerDraftAdapter(
+        model=model, decode_impl="xla").exact_batched_prefill
+    with pytest.raises(ValueError, match="decode_impl"):
+        _ = TransformerDraftAdapter(model=model,
+                                    decode_impl="nope").exact_batched_prefill
+
+
+def test_adapter_kernel_impl_raises_on_unsupported_cfg(tiny):
+    model, _ = tiny
+    bad = build_model(model.cfg.replace(qk_norm=True))
+    adapter = TransformerDraftAdapter(model=bad, decode_impl="kernel")
+    with pytest.raises(ValueError):
+        _ = adapter.exact_batched_prefill
+    # auto just falls back to the XLA path
+    auto = TransformerDraftAdapter(model=bad)
+    assert not auto.exact_batched_prefill

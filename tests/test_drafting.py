@@ -125,21 +125,45 @@ def test_generate_rows_is_pack_invariant(tfm):
     np.testing.assert_array_equal(full[1:4], sub)
 
 
-def test_batched_prefill_mode_close_to_scan(tfm):
-    """prefill_mode='batched' trades bit-exactness for a single
-    multi-token prefill; the two modes must agree to float tolerance at
-    the logits level — here checked via distribution of sampled tokens
-    staying identical for this seed."""
+def test_batched_prefill_is_bit_identical_to_scan(tfm):
+    """With the fixed-reduction-order decode kernel, the single
+    multi-token batched prefill is BIT-identical to the one-token-at-a-
+    time scan prefill — and it is the engine default for exact adapters."""
     adapter, params = tfm
+    assert adapter.exact_batched_prefill
     keys = keys_for(2)
     prompt = jax.random.randint(jax.random.key(11), (2, 5), 0, VOCAB,
                                 dtype=jnp.int32)
-    a = ARDraftEngine(adapter, params, max_len=24).generate_rows(
+    a = ARDraftEngine(adapter, params, max_len=24,
+                      prefill_mode="scan").generate_rows(
         keys, 6, prompt=prompt)
     b = ARDraftEngine(adapter, params, max_len=24,
                       prefill_mode="batched").generate_rows(
         keys, 6, prompt=prompt)
-    assert np.asarray(a).shape == np.asarray(b).shape == (2, 6)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    # default mode auto-picks batched for this adapter, same tokens
+    c = ARDraftEngine(adapter, params, max_len=24).generate_rows(
+        keys, 6, prompt=prompt)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(c))
+
+
+def test_legacy_xla_decode_path_keeps_scan_default(tfm):
+    """decode_impl='xla' opts out of the kernel path: batched prefill is
+    only float-close there, so the engine default must fall back to
+    scan prefill."""
+    adapter, params = tfm
+    xla_adapter = TransformerDraftAdapter(model=adapter.model,
+                                          decode_impl="xla")
+    assert not xla_adapter.exact_batched_prefill
+    keys = keys_for(2)
+    prompt = jax.random.randint(jax.random.key(11), (2, 5), 0, VOCAB,
+                                dtype=jnp.int32)
+    out = ARDraftEngine(xla_adapter, params, max_len=24).generate_rows(
+        keys, 6, prompt=prompt)
+    ref = ARDraftEngine(adapter, params, max_len=24,
+                        prefill_mode="scan").generate_rows(
+        keys, 6, prompt=prompt)
+    assert np.asarray(out).shape == np.asarray(ref).shape == (2, 6)
 
 
 def test_engine_validates_capacity_and_shapes(tfm):

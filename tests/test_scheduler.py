@@ -171,5 +171,14 @@ def test_jit_cache_counts_are_per_run():
     _, rep1 = sched.run()
     sched.submit(seq_len=12, seed=2)
     _, rep2 = sched.run()
-    assert rep1["jit_cache"] == {"hits": 0, "misses": 1}
-    assert rep2["jit_cache"] == {"hits": 1, "misses": 0}
+    assert (rep1["jit_cache"]["hits"], rep1["jit_cache"]["misses"]) == (0, 1)
+    assert (rep2["jit_cache"]["hits"], rep2["jit_cache"]["misses"]) == (1, 0)
+    # per-compile-key breakdown: the run's one key flips miss -> hit
+    (key1, pk1), = rep1["jit_cache"]["per_key"].items()
+    (key2, pk2), = rep2["jit_cache"]["per_key"].items()
+    assert key1 == key2
+    assert pk1 == {"hits": 0, "misses": 1}
+    assert pk2 == {"hits": 1, "misses": 0}
+    # unfused scheduler dispatches no fused blocks
+    assert rep1["jit_cache"]["fused"] == {
+        "fused_block": 1, "blocks_dispatched": 0, "steps_fused": 0}

@@ -1,0 +1,273 @@
+"""Fused K-step refine megakernel tests: bit-exactness against the
+composed single-step ws_step oracle (odd vocabs, explicit tilings,
+partial-K tails), per-row key mode + pack invariance, the VMEM-budget
+tile picker with K-step scratch accounting, the composed auto-fallback,
+and the fused-block wiring through ``scan_refine_loop``."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.paths import WarmStartPath
+from repro.core.sampler import (
+    make_euler_one_step, refine_loop_inputs, scan_refine_loop,
+)
+from repro.kernels.ws_fused import (
+    fused_row_bytes, make_ws_fused_fn, pick_tiles_fused, ws_fused_steps,
+)
+from repro.kernels.ws_fused.ops import (
+    FUSED_MISC_BYTES_PER_ROW, FUSED_STATE_BYTES_PER_ROW,
+    FUSED_STEP_BYTES_PER_ROW,
+)
+from repro.kernels.ws_step import pick_tiles, ws_step
+
+PATH = WarmStartPath(t0=0.8)
+
+
+def make_inputs(b, n, v, k, seed=0):
+    logits = jax.random.normal(jax.random.key(seed), (b, n, v))
+    x = jax.random.randint(jax.random.key(seed + 1), (b, n), 0, v)
+    h = 1.0 / 16
+    ts = jnp.asarray([0.8 + i * h for i in range(k)], jnp.float32)
+    hs = jnp.full((k,), h, jnp.float32)
+    keys = jax.random.split(jax.random.key(seed + 2), k)
+    return logits, x, ts, hs, keys
+
+
+def compose_ws_step(keys, logits, x, ts, hs):
+    """The oracle: K independent single-step streamed kernels, each
+    feeding its tokens into the next, all on the same frozen logits."""
+    for j in range(len(ts)):
+        x = ws_step(keys[j], logits, x, ts[j], hs[j], PATH, hw_prng=False)
+    return x
+
+
+# ---------------------------------------------------------------------------
+# bit-exactness vs the composed single-step oracle
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("v", [13, 27, 64])
+@pytest.mark.parametrize("k", [1, 2, 3, 5])
+def test_fused_matches_composed_ws_step_oracle(v, k):
+    logits, x, ts, hs, keys = make_inputs(2, 8, v, k, seed=v + k)
+    ref = compose_ws_step(keys, logits, x, ts, hs)
+    out = ws_fused_steps(keys, logits, x, ts, hs, PATH,
+                         impl="fused", hw_prng=False)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+
+
+def test_fused_is_tiling_invariant():
+    """Explicit (row_block, vocab_tile) overrides must not change a
+    single bit — noise counters are absolute (row, col), not tile-local."""
+    logits, x, ts, hs, keys = make_inputs(3, 8, 27, 4, seed=7)
+    ref = ws_fused_steps(keys, logits, x, ts, hs, PATH,
+                         impl="fused", hw_prng=False)
+    for rb, bv in [(1, 128), (2, 128), (8, 128)]:
+        out = ws_fused_steps(keys, logits, x, ts, hs, PATH, impl="fused",
+                             hw_prng=False, row_block=rb, vocab_tile=bv)
+        np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+
+
+def test_composed_impl_matches_fused():
+    logits, x, ts, hs, keys = make_inputs(2, 8, 29, 3, seed=3)
+    fused = ws_fused_steps(keys, logits, x, ts, hs, PATH,
+                           impl="fused", hw_prng=False)
+    composed = ws_fused_steps(keys, logits, x, ts, hs, PATH,
+                              impl="composed", hw_prng=False)
+    np.testing.assert_array_equal(np.asarray(fused), np.asarray(composed))
+
+
+def test_auto_impl_falls_back_to_composed_on_tiny_vmem_budget():
+    """When even one resident row would overflow the budget, auto must
+    dispatch the composed path — and stay bit-exact with the fused one."""
+    logits, x, ts, hs, keys = make_inputs(2, 4, 27, 4, seed=9)
+    ref = ws_fused_steps(keys, logits, x, ts, hs, PATH,
+                         impl="fused", hw_prng=False)
+    # budget below one row's resident bytes => impl=None resolves "composed"
+    tiny = fused_row_bytes(128, 4) - 1
+    out = ws_fused_steps(keys, logits, x, ts, hs, PATH, impl=None,
+                         hw_prng=False, vocab_tile=128, vmem_budget=tiny)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+
+
+def test_zero_h_freezes_rows_bit_exactly():
+    """hs=0 => a=0 => the step is an exact no-op for every row; this is
+    what partial-K tails and per-row entry masks are built on."""
+    logits, x, ts, hs, keys = make_inputs(2, 8, 27, 4, seed=5)
+    hs_frozen = hs.at[2].set(0.0)
+    out = ws_fused_steps(keys, logits, x, ts, hs_frozen, PATH,
+                         impl="fused", hw_prng=False)
+    # composing only the live steps gives the identical result
+    live = [0, 1, 3]
+    ref = compose_ws_step([keys[j] for j in live], logits, x,
+                          ts[jnp.asarray(live)], hs[jnp.asarray(live)])
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+
+
+def test_k_zero_is_identity():
+    logits, x, _, _, _ = make_inputs(2, 4, 27, 1)
+    out = ws_fused_steps(jax.random.split(jax.random.key(0), 1)[:0],
+                         logits, x, jnp.zeros((0,)), jnp.zeros((0,)), PATH)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(x))
+
+
+# ---------------------------------------------------------------------------
+# per-row key mode (scheduler regime)
+# ---------------------------------------------------------------------------
+
+def test_rows_mode_matches_per_request_composition():
+    """(K, B) keys: each batch row must equal the composition of
+    single-request ws_step calls under its own key sequence."""
+    b, n, v, k = 4, 6, 29, 3
+    logits, x, ts, hs, _ = make_inputs(b, n, v, k, seed=11)
+    row_keys = jax.vmap(jax.random.split, in_axes=(0, None))(
+        jax.random.split(jax.random.key(42), b), k)      # (B, K)
+    keys_kb = jnp.swapaxes(row_keys, 0, 1)               # (K, B)
+    out = ws_fused_steps(keys_kb, logits, x, ts, hs, PATH, hw_prng=False)
+    for i in range(b):
+        ref_i = compose_ws_step(row_keys[i], logits[i:i + 1], x[i:i + 1],
+                                ts, hs)
+        np.testing.assert_array_equal(np.asarray(out)[i],
+                                      np.asarray(ref_i)[0])
+
+
+def test_rows_mode_is_pack_invariant():
+    b, n, v, k = 4, 6, 29, 3
+    logits, x, ts, hs, _ = make_inputs(b, n, v, k, seed=13)
+    keys_kb = jnp.swapaxes(jax.vmap(jax.random.split, in_axes=(0, None))(
+        jax.random.split(jax.random.key(42), b), k), 0, 1)
+    out = ws_fused_steps(keys_kb, logits, x, ts, hs, PATH, hw_prng=False)
+    perm = jnp.asarray([2, 0, 3, 1])
+    out_p = ws_fused_steps(keys_kb[:, perm], logits[perm], x[perm],
+                           ts, hs, PATH, hw_prng=False)
+    np.testing.assert_array_equal(np.asarray(out)[np.asarray(perm)],
+                                  np.asarray(out_p))
+
+
+# ---------------------------------------------------------------------------
+# tile picker: VMEM budget with K-step scratch accounting
+# ---------------------------------------------------------------------------
+
+def test_fused_row_bytes_model():
+    assert fused_row_bytes(128, 1) == (16 * 128 + FUSED_STATE_BYTES_PER_ROW
+                                       + FUSED_MISC_BYTES_PER_ROW
+                                       + FUSED_STEP_BYTES_PER_ROW)
+    assert (fused_row_bytes(128, 5) - fused_row_bytes(128, 1)
+            == 4 * FUSED_STEP_BYTES_PER_ROW)
+
+
+def test_pick_tiles_fused_budget_boundary_forces_row_block_1():
+    """A budget that fits exactly one resident row must give
+    row_block=1, not 0 and not 2."""
+    need = fused_row_bytes(128, 4)
+    assert pick_tiles_fused(256, 128, 4, vmem_budget=need) == (1, 128)
+    assert pick_tiles_fused(256, 128, 4, vmem_budget=2 * need) == (2, 128)
+    # even a sub-row budget still returns a servable (1, tile)
+    assert pick_tiles_fused(256, 128, 4, vmem_budget=1)[0] == 1
+
+
+def test_pick_tiles_fused_vocab_smaller_than_one_tile():
+    """V=27 pads to a single 128-lane tile; tiny row counts clamp the
+    row block to the padded row count's power of two."""
+    rb, bv = pick_tiles_fused(3, 128, 4)
+    assert bv == 128
+    assert rb == 4          # next pow2 of r=3, not the full 256 cap
+    assert pick_tiles_fused(1, 128, 4)[0] == 1
+
+
+def test_pick_tiles_fused_k_scratch_shrinks_row_block():
+    """Deeper fusion taxes the per-row budget: with a budget sized to
+    four K=1 rows, K large enough must drop the row block — and the
+    picker must be monotone non-increasing in K."""
+    budget = 4 * fused_row_bytes(128, 1)
+    rb1 = pick_tiles_fused(256, 128, 1, vmem_budget=budget)[0]
+    rb_deep = pick_tiles_fused(256, 128, 200, vmem_budget=budget)[0]
+    assert rb1 == 4 and rb_deep == 1
+    prev = rb1
+    for k in [2, 8, 32, 200]:
+        cur = pick_tiles_fused(256, 128, k, vmem_budget=budget)[0]
+        assert cur <= prev
+        prev = cur
+
+
+def test_pick_tiles_fused_vocab_tile_matches_ws_step():
+    for vp in [128, 2048, 4096, 262144]:
+        assert (pick_tiles_fused(64, vp, 4)[1]
+                == pick_tiles(64, vp)[1])
+
+
+# ---------------------------------------------------------------------------
+# scan_refine_loop fused-block wiring (partial final block included)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("argmax_final", [False, True])
+@pytest.mark.parametrize("fused_block", [1, 2, 3, 5])
+def test_scan_refine_loop_fused_blocks_match_composed(fused_block,
+                                                      argmax_final):
+    """The loop's chunked fused path must be bit-identical whether the
+    megakernel or its composed oracle executes each block — including
+    nfe=5 tails that don't divide fused_block."""
+    b, n, v = 2, 6, 27
+    x0 = jax.random.randint(jax.random.key(0), (b, n), 0, v)
+    table = jax.random.normal(jax.random.key(1), (v, v))
+    logits_fn = lambda xt, tb: table[xt] * (1.0 + tb)[:, None, None]
+    keys, ts, hs = refine_loop_inputs(jax.random.key(2), 0.8, 1.0 / 25, 5)
+    one_step = make_euler_one_step(PATH)
+
+    outs = []
+    for impl in ("fused", "composed"):
+        fused_fn = make_ws_fused_fn(PATH, impl=impl, hw_prng=False)
+        out = scan_refine_loop(logits_fn, one_step, x0, keys, ts, hs,
+                               argmax_final=argmax_final,
+                               fused_block=fused_block, fused_fn=fused_fn)
+        outs.append(np.asarray(out))
+    np.testing.assert_array_equal(outs[0], outs[1])
+
+
+def test_warm_start_server_fused_block_keeps_guarantee():
+    """Regression: fused blocks lower backbone evals, NOT the guaranteed
+    sampling-step count — serve() must gate on steps and report both."""
+    from repro.serving.engine import WarmStartServer
+
+    class ToyFlow:
+        def dfm_apply(self, params, x, t, extras=None):
+            return jnp.zeros(x.shape + (11,)).at[..., 3].set(25.0)
+
+    draft = lambda rng, num: jax.random.randint(rng, (num, 12), 0, 11)
+    for fb, evals in [(1, 4), (2, 2), (4, 1), (64, 1)]:
+        srv = WarmStartServer(
+            flow_model=ToyFlow(), flow_cfg=None, flow_params={},
+            draft_generate=draft, path=PATH, cold_nfe=16, fused_block=fb)
+        x, rep = srv.serve(jax.random.key(0), 2)
+        assert rep["nfe"] == 4 and rep["backbone_evals"] == evals
+        assert bool((x == 3).all())
+
+
+# ---------------------------------------------------------------------------
+# error paths
+# ---------------------------------------------------------------------------
+
+def test_hw_prng_rejected_in_rows_mode():
+    logits, x, ts, hs, _ = make_inputs(2, 4, 27, 2)
+    keys_kb = jnp.swapaxes(jax.vmap(jax.random.split, in_axes=(0, None))(
+        jax.random.split(jax.random.key(0), 2), 2), 0, 1)
+    with pytest.raises(ValueError, match="hw_prng"):
+        ws_fused_steps(keys_kb, logits, x, ts, hs, PATH, hw_prng=True)
+
+
+def test_shape_and_impl_validation():
+    logits, x, ts, hs, keys = make_inputs(2, 4, 27, 2)
+    with pytest.raises(ValueError, match="ts/hs"):
+        ws_fused_steps(keys, logits, x, ts, hs[:1], PATH)
+    with pytest.raises(ValueError, match="impl"):
+        ws_fused_steps(keys, logits, x, ts, hs, PATH, impl="nope")
+    with pytest.raises(ValueError, match="vocab_tile"):
+        ws_fused_steps(keys, logits, x, ts, hs, PATH, vocab_tile=96)
+    rows_keys = jnp.swapaxes(jax.vmap(jax.random.split, in_axes=(0, None))(
+        jax.random.split(jax.random.key(0), 3), 2), 0, 1)   # (K, 3) != B
+    with pytest.raises(ValueError, match="per-row keys"):
+        ws_fused_steps(rows_keys, logits, x, ts, hs, PATH)
+    with pytest.raises(ValueError, match="require"):
+        ws_fused_steps(rows_keys[:, :2], logits.reshape(8, 27),
+                       x.reshape(8), ts, hs, PATH)
