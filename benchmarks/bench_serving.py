@@ -22,9 +22,19 @@ admission loop) and measures what batch serving cannot: per-request
 time-to-result percentiles (p50/p95/p99), SLO attainment at the
 benchmarked arrival rate, and time-to-first-result against the
 end-of-run baseline (where every result lands only when the whole run
-finishes). Writes ``BENCH_serving.json`` (per-stage latency, overlap
-efficiency, jit-cache hit counts, requests/s for both engines, the
-speedup, and the streaming latency columns).
+finishes).
+
+The OVERLOAD section then offers ~2x the measured capacity through a
+bounded admission queue with mixed priority classes, mid-stream
+cancellations, per-request timeouts and injected transient dispatch
+faults, and gates graceful degradation: premium SLO attainment >= 95%
+while the cheap tier is shed, best_effort p99 bounded, and the terminal
+accounting exactly conserved (offered == rejected + completed + shed +
+cancelled + timed_out + failed).
+
+Writes ``BENCH_serving.json`` (per-stage latency, overlap efficiency,
+jit-cache hit counts, requests/s for both engines, the speedup, the
+streaming latency columns, and the overload section).
 
 Run:  PYTHONPATH=src python benchmarks/bench_serving.py [--smoke] [--out F]
 """
@@ -42,8 +52,8 @@ import numpy as np
 from repro.configs.dfm_dit import tiny_config
 from repro.models import build_model
 from repro.serving import (
-    AdmissionQueue, ServeRequest, WarmStartScheduler, WarmStartServer,
-    uniform_draft,
+    AdmissionQueue, QueueFull, ServeRequest, WarmStartScheduler,
+    WarmStartServer, uniform_draft,
 )
 
 VOCAB = 27
@@ -157,6 +167,105 @@ def run_streaming(sched, streams, *, slo_ms, rate_rps, seed=0):
     }
 
 
+def run_overload(sched, *, n_offered, rate_rps, slo_ms, max_bucket,
+                 queue_depth=6, fault_every=5, seed=0):
+    """Overload section: Poisson arrivals at ~2x measured capacity, mixed
+    priority classes, a bounded admission queue, a couple of mid-stream
+    cancellations, per-request timeouts on part of the best_effort
+    traffic, and a transient dispatch fault injected every
+    ``fault_every``-th micro-batch (retried under the backoff policy).
+
+    What graceful degradation means here, and what the smoke gates
+    check: premium SLO attainment stays >= 95% (priority dispatch
+    ordering + shedding protect it), the lowest class absorbs the
+    overload (shed/rejected > 0), best_effort p99 stays bounded instead
+    of growing with the backlog, and the conservation ledger is exact —
+    offered == rejected + completed + shed + cancelled + timed_out +
+    failed, every request resolving to exactly one terminal status.
+    """
+    rng = np.random.default_rng(seed)
+    slo_s = slo_ms / 1e3
+    classes = ("premium", "standard", "best_effort")
+    stream = []
+    for i in range(n_offered):
+        cls = classes[int(rng.choice(3, p=[0.3, 0.3, 0.4]))]
+        stream.append(ServeRequest(
+            request_id=i,
+            seq_len=int(rng.integers(max_bucket // 4, max_bucket + 1)),
+            num_samples=int(rng.integers(1, 3)),
+            seed=5000 + i, priority=cls,
+            # a slice of the cheap tier carries an explicit latency
+            # budget: better a TIMED_OUT terminal than a stale result
+            timeout_s=(4.0 * slo_s if cls == "best_effort" and i % 7 == 0
+                       else None)))
+    queue = AdmissionQueue(max_depth=queue_depth)
+    delays = rng.exponential(1.0 / rate_rps, size=n_offered)
+    cancel_ids = [r.request_id for r in stream
+                  if r.priority == "standard"][:2]
+
+    dispatches = {"n": 0}
+
+    def fault_hook(mb, attempt):
+        if attempt == 0:
+            dispatches["n"] += 1
+            if fault_every and dispatches["n"] % fault_every == 0:
+                raise RuntimeError("injected transient dispatch fault")
+
+    # bursty arrivals: the offered rate is Poisson in aggregate but lands
+    # in bursts (as real front-end traffic does after retries/fan-out);
+    # a burst wider than the queue depth is what actually exercises
+    # bounded admission — a perfectly smooth process at 2x capacity is
+    # drained between dispatches and never fills the queue
+    burst = queue_depth + 3
+
+    def replay():
+        for i0 in range(0, n_offered, burst):
+            time.sleep(float(delays[i0:i0 + burst].sum()))
+            for req in stream[i0:i0 + burst]:
+                try:
+                    queue.push(req)
+                except QueueFull:
+                    pass                # counted in the admission ledger
+                if cancel_ids and req.request_id == cancel_ids[-1]:
+                    for rid in cancel_ids:
+                        queue.cancel(rid)
+        queue.close()
+
+    prev_hook = sched._dispatch_fault_hook
+    sched._dispatch_fault_hook = fault_hook
+    producer = threading.Thread(target=replay)
+    producer.start()
+    try:
+        n_results = sum(1 for _ in sched.serve_stream(
+            source=queue, slo_ms=slo_ms, idle_timeout_s=0.005))
+    finally:
+        sched._dispatch_fault_hook = prev_hook
+        producer.join()
+    rep = sched.stream_report
+    adm = rep["admission"]
+    by_class = rep["by_class"]
+    premium = by_class.get("premium", {})
+    best_effort = by_class.get("best_effort", {})
+    return {
+        "offered": adm["offered"],
+        "queue_depth": queue_depth,
+        "arrival_rate_rps": rate_rps,
+        "slo_ms": slo_ms,
+        "cancel_requests": len(cancel_ids),
+        "results_yielded": n_results,
+        "admission": adm,
+        "terminal": rep["terminal"],
+        "by_class": by_class,
+        "conservation": rep["conservation"],
+        "dispatch": rep["dispatch"],
+        "dropped_micro_batches": rep["dropped_micro_batches"],
+        "premium_slo_attainment": premium.get("slo_attainment"),
+        "best_effort_p99_ms": best_effort.get(
+            "latency_ms", {}).get("p99"),
+        "shed_plus_rejected": adm["shed"] + adm["rejected"],
+    }
+
+
 def run_one_shot_baseline(model, params, draft_fn, warmup, streams, *,
                           cold_nfe):
     """Serve each request alone through the one-shot WarmStartServer at
@@ -244,6 +353,13 @@ def main():
     streaming = run_streaming(sched, streams, slo_ms=slo_ms, rate_rps=rate,
                               seed=99)
 
+    # overload: 3x the per-pass request count offered at ~2x the measured
+    # warm capacity, through a bounded queue with mixed priority classes
+    overload = run_overload(
+        sched, n_offered=3 * n_requests,
+        rate_rps=2.0 * n_requests / warm_wall, slo_ms=slo_ms,
+        max_bucket=max_bucket, queue_depth=6, seed=7)
+
     speedup = sched_rps / base_rps
     # cross-check every served request's NFE against an independent
     # recomputation of the paper guarantee for its effective t0
@@ -276,6 +392,7 @@ def main():
         },
         "speedup_requests_per_s": speedup,
         "streaming": streaming,
+        "overload": overload,
         "guarantees_enforced": nfe_ok,
     }
     with open(args.out, "w") as f:
@@ -309,7 +426,42 @@ def main():
           f"{fused_note}; per key: "
           + ", ".join(f"{k}={v['hits']}h/{v['misses']}m"
                       for k, v in jc["per_key"].items()))
+    term = overload["terminal"]
+    patt = overload["premium_slo_attainment"]
+    print(f"overload  : {overload['offered']} offered @ "
+          f"{overload['arrival_rate_rps']:.0f} req/s (~2x capacity), "
+          f"depth {overload['queue_depth']} -> "
+          f"completed {term['completed']}, shed {term['shed']}, "
+          f"rejected {overload['admission']['rejected']}, "
+          f"cancelled {term['cancelled']}, timed_out {term['timed_out']}, "
+          f"failed {term['failed']}; premium attainment "
+          f"{'n/a' if patt is None else format(patt, '.0%')}, "
+          f"best_effort p99 "
+          f"{overload['best_effort_p99_ms'] or float('nan'):.0f}ms, "
+          f"dispatch retries {overload['dispatch']['retries']}, "
+          f"conservation "
+          f"{'OK' if overload['conservation']['balanced'] else 'BROKEN'}")
     if args.smoke:
+        if not overload["conservation"]["balanced"]:
+            raise SystemExit(
+                f"overload gate failed: conservation ledger does not "
+                f"balance: {overload['conservation']}")
+        if patt is None or patt < 0.95:
+            raise SystemExit(
+                f"overload gate failed: premium SLO attainment "
+                f"{'n/a' if patt is None else format(patt, '.0%')} < 95% "
+                f"at 2x capacity")
+        if overload["shed_plus_rejected"] == 0:
+            raise SystemExit(
+                "overload gate failed: no load was shed or rejected at 2x "
+                "capacity with a depth-6 queue — bounded admission is not "
+                "engaging")
+        be_p99 = overload["best_effort_p99_ms"]
+        if be_p99 is not None and be_p99 > 3.0 * slo_ms:
+            raise SystemExit(
+                f"overload gate failed: best_effort p99 {be_p99:.0f}ms "
+                f"exceeds 3x SLO ({3 * slo_ms:.0f}ms) — degradation is "
+                f"not graceful")
         if speedup < 1.1:
             raise SystemExit(
                 f"smoke threshold failed: scheduler speedup {speedup:.2f}x "

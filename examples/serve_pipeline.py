@@ -2,9 +2,12 @@
 engine (draft -> DFM flow refine) with per-request-batch guarantee
 reports, then the continuous-batching WarmStartScheduler serving a
 mixed-size request stream through bucketed micro-batches with the
-draft/refine stages overlapped, and finally the drafting subsystem —
-KV-cached row-keyed AR drafts + measured cost ratio + per-request
-quality-adaptive t0 (`--draft ar-kv --t0 auto` in the launcher).
+draft/refine stages overlapped, an overload stanza (depth-bounded
+admission queue shedding lowest-priority-first, cancellation, and
+per-request timeouts, with exact terminal-status conservation), and
+finally the drafting subsystem — KV-cached row-keyed AR drafts +
+measured cost ratio + per-request quality-adaptive t0
+(`--draft ar-kv --t0 auto` in the launcher).
 
 Run:  PYTHONPATH=src python examples/serve_pipeline.py
 (or the launcher: PYTHONPATH=src python -m repro.launch.serve)
@@ -122,6 +125,54 @@ def main():
           f"after first admission, p95 latency "
           f"{srep['latency_s']['p95'] * 1e3:.0f}ms, SLO attainment "
           f"{srep['slo_attainment']:.0%}, flushes {srep['flush_reasons']}")
+
+    # --- overload hardening: bounded admission + priorities + timeouts ----
+    # the same stream loop under pressure: a depth-bounded AdmissionQueue
+    # sheds lowest-priority-first when bursts overflow it, a premium
+    # request is never shed before a best_effort one, one request is
+    # cancelled mid-flight and one carries a tight timeout — every
+    # admitted request resolves to exactly ONE terminal status
+    # (completed / shed / cancelled / timed_out / failed) in the report
+    print("\noverload demo (queue depth 4, mixed priorities, cancel+timeout) ...")
+    queue = AdmissionQueue(max_depth=4)
+    classes = ("premium", "standard", "best_effort")
+
+    def overload_replay():
+        from repro.serving import QueueFull
+        cancel_me = None
+        for i in range(16):          # burst: no pacing, overflow the queue
+            try:
+                # cancel/timeout targets are premium so shedding (which
+                # never touches premium first) can't steal the demo
+                rid = queue.submit(
+                    seq_len=int(arr.integers(8, 33)), seed=3000 + i,
+                    priority=classes[i % 3],
+                    timeout_s=0.001 if i == 6 else None)  # 6 -> TIMED_OUT
+                if i == 3:
+                    cancel_me = rid
+            except QueueFull:
+                pass                 # rejected: counted in the ledger
+        if cancel_me is not None:
+            queue.cancel(cancel_me)  # -> CANCELLED, siblings bit-identical
+        queue.close()
+
+    producer = threading.Thread(target=overload_replay)
+    producer.start()
+    for res in sched.serve_stream(source=queue, slo_ms=5000.0,
+                                  idle_timeout_s=0.01):
+        tail = ("" if res.status == "completed"
+                else f" -> {res.status.upper()}")
+        print(f"  [{res.request_id}] {res.priority}{tail}")
+    producer.join()
+    srep = sched.stream_report
+    cons = srep["conservation"]
+    print(f"  admission {srep['admission']}")
+    print(f"  terminal {srep['terminal']} "
+          f"(conservation {'OK' if cons['balanced'] else 'BROKEN'})")
+    for cls, crep in srep["by_class"].items():
+        att = crep["slo_attainment"]
+        print(f"  {cls}: completed={crep['completed']} shed={crep['shed']} "
+              f"attainment={'-' if att is None else format(att, '.0%')}")
 
     # --- drafting subsystem: AR-KV drafts + adaptive t0 -------------------
     print("\ndrafting subsystem (KV-cached AR drafts, quality-adaptive t0) ...")

@@ -22,7 +22,15 @@ Streaming / SLO admission modes (imply --scheduler):
                      when a request's deadline budget (minus the
                      measured per-NFE refine-cost estimate) runs out;
   --arrival-rate R   Poisson open-loop arrival replay at R requests/s
-                     (0 = admit the whole set up front).
+                     (0 = admit the whole set up front);
+  --queue-depth N    bound the admission queue at N requests — overflow
+                     sheds lowest-priority-first or rejects (QueueFull),
+                     every outcome ledgered in the stream report;
+  --timeout-ms MS    per-request latency budget: requests that exceed it
+                     surface as TIMED_OUT (never silently dropped);
+  --priority CLASS   priority class (premium | standard | best_effort)
+                     for the streamed requests — shedding never touches
+                     a higher class before a lower one.
 """
 
 from __future__ import annotations
@@ -74,6 +82,21 @@ def main():
     ap.add_argument("--arrival-rate", type=float, default=0.0,
                     help="Poisson arrival replay rate in requests/s for "
                          "--stream (0 = admit everything up front)")
+    ap.add_argument("--queue-depth", type=int, default=0,
+                    help="bound the streaming admission queue at this many "
+                         "requests: overflow sheds the lowest priority "
+                         "class (or rejects) instead of queueing unboundedly "
+                         "(0 = unbounded)")
+    ap.add_argument("--timeout-ms", type=float, default=0.0,
+                    help="per-request latency budget in ms for --stream: an "
+                         "expired request resolves TIMED_OUT instead of "
+                         "being served late (0 = no timeout)")
+    ap.add_argument("--priority", choices=("premium", "standard",
+                                           "best_effort"),
+                    default="standard",
+                    help="priority class for the streamed requests: premium "
+                         "is shed last and dispatched first, best_effort "
+                         "is shed first and carries no SLO deadline")
     args = ap.parse_args()
 
     t0_auto = str(args.t0).lower() == "auto"
@@ -166,9 +189,11 @@ def main():
                  for _ in range(args.num)]
 
         if args.stream:
-            from repro.serving import AdmissionQueue
+            from repro.serving import COMPLETED, AdmissionQueue, QueueFull
 
-            queue = AdmissionQueue()
+            queue = AdmissionQueue(
+                max_depth=args.queue_depth or None)
+            timeout_s = (args.timeout_ms / 1e3) if args.timeout_ms else None
             rng_arr = np.random.default_rng(args.seed + 2)
 
             def replay():
@@ -177,17 +202,30 @@ def main():
                         import time as _time
                         _time.sleep(float(
                             rng_arr.exponential(1.0 / args.arrival_rate)))
-                    queue.submit(seq_len=L, num_samples=1, seed=100 + i,
-                                 t0=None)  # None -> policy / default
+                    try:
+                        queue.submit(seq_len=L, num_samples=1, seed=100 + i,
+                                     t0=None,  # None -> policy / default
+                                     priority=args.priority,
+                                     timeout_s=timeout_s)
+                    except QueueFull:
+                        pass            # counted in the admission ledger
                 queue.close()
 
             producer = threading.Thread(target=replay, daemon=True)
             producer.start()
             print(f"\nstreaming {args.num} requests "
                   f"(arrival rate {args.arrival_rate or 'inf'} req/s, "
-                  f"SLO {args.slo_ms or '-'} ms):")
+                  f"SLO {args.slo_ms or '-'} ms, "
+                  f"class {args.priority}, "
+                  f"queue depth {args.queue_depth or 'unbounded'}, "
+                  f"timeout {args.timeout_ms or '-'} ms):")
             for res in sched.serve_stream(source=queue, slo_ms=args.slo_ms,
                                           idle_timeout_s=0.02):
+                if res.status != COMPLETED:
+                    print(f"  [{res.request_id}] {res.status.upper()} "
+                          f"({res.priority}, "
+                          f"latency {res.latency_s * 1e3:.0f}ms)")
+                    continue
                 slo = ("" if res.slo_met is None
                        else f" slo={'OK' if res.slo_met else 'MISS'}")
                 print(f"  [{res.request_id}] t0={res.t0:.2f} nfe={res.nfe} "
@@ -207,6 +245,11 @@ def main():
                   f"SLO attainment "
                   f"{'-' if att is None else f'{att:.0%}'}, "
                   f"flushes {rep['flush_reasons']}")
+            term = rep["terminal"]
+            if any(v for k, v in term.items() if k != COMPLETED):
+                print(f"terminal: {term}; admission {rep['admission']}; "
+                      f"conservation "
+                      f"{'OK' if rep['conservation']['balanced'] else 'BROKEN'}")
             if engine is not None:
                 print(f"draft engine: {engine.stats.as_dict()}")
             return

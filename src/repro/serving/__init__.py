@@ -1,27 +1,35 @@
 from repro.serving.batcher import (
-    DEADLINE_ARMED, DISPATCHED, FILLING, FillingBucket, MicroBatch, RowSpan,
-    ServeRequest, bucket_seq_len, pack_requests, pad_rows, split_request,
-    t0_bin, usable_rows,
+    CANCELLED, COMPLETED, DEADLINE_ARMED, DISPATCHED, FAILED, FILLING,
+    PRIORITY_CLASSES, SHED, TERMINAL_STATUSES, TIMED_OUT, CancelToken,
+    FillingBucket, MicroBatch, RowSpan, ServeRequest, bucket_seq_len,
+    pack_requests, pad_rows, priority_rank, split_request, t0_bin,
+    usable_rows,
 )
 from repro.serving.drafts import (
     BatchKeyedDraftWarning, batch_keyed_draft, corruption_draft, uniform_draft,
 )
 from repro.serving.engine import (
-    PerNFECostModel, WarmStartServer, ar_generate, make_prefill_fn,
-    make_refine_step_fn, make_serve_step,
+    DispatchFailure, DispatchRetryPolicy, PerNFECostModel, WarmStartServer,
+    ar_generate, make_prefill_fn, make_refine_step_fn, make_serve_step,
 )
 from repro.serving.scheduler import (
-    AdmissionQueue, CompletedRequest, RequestResult, WarmStartScheduler,
+    DEFAULT_CLASS_SLO_FACTOR, AdmissionQueue, CompletedRequest, QueueClosed,
+    QueueFull, RequestResult, WarmStartScheduler,
 )
 
 __all__ = [
     "WarmStartServer", "ar_generate", "make_prefill_fn", "make_refine_step_fn",
     "make_serve_step", "PerNFECostModel",
+    "DispatchFailure", "DispatchRetryPolicy",
     "ServeRequest", "MicroBatch", "RowSpan", "bucket_seq_len", "pad_rows",
     "pack_requests", "t0_bin", "usable_rows", "split_request",
     "FillingBucket", "FILLING", "DEADLINE_ARMED", "DISPATCHED",
+    "PRIORITY_CLASSES", "priority_rank", "CancelToken",
+    "COMPLETED", "CANCELLED", "TIMED_OUT", "SHED", "FAILED",
+    "TERMINAL_STATUSES",
     "WarmStartScheduler", "RequestResult", "CompletedRequest",
-    "AdmissionQueue",
+    "AdmissionQueue", "QueueClosed", "QueueFull",
+    "DEFAULT_CLASS_SLO_FACTOR",
     "uniform_draft", "corruption_draft", "batch_keyed_draft",
     "BatchKeyedDraftWarning",
 ]

@@ -26,6 +26,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
+import threading
 from typing import List, Optional, Sequence, Tuple
 
 import numpy as np
@@ -35,6 +36,61 @@ from repro.core import guarantees
 # fold_in tags separating the draft-stage and flow-stage key streams
 DRAFT_STREAM = 0
 FLOW_STREAM = 1
+
+# priority classes, best first. Shedding under overload walks this tuple
+# BACKWARDS (best_effort is shed first, premium last); dispatch ordering
+# walks it forwards (premium micro-batches refine before best_effort).
+PRIORITY_CLASSES = ("premium", "standard", "best_effort")
+_PRIORITY_RANK = {c: i for i, c in enumerate(PRIORITY_CLASSES)}
+
+
+def priority_rank(priority: str) -> int:
+    """0 = most important (premium). Lower rank is served/protected first,
+    higher rank is shed first."""
+    try:
+        return _PRIORITY_RANK[priority]
+    except KeyError:
+        raise ValueError(
+            f"unknown priority {priority!r}; expected one of "
+            f"{PRIORITY_CLASSES}") from None
+
+
+# terminal request statuses (the request lifecycle state machine's exits):
+# every admitted request resolves to EXACTLY ONE of these — conservation
+# (offered == rejected + shed + completed + cancelled + timed_out +
+# failed) is gated by the overload bench.
+COMPLETED = "completed"     # tokens delivered, guarantee enforced
+CANCELLED = "cancelled"     # caller cancelled via CancelToken
+TIMED_OUT = "timed_out"     # per-request timeout_s expired
+SHED = "shed"               # evicted from a full bounded AdmissionQueue
+FAILED = "failed"           # refine dispatch failed after retry budget
+TERMINAL_STATUSES = (COMPLETED, CANCELLED, TIMED_OUT, SHED, FAILED)
+
+
+class CancelToken:
+    """Thread-safe per-request cancellation flag.
+
+    Producers hold the token (or the request_id — see
+    :meth:`~repro.serving.scheduler.AdmissionQueue.cancel`) and call
+    :meth:`cancel` at any point in the request lifecycle; the serving
+    loop observes it at admission, while the request waits in a
+    :class:`FillingBucket`, and again when an already-packed micro-batch
+    completes (the request is masked out of the results — sibling rows
+    are untouched because every row's PRNG stream is derived from its
+    own request alone). Cancelling an already-completed request is a
+    no-op. Oversize-request chunks share their parent's token, so one
+    cancel resolves the whole request.
+    """
+
+    def __init__(self):
+        self._event = threading.Event()
+
+    def cancel(self) -> None:
+        self._event.set()
+
+    @property
+    def cancelled(self) -> bool:
+        return self._event.is_set()
 
 
 @dataclasses.dataclass(frozen=True)
@@ -52,6 +108,15 @@ class ServeRequest:
     ``fold_in(key(seed), sample_offset + r)`` — is identical to what the
     unsplit request would have used, and the reassembled output is
     bit-identical to serving the request whole.
+
+    ``priority`` is one of :data:`PRIORITY_CLASSES`; under overload the
+    bounded admission queue sheds the lowest class first and the
+    streaming loop dispatches the highest class first. ``timeout_s`` is
+    a per-request latency budget measured from ``arrival_s`` — an
+    expired request resolves to a ``TIMED_OUT`` terminal status instead
+    of being served (or silently dropped). ``cancel_token`` carries the
+    caller's :class:`CancelToken`; it is excluded from equality so
+    chunk/metadata comparisons stay value-based.
     """
 
     request_id: int
@@ -60,6 +125,10 @@ class ServeRequest:
     seed: int = 0
     t0: Optional[float] = None      # None -> engine default
     arrival_s: float = 0.0          # admission time on the serving clock
+    priority: str = "standard"      # one of PRIORITY_CLASSES
+    timeout_s: Optional[float] = None   # latency budget from arrival_s
+    cancel_token: Optional[CancelToken] = dataclasses.field(
+        default=None, compare=False, repr=False)
     sample_offset: int = 0          # first sample index (chunks only)
     parent_id: Optional[int] = None     # original request id (chunks only)
     parent_samples: int = 0         # parent's total num_samples (chunks only)
@@ -75,6 +144,10 @@ class ServeRequest:
             raise ValueError(f"seed must lie in [0, 2**31), got {self.seed}")
         if self.t0 is not None and not (0.0 <= self.t0 < 1.0):
             raise ValueError(f"t0 override must lie in [0, 1), got {self.t0}")
+        priority_rank(self.priority)    # raises on unknown classes
+        if self.timeout_s is not None and self.timeout_s <= 0.0:
+            raise ValueError(
+                f"timeout_s must be > 0, got {self.timeout_s}")
         if self.sample_offset < 0:
             raise ValueError(
                 f"sample_offset must be >= 0, got {self.sample_offset}")
@@ -84,6 +157,20 @@ class ServeRequest:
                 f"chunk [{self.sample_offset}, "
                 f"{self.sample_offset + self.num_samples}) exceeds "
                 f"parent_samples {self.parent_samples}")
+
+    @property
+    def root_id(self) -> int:
+        """The user-visible request id: the parent's for chunks."""
+        return self.request_id if self.parent_id is None else self.parent_id
+
+    @property
+    def cancelled(self) -> bool:
+        return self.cancel_token is not None and self.cancel_token.cancelled
+
+    def expired(self, now: float) -> bool:
+        """Has this request's ``timeout_s`` budget run out at ``now``?"""
+        return (self.timeout_s is not None
+                and now >= self.arrival_s + self.timeout_s)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -310,6 +397,33 @@ class FillingBucket:
             return "idle"
         return None
 
+    def prune(self, now: float) -> List[Tuple[ServeRequest, str]]:
+        """Remove cancelled / timed-out requests, freeing their rows.
+
+        Returns ``[(request, status)]`` with status ``CANCELLED`` or
+        ``TIMED_OUT`` for each removed request, so the serving loop can
+        surface the terminal status instead of silently dropping it.
+        Sibling requests are untouched: their rows, deadlines, and PRNG
+        streams (request-derived, never neighbour-derived) are exactly
+        what they would have been had the pruned request never arrived.
+        """
+        if self.state == DISPATCHED:
+            raise ValueError("cannot prune a dispatched bucket")
+        removed: List[Tuple[ServeRequest, str]] = []
+        keep_reqs: List[ServeRequest] = []
+        keep_deadlines: List[Optional[float]] = []
+        for req, deadline in zip(self.requests, self._deadlines):
+            if req.cancelled:
+                removed.append((req, CANCELLED))
+            elif req.expired(now):
+                removed.append((req, TIMED_OUT))
+            else:
+                keep_reqs.append(req)
+                keep_deadlines.append(deadline)
+        self.requests = keep_reqs
+        self._deadlines = keep_deadlines
+        return removed
+
     def flush(self) -> List[ServeRequest]:
         """Dispatch: return the requests in deadline order and freeze."""
         order = sorted(
@@ -359,6 +473,13 @@ def pack_requests(
     groups per bucket (the jit cache stays bounded), each micro-batch
     keeps its spans' exact t0s in ``t0_spans``, and its scan length
     realises the bin's worst (minimum) t0.
+
+    Priority is part of the group key: a micro-batch never mixes
+    priority classes, so the streaming loop can dispatch premium
+    micro-batches ahead of best_effort ones without tearing batches
+    apart (and a class's latency is never coupled to a lower class's
+    batch). Compile keys are unaffected — priority changes grouping,
+    not shapes.
     """
     unit = math.lcm(row_quantum, row_multiple)
     if unit > max_rows:
@@ -378,7 +499,8 @@ def pack_requests(
         t0 = default_t0 if req.t0 is None else req.t0
         blen = bucket_seq_len(req.seq_len, min_bucket=min_bucket,
                               max_bucket=max_bucket)
-        groups.setdefault((blen, t0_bin(t0, t0_bin_width)), []).append(
+        groups.setdefault(
+            (blen, t0_bin(t0, t0_bin_width), req.priority), []).append(
             (req, t0))
 
     batches: List[MicroBatch] = []
@@ -392,7 +514,7 @@ def pack_requests(
             t0_spans=tuple(t0s),
         ))
 
-    for (blen, _bin), reqs in groups.items():
+    for (blen, _bin, _cls), reqs in groups.items():
         spans: List[RowSpan] = []
         t0s: List[float] = []
         used = 0

@@ -24,6 +24,67 @@ from repro.core.sampler import (
 )
 
 
+class DispatchFailure(RuntimeError):
+    """A refine dispatch kept failing after its whole retry budget.
+
+    Raised by the scheduler's jitted-dispatch wrapper once
+    :class:`DispatchRetryPolicy` is exhausted. The streaming loop
+    catches it, fails ONLY the affected micro-batch's requests with a
+    ``FAILED`` terminal status, and keeps serving; the batch path lets
+    it propagate so ``run()`` re-queues the unserved requests
+    (retryable by the caller). ``__cause__`` carries the last
+    underlying dispatch error.
+    """
+
+    def __init__(self, compile_key, attempts: int, last_error: Exception):
+        super().__init__(
+            f"refine dispatch for compile key {compile_key} failed "
+            f"{attempts} time(s) (retry budget exhausted): {last_error!r}")
+        self.compile_key = compile_key
+        self.attempts = attempts
+
+
+@dataclasses.dataclass(frozen=True)
+class DispatchRetryPolicy:
+    """Bounded exponential backoff for refine-dispatch faults.
+
+    A failed dispatch is retried up to ``max_retries`` times, sleeping
+    ``backoff_base_s * backoff_factor**attempt`` before attempt
+    ``attempt + 1`` — total worst-case added latency is
+    ``backoff_base_s * (factor**retries - 1) / (factor - 1)``, a bound
+    the SLO admission loop can reason about. ``max_retries = 0``
+    disables retrying (first failure is final).
+    """
+
+    max_retries: int = 3
+    backoff_base_s: float = 0.05
+    backoff_factor: float = 2.0
+
+    def __post_init__(self):
+        if self.max_retries < 0:
+            raise ValueError(
+                f"max_retries must be >= 0, got {self.max_retries}")
+        if self.backoff_base_s < 0.0:
+            raise ValueError(
+                f"backoff_base_s must be >= 0, got {self.backoff_base_s}")
+        if self.backoff_factor < 1.0:
+            raise ValueError(
+                f"backoff_factor must be >= 1, got {self.backoff_factor}")
+
+    @property
+    def attempts(self) -> int:
+        """Total dispatch attempts (1 initial + max_retries)."""
+        return self.max_retries + 1
+
+    def backoff_s(self, attempt: int) -> float:
+        """Sleep before retrying after failed attempt ``attempt`` (0-based)."""
+        return self.backoff_base_s * self.backoff_factor ** attempt
+
+    @property
+    def worst_case_backoff_s(self) -> float:
+        return sum(self.backoff_s(a) for a in range(self.max_retries))
+
+
 class PerNFECostModel:
     """Measured per-NFE refine cost, the SLO admission loop's latency
     oracle.

@@ -50,10 +50,26 @@ from repro.core.sampler import (
     scan_refine_loop, scan_refine_loop_rows,
 )
 from repro.serving.batcher import (
-    DRAFT_STREAM, FLOW_STREAM, FillingBucket, MicroBatch, ServeRequest,
-    bucket_seq_len, pack_requests, pad_rows, split_request, usable_rows,
+    CANCELLED, COMPLETED, DRAFT_STREAM, FAILED, FLOW_STREAM, PRIORITY_CLASSES,
+    SHED, TIMED_OUT, CancelToken, FillingBucket, MicroBatch, ServeRequest,
+    bucket_seq_len, pack_requests, pad_rows, priority_rank, split_request,
+    usable_rows,
 )
-from repro.serving.engine import PerNFECostModel
+from repro.serving.engine import (
+    DispatchFailure, DispatchRetryPolicy, PerNFECostModel,
+)
+
+# per-class SLO scaling for the streaming admission loop: a class's
+# deadline is arrival + slo * factor; None disarms the deadline entirely
+# (the class flushes only on full / idle / drain and is excluded from SLO
+# attainment). This is the lever that trades best_effort p99 against
+# premium attainment: premium deadlines are priced at face value while
+# best_effort never forces a partial-bucket flush.
+DEFAULT_CLASS_SLO_FACTOR: Dict[str, Optional[float]] = {
+    "premium": 1.0,
+    "standard": 1.0,
+    "best_effort": None,
+}
 
 
 @dataclasses.dataclass(frozen=True)
@@ -75,7 +91,14 @@ class CompletedRequest(RequestResult):
     :meth:`WarmStartScheduler.serve_stream` as each micro-batch
     finishes — the tokens are bit-identical to what the end-of-run batch
     path (:meth:`WarmStartScheduler.serve_requests`) returns for the
-    same request."""
+    same request.
+
+    ``status`` is the request's terminal state
+    (:data:`~repro.serving.batcher.TERMINAL_STATUSES`): every admitted
+    request is yielded exactly once, and only ``COMPLETED`` results
+    carry tokens — cancelled / timed-out / shed / failed requests are
+    surfaced with an empty ``(0, seq_len)`` token array instead of
+    being silently dropped."""
 
     arrival_s: float = 0.0          # admission time (stream clock)
     finished_s: float = 0.0         # micro-batch completion time
@@ -84,6 +107,8 @@ class CompletedRequest(RequestResult):
     deadline_s: Optional[float] = None   # arrival + SLO (None: no SLO)
     slo_met: Optional[bool] = None       # finished <= deadline
     chunks: int = 1                 # micro-batch chunks reassembled
+    status: str = COMPLETED         # terminal status (batcher constants)
+    priority: str = "standard"      # the request's priority class
 
 
 class _MonotonicClock:
@@ -103,6 +128,27 @@ class _MonotonicClock:
 _CHUNK_ID_BASE = 1 << 40
 
 
+class QueueClosed(ValueError):
+    """Submission to a closed :class:`AdmissionQueue`.
+
+    Raised instead of silently enqueueing a request that the serving
+    loop may never drain (the loop stops once the queue is closed AND
+    empty). A ``ValueError`` subclass so pre-existing callers that
+    caught ``ValueError`` keep working.
+    """
+
+
+class QueueFull(RuntimeError):
+    """A bounded :class:`AdmissionQueue` rejected a submission.
+
+    Raised when the queue is at ``max_depth`` and the incoming request's
+    priority class is not strictly higher than the lowest class already
+    queued — there is nothing cheaper to shed in its favour. The
+    rejection is counted in :meth:`AdmissionQueue.stats` (``rejected``),
+    so offered-load accounting stays exact.
+    """
+
+
 class AdmissionQueue:
     """Thread-safe request intake for :meth:`WarmStartScheduler
     .serve_stream` — the arrival side of the admission loop.
@@ -112,27 +158,95 @@ class AdmissionQueue:
     drains it between dispatches and keeps serving until the queue is
     :meth:`close`-d AND empty. Arrival timestamps default to the
     queue's clock at submission.
+
+    **Bounded admission (overload hardening).** With ``max_depth`` set,
+    the queue never holds more than that many requests: a submission to
+    a full queue either *sheds* the most recent request of the lowest
+    priority class present — but only when the incoming request's class
+    is strictly higher (shedding never touches premium to admit
+    best_effort) — or is *rejected* with :class:`QueueFull`. Shed
+    requests are handed to the serving loop via :meth:`take_shed` and
+    surface as ``SHED`` terminal results; :meth:`stats` keeps the exact
+    conservation ledger (``offered == accepted + rejected``, with every
+    accepted request later shed or drained exactly once).
+
+    **Cancellation.** Every :meth:`submit` mints a
+    :class:`~repro.serving.batcher.CancelToken` for its request
+    (:meth:`push` attaches one if the request has none);
+    :meth:`cancel` flips it by request_id at any point in the request's
+    lifetime — still queued, waiting in a filling bucket, or already
+    packed — and the serving loop resolves the request to a
+    ``CANCELLED`` terminal status. Tokens are kept for the stream's
+    lifetime so late cancels stay addressable.
     """
 
-    def __init__(self, *, clock=None):
+    def __init__(self, *, max_depth: Optional[int] = None, clock=None):
+        if max_depth is not None and max_depth < 1:
+            raise ValueError(f"max_depth must be >= 1, got {max_depth}")
         self._clock = clock if clock is not None else _MonotonicClock()
         self._lock = threading.Lock()
         self._items: deque = deque()
         self._closed = False
         self._next_id = 0
+        self.max_depth = max_depth
+        self._tokens: Dict[int, CancelToken] = {}
+        self._shed: List[ServeRequest] = []
+        self._offered = 0
+        self._accepted = 0
+        self._rejected = 0
+        self._shed_total = 0
+        self._shed_by_class: Dict[str, int] = {}
+
+    def _admit_locked(self, req: ServeRequest) -> None:
+        """Depth-bounded enqueue; caller holds the lock. Counts the
+        offer, then either enqueues, sheds a lower-class victim to make
+        room, or raises QueueFull."""
+        self._offered += 1
+        if self.max_depth is not None and len(self._items) >= self.max_depth:
+            rank_in = priority_rank(req.priority)
+            worst = max(priority_rank(r.priority) for r in self._items)
+            if worst <= rank_in:
+                self._rejected += 1
+                raise QueueFull(
+                    f"admission queue full (depth {self.max_depth}) and "
+                    f"request {req.request_id} ({req.priority}) does not "
+                    f"outrank any queued request")
+            # shed the NEWEST request of the worst class present: it has
+            # the least sunk queueing time, and the class ordering means
+            # premium is never shed before best_effort
+            for i in range(len(self._items) - 1, -1, -1):
+                if priority_rank(self._items[i].priority) == worst:
+                    victim = self._items[i]
+                    del self._items[i]
+                    self._shed.append(victim)
+                    self._shed_total += 1
+                    self._shed_by_class[victim.priority] = \
+                        self._shed_by_class.get(victim.priority, 0) + 1
+                    break
+        self._accepted += 1
+        self._items.append(req)
 
     def submit(self, *, seq_len: int, num_samples: int = 1, seed: int = 0,
-               t0: Optional[float] = None,
+               t0: Optional[float] = None, priority: str = "standard",
+               timeout_s: Optional[float] = None,
                arrival_s: Optional[float] = None) -> int:
-        """Enqueue one request; returns its request_id."""
+        """Enqueue one request; returns its request_id.
+
+        Raises :class:`QueueClosed` after :meth:`close`, and
+        :class:`QueueFull` when a bounded queue has nothing cheaper to
+        shed (see the class docstring for the shed-vs-reject rule).
+        """
         with self._lock:
             if self._closed:
-                raise ValueError("admission queue is closed")
+                raise QueueClosed("admission queue is closed")
             rid = self._next_id
             self._next_id += 1
-            self._items.append(ServeRequest(
+            token = CancelToken()
+            self._tokens[rid] = token
+            self._admit_locked(ServeRequest(
                 request_id=rid, seq_len=seq_len, num_samples=num_samples,
-                seed=seed, t0=t0,
+                seed=seed, t0=t0, priority=priority, timeout_s=timeout_s,
+                cancel_token=token,
                 arrival_s=(self._clock.time() if arrival_s is None
                            else arrival_s)))
         return rid
@@ -142,12 +256,31 @@ class AdmissionQueue:
         across the stream; the submitter owns that contract)."""
         with self._lock:
             if self._closed:
-                raise ValueError("admission queue is closed")
+                raise QueueClosed("admission queue is closed")
             self._next_id = max(self._next_id, req.request_id + 1)
             if req.arrival_s == 0.0:
                 req = dataclasses.replace(req, arrival_s=self._clock.time())
-            self._items.append(req)
+            if req.cancel_token is None:
+                req = dataclasses.replace(req, cancel_token=CancelToken())
+            self._tokens[req.request_id] = req.cancel_token
+            self._admit_locked(req)
         return req.request_id
+
+    def cancel(self, request_id: int) -> bool:
+        """Cancel a request by id; returns False for unknown ids.
+
+        Safe at any point in the lifecycle — queued, filling, packed, or
+        already finished (then a no-op): the serving loop masks the
+        request out wherever it currently is and yields a ``CANCELLED``
+        terminal result, leaving every sibling request's output
+        bit-identical to a run where this request was never submitted.
+        """
+        with self._lock:
+            token = self._tokens.get(request_id)
+        if token is None:
+            return False
+        token.cancel()
+        return True
 
     def close(self) -> None:
         """No further arrivals; the serving loop drains and terminates."""
@@ -159,6 +292,26 @@ class AdmissionQueue:
             items = list(self._items)
             self._items.clear()
         return items
+
+    def take_shed(self) -> List[ServeRequest]:
+        """Hand over requests shed since the last call (serving loop
+        yields them as ``SHED`` terminal results)."""
+        with self._lock:
+            shed, self._shed = self._shed, []
+        return shed
+
+    def stats(self) -> dict:
+        """Exact admission ledger: ``offered == accepted + rejected``;
+        shed requests are the subset of accepted ones later evicted."""
+        with self._lock:
+            return {
+                "offered": self._offered,
+                "accepted": self._accepted,
+                "rejected": self._rejected,
+                "shed": self._shed_total,
+                "shed_by_class": dict(sorted(self._shed_by_class.items())),
+                "max_depth": self.max_depth,
+            }
 
     @property
     def closed(self) -> bool:
@@ -229,6 +382,8 @@ class WarmStartScheduler:
         mesh: Optional[Any] = None,
         t0_policy: Optional[Any] = None,
         t0_bin_width: Optional[float] = None,
+        retry_policy: Optional[DispatchRetryPolicy] = None,
+        class_slo_factor: Optional[Dict[str, Optional[float]]] = None,
     ):
         if cold_nfe < 1:
             raise ValueError(f"cold_nfe must be >= 1, got {cold_nfe}")
@@ -270,6 +425,24 @@ class WarmStartScheduler:
         self._draft_cost_ewma: Optional[float] = None
         self._chunk_ids = itertools.count(_CHUNK_ID_BASE)
         self.stream_report: Optional[dict] = None
+        # dispatch fault isolation: a failed refine dispatch retries with
+        # bounded exponential backoff, then fails ONLY its own requests
+        self.retry_policy = (retry_policy if retry_policy is not None
+                             else DispatchRetryPolicy())
+        self.class_slo_factor = dict(DEFAULT_CLASS_SLO_FACTOR)
+        if class_slo_factor:
+            for cls, factor in class_slo_factor.items():
+                priority_rank(cls)      # raises on unknown classes
+                self.class_slo_factor[cls] = factor
+        self._dispatch_retries = 0
+        self._dispatch_failures = 0
+        # test-only fault injection: when set, called as hook(mb, attempt)
+        # immediately before every refine dispatch attempt; raising from
+        # it makes that attempt fail exactly like a device fault would
+        self._dispatch_fault_hook: Optional[Callable[[Any, int], None]] = None
+        # the active stream's clock (serve_stream installs it) so retry
+        # backoff sleeps on the SAME clock the tests drive
+        self._stream_clock: Optional[Any] = None
 
         # velocity_scale is t0-independent for the linear schedule, so one
         # stepping path serves every per-request t0 (the t0 only moves the
@@ -402,6 +575,45 @@ class WarmStartScheduler:
             else 0.7 * self._draft_cost_ewma + 0.3 * t_draft)
         return x, flow_keys, t_draft
 
+    def _dispatch_refine(self, mb: MicroBatch, x, flow_keys, ts, hs,
+                         active, key_idx):
+        """The jit-cache dispatch wrapper: one refine-loop dispatch with
+        bounded-backoff retries (:class:`DispatchRetryPolicy`).
+
+        The refine loop DONATES the token buffer off-CPU, so a retry
+        cannot replay the same device array — when retries are possible
+        on a donating backend, the drafts are snapshotted to host memory
+        first and every retry re-uploads from that snapshot. Raises
+        :class:`DispatchFailure` once the budget is exhausted; the
+        streaming loop turns that into ``FAILED`` terminal results for
+        this micro-batch only, the batch path re-queues.
+        """
+        policy = self.retry_policy
+        x_backup = None
+        if policy.max_retries > 0 and jax.default_backend() != "cpu":
+            x_backup = np.asarray(x)
+        for attempt in range(policy.attempts):
+            try:
+                if self._dispatch_fault_hook is not None:
+                    self._dispatch_fault_hook(mb, attempt)
+                if attempt > 0 and x_backup is not None:
+                    x = jnp.asarray(x_backup)
+                out = self._refine_loop(
+                    self.flow_params, flow_keys, x, jnp.asarray(ts),
+                    jnp.asarray(hs), jnp.asarray(active),
+                    jnp.asarray(key_idx))
+                return jax.block_until_ready(out)
+            except Exception as err:  # noqa: BLE001 — device faults vary
+                if attempt >= policy.max_retries:
+                    self._dispatch_failures += 1
+                    raise DispatchFailure(
+                        mb.compile_key, attempt + 1, err) from err
+                self._dispatch_retries += 1
+                sleep = (self._stream_clock.sleep
+                         if self._stream_clock is not None else time.sleep)
+                sleep(policy.backoff_s(attempt))
+        raise AssertionError("unreachable")  # pragma: no cover
+
     def _stage_refine(self, mb: MicroBatch, x, flow_keys):
         """Flow stage for one micro-batch: one jitted scan dispatch over
         the per-row masked schedule."""
@@ -422,10 +634,7 @@ class WarmStartScheduler:
             k = min(self.fused_block, len(ts))
             self._fused_blocks_dispatched += -(-len(ts) // k)
             self._fused_steps_fused += len(ts)
-        x = self._refine_loop(
-            self.flow_params, flow_keys, x, jnp.asarray(ts), jnp.asarray(hs),
-            jnp.asarray(active), jnp.asarray(key_idx))
-        x = jax.block_until_ready(x)
+        x = self._dispatch_refine(mb, x, flow_keys, ts, hs, active, key_idx)
         # observed NFE = what the executed schedule actually spent: the
         # scan length for the batch (cross-checked against an independent
         # warm_nfe(cold_nfe, min t0) recomputation — the worst-case
@@ -778,8 +987,25 @@ class WarmStartScheduler:
         closes. The draft stage of the next micro-batch overlaps the
         refine of the current one, as in the batch path.
 
+        Overload hardening: every admitted request resolves to exactly
+        one terminal :class:`CompletedRequest` — ``COMPLETED`` with
+        tokens, or ``CANCELLED`` / ``TIMED_OUT`` / ``SHED`` / ``FAILED``
+        with an empty token array (never a silent drop). Cancelled and
+        timed-out requests free their rows from the filling buckets (or
+        are masked out of an already-packed micro-batch) without
+        touching sibling rows' PRNG streams; requests shed by a bounded
+        :class:`AdmissionQueue` surface with ``SHED``; a refine dispatch
+        that still fails after :class:`DispatchRetryPolicy`'s backoff
+        budget fails only its own micro-batch's requests with
+        ``FAILED`` while the stream keeps serving. Priority classes get
+        their own filling buckets, premium micro-batches dispatch ahead
+        of best_effort ones, and per-class deadlines are scaled by
+        ``class_slo_factor`` (best_effort has no deadline by default).
+
         After the generator is exhausted, ``self.stream_report`` holds
-        the run's latency percentiles, SLO attainment, flush-reason
+        the run's latency percentiles, SLO attainment (global and
+        per-class), flush-reason counts, admission/shed/terminal-status
+        ledgers with the conservation check, dispatch retry/failure
         counts and per-micro-batch stage timings.
 
         ``clock`` is an object with ``time()``/``sleep(dt)`` (defaults
@@ -797,21 +1023,38 @@ class WarmStartScheduler:
             now0 = clock.time()
             with source._lock:
                 for req in requests:
-                    # arrival = stream start for pre-known request sets
-                    source._items.append(
-                        dataclasses.replace(req, arrival_s=now0)
-                        if req.arrival_s == 0.0 else req)
+                    # arrival = stream start for pre-known request sets.
+                    # Preloaded requests are counted in the admission
+                    # ledger and get cancel tokens registered, so
+                    # conservation accounting and source.cancel() hold
+                    # for them too (the depth bound applies only to
+                    # producer-side submissions — this set is already
+                    # admitted by construction).
+                    if req.arrival_s == 0.0:
+                        req = dataclasses.replace(req, arrival_s=now0)
+                    if req.cancel_token is None:
+                        req = dataclasses.replace(
+                            req, cancel_token=CancelToken())
+                    source._tokens[req.request_id] = req.cancel_token
+                    source._offered += 1
+                    source._accepted += 1
+                    source._items.append(req)
                     source._next_id = max(source._next_id,
                                           req.request_id + 1)
         if own_source:
             # no external producer: the pre-known set IS the stream
             source.close()
 
-        filling: Dict[int, FillingBucket] = {}
-        ready: deque = deque()          # flushed micro-batches -> pipeline
+        # filling buckets are keyed by (bucket_len, priority): a class
+        # never waits on (or pads into) another class's bucket, so the
+        # flush pricing and the dispatch ordering both see pure-class
+        # micro-batches
+        filling: Dict[Tuple[int, str], FillingBucket] = {}
+        ready: List[dict] = []          # flushed micro-batches -> pipeline
         partials: Dict[int, dict] = {}  # parent_id -> chunk reassembly
         stats = {"scored_requests": 0, "prepass_time_s": 0.0,
-                 "flush_reasons": {}, "split_requests": 0}
+                 "flush_reasons": {}, "split_requests": 0,
+                 "failed_micro_batches": 0, "dropped_micro_batches": 0}
         mb_reports: List[dict] = []
         latencies: List[float] = []
         slo_total = slo_met_n = 0
@@ -821,8 +1064,59 @@ class WarmStartScheduler:
         t_first: Optional[float] = None
         first_arrival_s: Optional[float] = None
         cache_snap = self._jit_cache_snapshot()
+        retries0 = self._dispatch_retries
         wall0 = clock.time()
         mb_index = itertools.count()
+        # terminal-status bookkeeping: every admitted ROOT request id
+        # lands in `resolved` exactly once, with exactly one terminal
+        # CompletedRequest yielded for it (conservation is checked in
+        # the stream report)
+        resolved: set = set()
+        terminal_counts = {s: 0 for s in
+                           (COMPLETED, CANCELLED, TIMED_OUT, SHED, FAILED)}
+        by_class: Dict[str, dict] = {
+            c: {"completed": 0, "shed": 0, "cancelled": 0, "timed_out": 0,
+                "failed": 0, "latencies": [], "slo_total": 0, "slo_met": 0}
+            for c in PRIORITY_CLASSES}
+
+        def class_deadline(req: ServeRequest) -> Optional[float]:
+            """arrival + slo * class factor, or None for classes whose
+            factor is None (best_effort by default: it never forces a
+            deadline flush and is excluded from SLO attainment)."""
+            if slo_s is None:
+                return None
+            factor = self.class_slo_factor.get(req.priority, 1.0)
+            if factor is None:
+                return None
+            return req.arrival_s + slo_s * factor
+
+        def terminal(req: ServeRequest, status: str,
+                     now: float) -> Optional[CompletedRequest]:
+            """Resolve ``req``'s ROOT request to a non-COMPLETED terminal
+            status; None when already resolved (oversize chunks share
+            their parent's fate — one terminal event per root)."""
+            root = req.root_id
+            if root in resolved:
+                return None
+            resolved.add(root)
+            part = partials.pop(root, None)
+            n_chunks = part["num_chunks"] if part is not None else 1
+            terminal_counts[status] += 1
+            cls = by_class[req.priority]
+            cls[status] += 1
+            # shed / timed-out / failed requests count AGAINST their
+            # class's SLO attainment (the system failed to serve them in
+            # time); a caller's cancel does not
+            if status != CANCELLED and class_deadline(req) is not None:
+                cls["slo_total"] += 1
+            return CompletedRequest(
+                request_id=root,
+                tokens=np.zeros((0, req.seq_len), np.int32),
+                nfe=0, t0=0.0, bucket_len=0, micro_batch=-1,
+                arrival_s=req.arrival_s, finished_s=now,
+                latency_s=now - req.arrival_s, flush_reason="",
+                deadline_s=None, slo_met=None, chunks=n_chunks,
+                status=status, priority=req.priority)
 
         def admit(req: ServeRequest, now: float):
             nonlocal admitted_n, first_arrival_s
@@ -854,7 +1148,8 @@ class WarmStartScheduler:
                 blen = bucket_seq_len(piece.seq_len,
                                       min_bucket=self.min_bucket,
                                       max_bucket=self.max_bucket)
-                fb = filling.get(blen)
+                fkey = (blen, piece.priority)
+                fb = filling.get(fkey)
                 if fb is not None and fb.would_overflow(
                         piece.num_samples, max_rows=self.max_rows,
                         unit=unit):
@@ -862,12 +1157,38 @@ class WarmStartScheduler:
                     fb = None
                 if fb is None:
                     fb = FillingBucket(blen)
-                    filling[blen] = fb
-                fb.add(piece, deadline_s=(
-                    None if slo_s is None else piece.arrival_s + slo_s))
+                    filling[fkey] = fb
+                fb.add(piece, deadline_s=class_deadline(piece))
+
+        def pop_ready() -> Optional[dict]:
+            """Next micro-batch for the pipeline: best priority class
+            first (FIFO within a class), skipping — and counting as
+            dropped — micro-batches whose every span already resolved
+            (cancelled / timed out while queued: no compute spent)."""
+            while ready:
+                best = min(
+                    range(len(ready)),
+                    key=lambda i: (
+                        min(priority_rank(s.request.priority)
+                            for s in ready[i]["mb"].spans), i))
+                pending = ready.pop(best)
+                if all(s.request.root_id in resolved
+                       for s in pending["mb"].spans):
+                    stats["dropped_micro_batches"] += 1
+                    continue
+                return pending
+            return None
 
         def complete(pending: dict, x, t_draft: float, t_flow: float):
-            """Turn one finished micro-batch into CompletedRequests."""
+            """Turn one finished micro-batch into CompletedRequests.
+
+            Spans whose request was cancelled or timed out in flight are
+            masked out here: their computed rows are discarded and a
+            CANCELLED/TIMED_OUT terminal result is emitted instead.
+            Sibling rows are untouched — row PRNG streams, the bucket
+            shape and the NFE schedule are functions of each request
+            alone, so the surviving rows' bytes are identical either
+            way."""
             nonlocal draft_total, flow_total, completed_n, t_first
             nonlocal slo_total, slo_met_n
             draft_total += t_draft
@@ -887,6 +1208,18 @@ class WarmStartScheduler:
             out = []
             for span, span_t0 in zip(mb.spans, mb.t0_spans):
                 req = span.request
+                if req.root_id in resolved:
+                    continue    # already terminal (a sibling chunk's fate)
+                if req.cancelled:
+                    item = terminal(req, CANCELLED, finished_s)
+                    if item is not None:
+                        out.append(item)
+                    continue
+                if req.expired(finished_s):
+                    item = terminal(req, TIMED_OUT, finished_s)
+                    if item is not None:
+                        out.append(item)
+                    continue
                 toks = x_host[span.row_offset:span.row_offset + span.rows,
                               :req.seq_len]
                 if req.parent_id is not None:
@@ -906,7 +1239,8 @@ class WarmStartScheduler:
                 else:
                     rid, tokens = req.request_id, toks
                     arrival, chunks = req.arrival_s, 1
-                deadline = None if slo_s is None else arrival + slo_s
+                resolved.add(rid)
+                deadline = class_deadline(req)
                 met = None if deadline is None else finished_s <= deadline
                 if met is not None:
                     slo_total += 1
@@ -914,6 +1248,13 @@ class WarmStartScheduler:
                 latency = finished_s - arrival
                 latencies.append(latency)
                 completed_n += 1
+                terminal_counts[COMPLETED] += 1
+                cls = by_class[req.priority]
+                cls["completed"] += 1
+                cls["latencies"].append(latency)
+                if deadline is not None:
+                    cls["slo_total"] += 1
+                    cls["slo_met"] += int(met)
                 if t_first is None:
                     t_first = finished_s
                 out.append(CompletedRequest(
@@ -922,69 +1263,141 @@ class WarmStartScheduler:
                     t0=span_t0, bucket_len=mb.bucket_len, micro_batch=k,
                     arrival_s=arrival, finished_s=finished_s,
                     latency_s=latency, flush_reason=pending["reason"],
-                    deadline_s=deadline, slo_met=met, chunks=chunks))
+                    deadline_s=deadline, slo_met=met, chunks=chunks,
+                    status=COMPLETED, priority=req.priority))
             return out
 
         draft_fut = None
         draft_pending = None
-        with ThreadPoolExecutor(max_workers=1) as pool:
-            while True:
-                now = clock.time()
-                for req in source.drain():
-                    admit(req, now)
-                source_done = source.closed
-                # deadline / idle / drain flush sweep
-                backlog_s = sum(self._mb_est_latency_s(p["mb"])
-                                for p in ready)
-                if draft_pending is not None:
-                    backlog_s += self._mb_est_latency_s(draft_pending["mb"])
-                for blen in list(filling):
-                    fb = filling[blen]
-                    if not fb.requests:
-                        del filling[blen]
+        # retry backoff inside _dispatch_refine must sleep on THIS
+        # stream's clock (tests drive a fake one)
+        self._stream_clock = clock
+        try:
+            with ThreadPoolExecutor(max_workers=1) as pool:
+                while True:
+                    now = clock.time()
+                    # overload: requests the bounded queue evicted become
+                    # SHED terminal results, never silent drops
+                    for req in source.take_shed():
+                        item = terminal(req, SHED, now)
+                        if item is not None:
+                            yield item
+                    for req in source.drain():
+                        if req.cancelled:
+                            item = terminal(req, CANCELLED, now)
+                            if item is not None:
+                                yield item
+                            continue
+                        if req.expired(now):
+                            item = terminal(req, TIMED_OUT, now)
+                            if item is not None:
+                                yield item
+                            continue
+                        admit(req, now)
+                    source_done = source.closed
+                    # cancellation / timeout sweep: pruned requests free
+                    # their rows BEFORE packing, so siblings bucket and
+                    # pack exactly as if the pruned request never arrived
+                    for fkey in list(filling):
+                        fb = filling[fkey]
+                        for req, status in fb.prune(now):
+                            item = terminal(req, status, now)
+                            if item is not None:
+                                yield item
+                        if not fb.requests:
+                            del filling[fkey]
+                    # deadline / idle / drain flush sweep
+                    backlog_s = sum(self._mb_est_latency_s(p["mb"])
+                                    for p in ready)
+                    if draft_pending is not None:
+                        backlog_s += self._mb_est_latency_s(
+                            draft_pending["mb"])
+                    for fkey in list(filling):
+                        fb = filling[fkey]
+                        if not fb.requests:
+                            del filling[fkey]
+                            continue
+                        reason = ("drain" if source_done
+                                  else fb.flush_decision(
+                                      now,
+                                      est_latency_s=self._stream_est_latency_s(
+                                          fb, unit, backlog_s),
+                                      idle_timeout_s=idle_timeout_s,
+                                      max_rows=self.max_rows, unit=unit))
+                        if reason:
+                            ready.extend(
+                                self._flush_bucket(fb, reason, now, stats))
+                            del filling[fkey]
+                    # pipeline: draft of the NEXT micro-batch overlaps the
+                    # refine of the current one (same structure as the
+                    # batch path's worker thread)
+                    if draft_fut is None and ready:
+                        draft_pending = pop_ready()
+                        if draft_pending is not None:
+                            draft_fut = pool.submit(
+                                self._stage_keys_and_draft,
+                                draft_pending["mb"],
+                                draft_pending["predrafted"])
+                    if draft_fut is not None:
+                        x, flow_keys, t_draft = draft_fut.result()
+                        current, draft_fut, draft_pending = \
+                            draft_pending, None, None
+                        if ready:
+                            draft_pending = pop_ready()
+                            if draft_pending is not None:
+                                draft_fut = pool.submit(
+                                    self._stage_keys_and_draft,
+                                    draft_pending["mb"],
+                                    draft_pending["predrafted"])
+                        try:
+                            x, t_flow = self._stage_refine(
+                                current["mb"], x, flow_keys)
+                        except DispatchFailure:
+                            # fault isolation: the retry budget is spent —
+                            # fail ONLY this micro-batch's requests and
+                            # keep serving the stream
+                            stats["failed_micro_batches"] += 1
+                            draft_total += t_draft
+                            fail_s = clock.time()
+                            for span in current["mb"].spans:
+                                item = terminal(span.request, FAILED, fail_s)
+                                if item is not None:
+                                    yield item
+                            continue
+                        for item in complete(current, x, t_draft, t_flow):
+                            yield item
                         continue
-                    reason = "drain" if source_done else fb.flush_decision(
-                        now,
-                        est_latency_s=self._stream_est_latency_s(
-                            fb, unit, backlog_s),
-                        idle_timeout_s=idle_timeout_s,
-                        max_rows=self.max_rows, unit=unit)
-                    if reason:
-                        ready.extend(
-                            self._flush_bucket(fb, reason, now, stats))
-                        del filling[blen]
-                # pipeline: draft of the NEXT micro-batch overlaps the
-                # refine of the current one (same structure as the
-                # batch path's worker thread)
-                if draft_fut is None and ready:
-                    draft_pending = ready.popleft()
-                    draft_fut = pool.submit(
-                        self._stage_keys_and_draft, draft_pending["mb"],
-                        draft_pending["predrafted"])
-                if draft_fut is not None:
-                    x, flow_keys, t_draft = draft_fut.result()
-                    current, draft_fut, draft_pending = \
-                        draft_pending, None, None
-                    if ready:
-                        draft_pending = ready.popleft()
-                        draft_fut = pool.submit(
-                            self._stage_keys_and_draft, draft_pending["mb"],
-                            draft_pending["predrafted"])
-                    x, t_flow = self._stage_refine(
-                        current["mb"], x, flow_keys)
-                    for item in complete(current, x, t_draft, t_flow):
-                        yield item
-                    continue
-                if source_done and not filling and not ready \
-                        and draft_fut is None:
-                    break
-                clock.sleep(poll_interval_s)
+                    if source_done and not filling and not ready \
+                            and draft_fut is None:
+                        break
+                    clock.sleep(poll_interval_s)
+        finally:
+            self._stream_clock = None
 
         wall = clock.time() - wall0
 
-        def pct(q):
-            return float(np.percentile(latencies, q)) if latencies else 0.0
+        def pct(vals, q):
+            return float(np.percentile(vals, q)) if vals else 0.0
 
+        admission = source.stats()
+        resolved_total = sum(terminal_counts.values())
+        by_class_report = {}
+        for cname, cs in by_class.items():
+            if not any((cs["completed"], cs["shed"], cs["cancelled"],
+                        cs["timed_out"], cs["failed"])):
+                continue
+            lat = cs["latencies"]
+            by_class_report[cname] = {
+                "completed": cs["completed"], "shed": cs["shed"],
+                "cancelled": cs["cancelled"], "timed_out": cs["timed_out"],
+                "failed": cs["failed"],
+                "slo_attainment": (cs["slo_met"] / cs["slo_total"]
+                                   if cs["slo_total"] else None),
+                "latency_ms": {
+                    "p50": pct(lat, 50) * 1e3, "p95": pct(lat, 95) * 1e3,
+                    "p99": pct(lat, 99) * 1e3, "n": len(lat),
+                },
+            }
         self.stream_report = {
             "streaming": True,
             "num_requests": admitted_n,
@@ -996,7 +1409,8 @@ class WarmStartScheduler:
             "slo_attainment": (slo_met_n / slo_total if slo_total else None),
             "latency_s": {
                 "mean": float(np.mean(latencies)) if latencies else 0.0,
-                "p50": pct(50), "p95": pct(95), "p99": pct(99),
+                "p50": pct(latencies, 50), "p95": pct(latencies, 95),
+                "p99": pct(latencies, 99),
                 "max": float(np.max(latencies)) if latencies else 0.0,
             },
             # clock starts at the FIRST ADMISSION, not at generator start:
@@ -1014,6 +1428,27 @@ class WarmStartScheduler:
             "policy": (None if self.t0_policy is None else
                        {"scored_requests": stats["scored_requests"],
                         "prepass_time_s": stats["prepass_time_s"]}),
+            # overload-hardening sections: the admission ledger, terminal
+            # status counts, per-class outcomes/latency and the exact
+            # conservation check (offered == rejected + every terminal)
+            "admission": admission,
+            "terminal": dict(terminal_counts),
+            "by_class": by_class_report,
+            "conservation": {
+                "offered": admission["offered"],
+                "rejected": admission["rejected"],
+                "resolved": resolved_total,
+                "balanced": (admission["offered"]
+                             == admission["rejected"] + resolved_total),
+            },
+            "dropped_micro_batches": stats["dropped_micro_batches"],
+            "dispatch": {
+                "retries": self._dispatch_retries - retries0,
+                "failed_micro_batches": stats["failed_micro_batches"],
+                "failed_requests": terminal_counts[FAILED],
+                "max_retries": self.retry_policy.max_retries,
+                "backoff_base_s": self.retry_policy.backoff_base_s,
+            },
             "batches": mb_reports,
         }
 

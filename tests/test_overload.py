@@ -1,0 +1,463 @@
+"""Overload-hardening tests: bounded admission with priority-ordered
+shedding, QueueClosed/QueueFull semantics (incl. a close/drain race),
+per-request cancellation/timeout with sibling PRNG bit-identity, dispatch
+fault isolation with bounded backoff, the batch-path failure re-queue
+regression, and per-class latency/SLO accounting in stream_report."""
+
+import threading
+
+import numpy as np
+import pytest
+
+from repro.serving import (
+    CANCELLED, COMPLETED, FAILED, SHED, TIMED_OUT, AdmissionQueue,
+    CancelToken, DispatchFailure, DispatchRetryPolicy, FillingBucket,
+    QueueClosed, QueueFull, ServeRequest, WarmStartScheduler, priority_rank,
+    uniform_draft,
+)
+
+from test_streaming import FakeClock, ToyFlow, make_scheduler
+
+
+class RecordingClock(FakeClock):
+    """FakeClock that also records every sleep duration."""
+
+    def __init__(self, t0=0.0):
+        super().__init__(t0)
+        self.sleeps = []
+
+    def sleep(self, dt):
+        self.sleeps.append(dt)
+        super().sleep(dt)
+
+
+# ---------------------------------------------------------------------------
+# bounded admission: shed order, rejection, ledger
+# ---------------------------------------------------------------------------
+
+def test_bounded_queue_sheds_lowest_class_newest_first():
+    q = AdmissionQueue(max_depth=3)
+    a = q.submit(seq_len=8, priority="best_effort")
+    b = q.submit(seq_len=8, priority="standard")
+    c = q.submit(seq_len=8, priority="best_effort")
+    # full; premium evicts the NEWEST best_effort request (c, not a)
+    d = q.submit(seq_len=8, priority="premium")
+    assert [r.request_id for r in q.take_shed()] == [c]
+    # full again; standard evicts the remaining best_effort
+    e = q.submit(seq_len=8, priority="standard")
+    assert [r.request_id for r in q.take_shed()] == [a]
+    stats = q.stats()
+    assert stats == {"offered": 5, "accepted": 5, "rejected": 0, "shed": 2,
+                     "shed_by_class": {"best_effort": 2}, "max_depth": 3}
+    assert [r.request_id for r in q.drain()] == [b, d, e]
+
+
+def test_bounded_queue_never_sheds_equal_or_higher_class():
+    q = AdmissionQueue(max_depth=2)
+    q.submit(seq_len=8, priority="premium")
+    q.submit(seq_len=8, priority="standard")
+    # equal class present (standard) -> reject, don't shed
+    with pytest.raises(QueueFull):
+        q.submit(seq_len=8, priority="standard")
+    # lower class incoming -> reject; premium/standard are never shed
+    # to admit best_effort
+    with pytest.raises(QueueFull):
+        q.submit(seq_len=8, priority="best_effort")
+    stats = q.stats()
+    assert stats["offered"] == 4
+    assert stats["accepted"] == 2 and stats["rejected"] == 2
+    assert stats["shed"] == 0
+    assert len(q) == 2
+
+
+def test_submit_after_close_raises_queue_closed():
+    q = AdmissionQueue()
+    q.submit(seq_len=8)
+    q.close()
+    with pytest.raises(QueueClosed):
+        q.submit(seq_len=8)
+    with pytest.raises(QueueClosed):
+        q.push(ServeRequest(request_id=99, seq_len=8))
+    # QueueClosed is a ValueError so pre-existing handlers keep working
+    with pytest.raises(ValueError):
+        q.submit(seq_len=8)
+    assert len(q.drain()) == 1
+
+
+def test_close_drain_race_loses_no_accepted_request():
+    """Producers hammering submit() while the queue closes: every offer
+    either lands in drain(), is shed, or raised QueueClosed/QueueFull —
+    the ledger balances exactly, nothing is silently dropped."""
+    q = AdmissionQueue(max_depth=16)
+    outcomes = {"accepted": 0, "closed": 0, "full": 0}
+    lock = threading.Lock()
+
+    def produce(k):
+        for i in range(50):
+            try:
+                q.submit(seq_len=8, seed=k * 100 + i,
+                         priority="best_effort" if i % 2 else "standard")
+            except QueueClosed:
+                with lock:
+                    outcomes["closed"] += 1
+            except QueueFull:
+                with lock:
+                    outcomes["full"] += 1
+            else:
+                with lock:
+                    outcomes["accepted"] += 1
+
+    threads = [threading.Thread(target=produce, args=(k,)) for k in range(4)]
+    for t in threads:
+        t.start()
+    q.close()
+    for t in threads:
+        t.join()
+    drained = q.drain()
+    shed = q.take_shed()
+    stats = q.stats()
+    assert stats["offered"] == sum(outcomes.values())
+    assert stats["accepted"] == outcomes["accepted"]
+    assert stats["rejected"] == outcomes["full"]
+    # conservation: every accepted request is drained or shed exactly once
+    assert len(drained) + len(shed) == outcomes["accepted"]
+    assert len(shed) == stats["shed"]
+    assert q.closed
+
+
+def test_cancel_by_request_id():
+    q = AdmissionQueue()
+    rid = q.submit(seq_len=8)
+    assert q.cancel(rid) is True
+    assert q.cancel(12345) is False
+    (req,) = q.drain()
+    assert req.cancelled
+
+
+# ---------------------------------------------------------------------------
+# shedding through the stream: SHED terminal results + conservation
+# ---------------------------------------------------------------------------
+
+def test_stream_surfaces_shed_requests_and_balances_conservation():
+    clock = FakeClock()
+    q = AdmissionQueue(max_depth=2, clock=clock)
+    q.submit(seq_len=8, seed=1, priority="best_effort")
+    q.submit(seq_len=8, seed=2, priority="best_effort")
+    kept = q.submit(seq_len=8, seed=3, priority="premium")   # sheds seed=2
+    q.close()
+    sched = make_scheduler(max_rows=16)
+    out = list(sched.serve_stream(source=q, clock=clock))
+    by_status = {}
+    for c in out:
+        by_status.setdefault(c.status, []).append(c)
+    assert len(by_status[SHED]) == 1
+    assert by_status[SHED][0].priority == "best_effort"
+    assert by_status[SHED][0].tokens.shape == (0, 8)
+    assert {c.request_id for c in by_status[COMPLETED]} == {0, kept}
+    rep = sched.stream_report
+    assert rep["terminal"] == {COMPLETED: 2, CANCELLED: 0, TIMED_OUT: 0,
+                               SHED: 1, FAILED: 0}
+    assert rep["admission"]["shed_by_class"] == {"best_effort": 1}
+    assert rep["conservation"]["balanced"]
+    assert rep["by_class"]["best_effort"]["shed"] == 1
+    assert rep["by_class"]["premium"]["completed"] == 1
+
+
+# ---------------------------------------------------------------------------
+# cancellation / timeout: terminal statuses + sibling bit-identity
+# ---------------------------------------------------------------------------
+
+def _serve_ids(reqs, **kw):
+    sched = make_scheduler(max_rows=16)
+    return {c.request_id: c for c in sched.serve_stream(reqs, **kw)}, sched
+
+
+def test_cancel_while_queued_frees_rows_and_keeps_siblings_bit_identical():
+    reqs = [ServeRequest(request_id=i, seq_len=8, num_samples=2, seed=50 + i,
+                         cancel_token=CancelToken()) for i in range(4)]
+    baseline, _ = _serve_ids([r for r in reqs if r.request_id != 2])
+    reqs[2].cancel_token.cancel()
+    got, sched = _serve_ids(reqs)
+    assert got[2].status == CANCELLED
+    assert got[2].tokens.shape == (0, 8)
+    for rid in (0, 1, 3):
+        assert got[rid].status == COMPLETED
+        np.testing.assert_array_equal(got[rid].tokens, baseline[rid].tokens)
+    rep = sched.stream_report
+    assert rep["terminal"][CANCELLED] == 1
+    assert rep["conservation"]["balanced"]
+
+
+def test_cancel_in_filling_bucket_via_queue_cancel():
+    clock = FakeClock()
+    q = AdmissionQueue(clock=clock)
+    keep = q.submit(seq_len=8, seed=1)
+    dead = q.submit(seq_len=8, seed=2)
+    assert q.cancel(dead)
+    q.close()
+    baseline, _ = _serve_ids(
+        [ServeRequest(request_id=keep, seq_len=8, seed=1)])
+    sched = make_scheduler(max_rows=16)
+    out = {c.request_id: c for c in sched.serve_stream(source=q, clock=clock)}
+    assert out[dead].status == CANCELLED
+    assert out[keep].status == COMPLETED
+    np.testing.assert_array_equal(out[keep].tokens, baseline[keep].tokens)
+
+
+def test_cancel_after_packing_masks_row_out_of_micro_batch():
+    """Cancel lands AFTER the micro-batch is packed and drafted (injected
+    right before the refine dispatch): the request's computed rows are
+    discarded, it resolves CANCELLED, and every sibling's tokens are
+    bit-identical to a run where it was never submitted — the
+    pack-invariance contract extended to mid-flight cancellation."""
+    reqs = [ServeRequest(request_id=i, seq_len=8, num_samples=2, seed=70 + i,
+                         cancel_token=CancelToken()) for i in range(3)]
+    baseline, _ = _serve_ids([r for r in reqs if r.request_id != 1])
+    sched = make_scheduler(max_rows=16)
+    sched._dispatch_fault_hook = \
+        lambda mb, attempt: reqs[1].cancel_token.cancel()
+    got = {c.request_id: c for c in sched.serve_stream(reqs)}
+    assert got[1].status == CANCELLED
+    for rid in (0, 2):
+        np.testing.assert_array_equal(got[rid].tokens, baseline[rid].tokens)
+    rep = sched.stream_report
+    assert rep["terminal"] == {COMPLETED: 2, CANCELLED: 1, TIMED_OUT: 0,
+                               SHED: 0, FAILED: 0}
+    assert rep["conservation"]["balanced"]
+
+
+def test_timeout_in_filling_bucket_resolves_timed_out():
+    clock = FakeClock()
+    q = AdmissionQueue(clock=clock)
+    q.submit(seq_len=8, seed=1, timeout_s=0.01)
+    keep = q.submit(seq_len=8, seed=2)
+    sched = make_scheduler(max_rows=16)
+    stream = sched.serve_stream(source=q, idle_timeout_s=0.05, clock=clock)
+    # queue stays open: the bucket waits on the idle timer while the
+    # fake clock ticks past the request's 10ms budget -> pruned
+    first = next(stream)
+    assert first.status == TIMED_OUT and first.request_id == 0
+    q.close()
+    rest = list(stream)
+    assert [c.request_id for c in rest] == [keep]
+    assert rest[0].status == COMPLETED
+    baseline, _ = _serve_ids(
+        [ServeRequest(request_id=keep, seq_len=8, seed=2)])
+    np.testing.assert_array_equal(rest[0].tokens, baseline[keep].tokens)
+    assert sched.stream_report["terminal"][TIMED_OUT] == 1
+
+
+def test_timeout_after_packing_masks_completed_rows():
+    clock = FakeClock()
+    reqs = [ServeRequest(request_id=0, seq_len=8, seed=5, timeout_s=0.5,
+                         arrival_s=clock.time() + 1e-9),
+            ServeRequest(request_id=1, seq_len=8, seed=6)]
+    sched = make_scheduler(max_rows=16)
+    # the dispatch "takes" 1s of fake time -> request 0 finishes past its
+    # budget and is masked out at completion
+    sched._dispatch_fault_hook = lambda mb, attempt: clock.sleep(1.0)
+    got = {c.request_id: c
+           for c in sched.serve_stream(reqs, clock=clock)}
+    assert got[0].status == TIMED_OUT
+    assert got[1].status == COMPLETED
+    baseline, _ = _serve_ids([ServeRequest(request_id=1, seq_len=8, seed=6)])
+    np.testing.assert_array_equal(got[1].tokens, baseline[1].tokens)
+
+
+# ---------------------------------------------------------------------------
+# priority classes: bucket separation, dispatch order, per-class report
+# ---------------------------------------------------------------------------
+
+def test_priority_rank_ordering():
+    assert priority_rank("premium") < priority_rank("standard") \
+        < priority_rank("best_effort")
+    with pytest.raises(ValueError):
+        priority_rank("platinum")
+
+
+def test_premium_micro_batches_dispatch_before_best_effort():
+    clock = FakeClock()
+    q = AdmissionQueue(clock=clock)
+    be = q.submit(seq_len=8, seed=1, priority="best_effort")
+    pr = q.submit(seq_len=8, seed=2, priority="premium")
+    q.close()
+    sched = make_scheduler(max_rows=16)
+    out = {c.request_id: c for c in sched.serve_stream(source=q, clock=clock)}
+    # classes never share a micro-batch, and premium refines first even
+    # though best_effort arrived first
+    assert out[pr].micro_batch < out[be].micro_batch
+    assert out[pr].priority == "premium"
+    assert sched.stream_report["num_micro_batches"] == 2
+
+
+def test_per_class_latency_and_slo_sections():
+    reqs = [
+        ServeRequest(request_id=0, seq_len=8, seed=1, priority="premium"),
+        ServeRequest(request_id=1, seq_len=8, seed=2, priority="premium"),
+        ServeRequest(request_id=2, seq_len=8, seed=3, priority="standard"),
+        ServeRequest(request_id=3, seq_len=8, seed=4, priority="best_effort"),
+    ]
+    sched = make_scheduler(max_rows=16)
+    out = list(sched.serve_stream(reqs, slo_ms=1e7))
+    assert all(c.status == COMPLETED for c in out)
+    rep = sched.stream_report
+    by_cls = rep["by_class"]
+    assert by_cls["premium"]["completed"] == 2
+    assert by_cls["premium"]["slo_attainment"] == 1.0
+    lat = by_cls["premium"]["latency_ms"]
+    assert lat["n"] == 2 and lat["p50"] <= lat["p95"] <= lat["p99"]
+    # best_effort has no deadline (class factor None): excluded from
+    # attainment, still measured
+    assert by_cls["best_effort"]["slo_attainment"] is None
+    assert by_cls["best_effort"]["latency_ms"]["n"] == 1
+    # and the best_effort request never armed a deadline
+    be = [c for c in out if c.priority == "best_effort"]
+    assert be[0].deadline_s is None and be[0].slo_met is None
+
+
+# ---------------------------------------------------------------------------
+# dispatch fault isolation: bounded backoff, FAILED containment
+# ---------------------------------------------------------------------------
+
+def test_transient_fault_retries_with_backoff_and_serves_bit_identical():
+    reqs = [ServeRequest(request_id=i, seq_len=8, seed=90 + i)
+            for i in range(2)]
+    baseline, _ = _serve_ids(reqs)
+    clock = RecordingClock()
+    sched = make_scheduler(
+        max_rows=16,
+        retry_policy=DispatchRetryPolicy(max_retries=2, backoff_base_s=0.07))
+    attempts = []
+
+    def hook(mb, attempt):
+        attempts.append(attempt)
+        if attempt == 0:
+            raise RuntimeError("transient device fault")
+
+    sched._dispatch_fault_hook = hook
+    got = {c.request_id: c for c in sched.serve_stream(reqs, clock=clock)}
+    assert attempts == [0, 1]
+    assert 0.07 in clock.sleeps          # backoff slept on the stream clock
+    for rid, c in got.items():
+        assert c.status == COMPLETED
+        np.testing.assert_array_equal(c.tokens, baseline[rid].tokens)
+    rep = sched.stream_report
+    assert rep["dispatch"]["retries"] == 1
+    assert rep["dispatch"]["failed_micro_batches"] == 0
+    assert rep["terminal"][FAILED] == 0
+
+
+def test_persistent_fault_fails_only_affected_micro_batch():
+    # two buckets -> two micro-batches; the 32-bucket one always faults
+    reqs = [ServeRequest(request_id=0, seq_len=8, seed=1),
+            ServeRequest(request_id=1, seq_len=30, seed=2),
+            ServeRequest(request_id=2, seq_len=8, seed=3)]
+    baseline, _ = _serve_ids([reqs[0], reqs[2]])
+    sched = make_scheduler(
+        max_rows=16,
+        retry_policy=DispatchRetryPolicy(max_retries=1, backoff_base_s=0.01))
+    clock = RecordingClock()
+
+    def hook(mb, attempt):
+        if mb.bucket_len == 32:
+            raise RuntimeError("persistent fault")
+
+    sched._dispatch_fault_hook = hook
+    got = {c.request_id: c for c in sched.serve_stream(reqs, clock=clock)}
+    assert got[1].status == FAILED
+    assert got[1].tokens.shape == (0, 30)
+    for rid in (0, 2):
+        assert got[rid].status == COMPLETED
+        np.testing.assert_array_equal(got[rid].tokens, baseline[rid].tokens)
+    rep = sched.stream_report
+    assert rep["dispatch"]["failed_micro_batches"] == 1
+    assert rep["dispatch"]["failed_requests"] == 1
+    assert rep["dispatch"]["retries"] == 1       # one retry, then give up
+    assert rep["terminal"][FAILED] == 1
+    assert rep["conservation"]["balanced"]
+    assert rep["by_class"]["standard"]["failed"] == 1
+
+
+def test_dispatch_retry_policy_validation_and_backoff_schedule():
+    p = DispatchRetryPolicy(max_retries=3, backoff_base_s=0.05,
+                            backoff_factor=2.0)
+    assert p.attempts == 4
+    assert [p.backoff_s(a) for a in range(3)] == [0.05, 0.1, 0.2]
+    assert p.worst_case_backoff_s == pytest.approx(0.35)
+    with pytest.raises(ValueError):
+        DispatchRetryPolicy(max_retries=-1)
+    with pytest.raises(ValueError):
+        DispatchRetryPolicy(backoff_factor=0.5)
+
+
+# ---------------------------------------------------------------------------
+# the batch-path failure re-queue (regression for the run() except path)
+# ---------------------------------------------------------------------------
+
+def test_batch_path_requeues_on_dispatch_failure_and_stays_retryable():
+    sched = make_scheduler(retry_policy=DispatchRetryPolicy(max_retries=0))
+    ids = [sched.submit(seq_len=8, seed=i) for i in range(3)]
+
+    def boom(mb, attempt):
+        raise RuntimeError("device fell over")
+
+    sched._dispatch_fault_hook = boom
+    with pytest.raises(DispatchFailure):
+        sched.run()
+    # every request is back in the queue, in order — none lost
+    assert [r.request_id for r in sched._queue] == ids
+    sched._dispatch_fault_hook = None
+    results, _ = sched.run()
+    assert set(results) == set(ids)
+    clean, _ = make_scheduler().serve_requests(
+        [ServeRequest(request_id=i, seq_len=8, seed=i) for i in range(3)])
+    for rid in ids:
+        np.testing.assert_array_equal(results[rid].tokens, clean[rid].tokens)
+
+
+def test_batch_path_raising_refine_fn_leaves_queue_retryable():
+    """The original scheduler re-queue contract, now under test: ANY
+    exception out of serve_requests (not just DispatchFailure) restores
+    the queue."""
+    sched = make_scheduler()
+    ids = [sched.submit(seq_len=8, seed=i) for i in range(2)]
+    real = sched._stage_refine
+    calls = {"n": 0}
+
+    def flaky(mb, x, flow_keys):
+        calls["n"] += 1
+        raise ValueError("not even a dispatch error")
+
+    sched._stage_refine = flaky
+    with pytest.raises(ValueError, match="not even"):
+        sched.run()
+    assert calls["n"] == 1
+    assert [r.request_id for r in sched._queue] == ids
+    sched._stage_refine = real
+    results, _ = sched.run()
+    assert set(results) == set(ids)
+
+
+# ---------------------------------------------------------------------------
+# FillingBucket.prune unit coverage
+# ---------------------------------------------------------------------------
+
+def test_filling_bucket_prune_removes_cancelled_and_expired():
+    fb = FillingBucket(8)
+    tok = CancelToken()
+    fb.add(ServeRequest(request_id=0, seq_len=8, arrival_s=0.0,
+                        cancel_token=tok), deadline_s=5.0)
+    fb.add(ServeRequest(request_id=1, seq_len=8, arrival_s=0.0,
+                        timeout_s=0.5), deadline_s=6.0)
+    fb.add(ServeRequest(request_id=2, seq_len=8, arrival_s=0.0),
+           deadline_s=7.0)
+    tok.cancel()
+    removed = fb.prune(now=1.0)
+    assert [(r.request_id, s) for r, s in removed] == [(0, CANCELLED),
+                                                       (1, TIMED_OUT)]
+    assert [r.request_id for r in fb.requests] == [2]
+    # the surviving request keeps ITS deadline (flush order unchanged)
+    assert fb.oldest_deadline_s == 7.0
+    fb.flush()
+    with pytest.raises(ValueError):
+        fb.prune(now=2.0)

@@ -55,6 +55,30 @@ def main(root: Path) -> None:
             f"({st['time_to_first_result_s']['p95']:.3f}s vs "
             f"{st['baseline_end_of_run_s']['p95']:.3f}s p95)",
             "BENCH_serving.json"))
+    ov = s.get("overload")
+    if ov:
+        adm = ov["admission"]
+        term = ov["terminal"]
+        cons = ov["conservation"]
+        att = ov["premium_slo_attainment"]
+        rows.append(row(
+            f"overload ({ov['offered']} offered @ ~2× capacity, "
+            f"depth-{ov['queue_depth']} queue)",
+            f"completed {term['completed']}, shed {adm['shed']}, "
+            f"rejected {adm['rejected']}, cancelled {term['cancelled']}, "
+            f"timed out {term['timed_out']}, failed {term['failed']} — "
+            f"conservation {'OK' if cons['balanced'] else 'BROKEN'}",
+            "BENCH_serving.json"))
+        be_p99 = ov.get("best_effort_p99_ms")
+        rows.append(row(
+            "overload per-class degradation",
+            f"premium attainment "
+            f"{'-' if att is None else format(att, '.0%')}, "
+            f"best_effort p99 "
+            f"{'-' if be_p99 is None else f'{be_p99:.0f} ms'}, "
+            f"dispatch retries {ov['dispatch']['retries']} "
+            f"(injected faults, exp backoff)",
+            "BENCH_serving.json"))
 
     d = json.loads((root / "BENCH_drafting.json").read_text())
     adaptive = d["adaptive_t0"]["mean_request_nfe"]
