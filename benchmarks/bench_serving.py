@@ -24,6 +24,16 @@ benchmarked arrival rate, and time-to-first-result against the
 end-of-run baseline (where every result lands only when the whole run
 finishes).
 
+The SPECULATIVE section drains the same fresh streams through
+``serve_stream`` twice on identically configured schedulers —
+speculation OFF vs ON — under a deterministic quality policy. Both
+sides pay the scoring pre-pass; the ON side additionally ships every
+request whose all-row probe scores clear the measured acceptance
+threshold with ZERO refine steps (terminal status ACCEPTED_DRAFT), and
+the gate requires its requests/s to be at least the non-speculative
+streaming baseline with accept rate > 0 and the conservation ledger
+balanced on both sides.
+
 The OVERLOAD section then offers ~2x the measured capacity through a
 bounded admission queue with mixed priority classes, mid-stream
 cancellations, per-request timeouts and injected transient dispatch
@@ -164,6 +174,106 @@ def run_streaming(sched, streams, *, slo_ms, rate_rps, seed=0):
         "flush_reasons": dict(sorted(reasons.items())),
         "last_pass": {k: v for k, v in last_report.items()
                       if k != "batches"},
+    }
+
+
+def run_speculative_streaming(model, params, draft_fn, warmup, streams, *,
+                              cold_nfe, max_rows, max_bucket, slo_ms,
+                              fused_block=1):
+    """Speculative draft-and-verify A/B on the streaming admission loop.
+
+    Two identically configured schedulers (same deterministic policy,
+    same warmup) drain the same fresh streams through ``serve_stream``
+    from a closed queue; the only difference is ``speculative``. The
+    policy's scorer is a synthetic per-row token statistic — cheap,
+    reproducible, and spread enough across requests that pinning the
+    acceptance threshold at the MEDIAN of the measured per-request min
+    probe scores accepts a deterministic ~half of eligible requests
+    (the accept-rate gate cannot flake on an untrained backbone).
+    Explicit-t0 requests in the stream stay ineligible, exercising the
+    eligibility accounting.
+    """
+    import jax.numpy as jnp
+
+    from repro.drafting import AdaptiveT0Policy, T0Calibration
+    from repro.serving import bucket_seq_len
+    from repro.serving.scheduler import _derive_row_keys
+
+    def scorer(x):
+        return jnp.asarray(x).mean(axis=1) / float(VOCAB - 1)
+
+    calib = T0Calibration(scores=(0.40, 0.60), t0s=(0.80, 0.90),
+                          t0_floor=0.80, t0_ceil=0.90)
+
+    # threshold from the measured draft-score distribution: the drafts
+    # the pre-pass will score are a pure function of (seed, row) — the
+    # same row-keyed fold_in streams the scheduler derives — so this
+    # exactly reproduces the scores the accept decision will see
+    mins = []
+    for stream in streams:
+        for req in stream:
+            if req.t0 is not None:      # explicit t0 demands refine
+                continue
+            blen = bucket_seq_len(req.seq_len, max_bucket=max_bucket)
+            keys, _ = _derive_row_keys(
+                jnp.asarray(np.full((req.num_samples,), req.seed, np.int32)),
+                jnp.asarray(np.arange(req.num_samples, dtype=np.int32)))
+            mins.append(float(np.asarray(scorer(draft_fn(keys, blen))).min()))
+    accept_score = float(np.median(mins))
+
+    def drain(speculative):
+        sched = WarmStartScheduler(
+            flow_model=model, flow_params=params, draft_fn=draft_fn,
+            cold_nfe=cold_nfe, default_t0=T0, max_rows=max_rows,
+            max_bucket=max_bucket, fused_block=fused_block,
+            t0_policy=AdaptiveT0Policy(scorer=scorer, calibration=calib,
+                                       t0_floor=calib.t0_floor),
+            per_row_t0=True, speculative=speculative,
+            accept_score=accept_score)
+        for w in warmup:                           # warm the jit caches
+            sched.serve_requests(w)
+        wall, accepted, eligible = 0.0, 0, 0
+        min_acc = None
+        conserved = True
+        for stream in streams:
+            queue = AdmissionQueue()
+            for req in stream:
+                queue.push(req)
+            queue.close()
+            t_start = time.perf_counter()
+            for _ in sched.serve_stream(source=queue, slo_ms=slo_ms,
+                                        idle_timeout_s=0.005):
+                pass
+            wall += time.perf_counter() - t_start
+            rep = sched.stream_report
+            conserved = conserved and rep["conservation"]["balanced"]
+            spec = rep["speculative"]
+            if spec:
+                accepted += spec["accepted"]
+                eligible += spec["eligible"]
+                if spec["min_accepted_score"] is not None:
+                    min_acc = (spec["min_accepted_score"] if min_acc is None
+                               else min(min_acc, spec["min_accepted_score"]))
+        n = sum(len(s) for s in streams)
+        out = {"wall_time_s": wall, "requests_per_s": n / wall,
+               "conservation_balanced": conserved}
+        if speculative:
+            out.update({
+                "accepted": accepted,
+                "eligible": eligible,
+                "accept_rate": accepted / eligible if eligible else 0.0,
+                "min_accepted_score": min_acc,
+            })
+        return out
+
+    off = drain(False)
+    on = drain(True)
+    return {
+        "accept_score": accept_score,
+        "off": off,
+        "on": on,
+        "speedup_requests_per_s": on["requests_per_s"]
+                                  / off["requests_per_s"],
     }
 
 
@@ -353,6 +463,13 @@ def main():
     streaming = run_streaming(sched, streams, slo_ms=slo_ms, rate_rps=rate,
                               seed=99)
 
+    # speculative draft-and-verify A/B on the streaming loop: identical
+    # schedulers + policy, speculation off vs on, closed-queue drain
+    speculative = run_speculative_streaming(
+        model, params, draft_fn, warmup, streams,
+        cold_nfe=args.cold_nfe, max_rows=max_rows, max_bucket=max_bucket,
+        slo_ms=slo_ms, fused_block=args.fused_block)
+
     # overload: 3x the per-pass request count offered at ~2x the measured
     # warm capacity, through a bounded queue with mixed priority classes
     overload = run_overload(
@@ -392,6 +509,7 @@ def main():
         },
         "speedup_requests_per_s": speedup,
         "streaming": streaming,
+        "speculative_streaming": speculative,
         "overload": overload,
         "guarantees_enforced": nfe_ok,
     }
@@ -426,6 +544,14 @@ def main():
           f"{fused_note}; per key: "
           + ", ".join(f"{k}={v['hits']}h/{v['misses']}m"
                       for k, v in jc["per_key"].items()))
+    sp_on, sp_off = speculative["on"], speculative["off"]
+    print(f"speculative: off {sp_off['requests_per_s']:.2f} req/s vs on "
+          f"{sp_on['requests_per_s']:.2f} req/s "
+          f"({speculative['speedup_requests_per_s']:.2f}x), accept rate "
+          f"{sp_on['accept_rate']:.0%} ({sp_on['accepted']}/"
+          f"{sp_on['eligible']} at score >= "
+          f"{speculative['accept_score']:.3f}), conservation "
+          f"{'OK' if sp_on['conservation_balanced'] and sp_off['conservation_balanced'] else 'BROKEN'}")
     term = overload["terminal"]
     patt = overload["premium_slo_attainment"]
     print(f"overload  : {overload['offered']} offered @ "
@@ -462,6 +588,29 @@ def main():
                 f"overload gate failed: best_effort p99 {be_p99:.0f}ms "
                 f"exceeds 3x SLO ({3 * slo_ms:.0f}ms) — degradation is "
                 f"not graceful")
+        if sp_on["requests_per_s"] < sp_off["requests_per_s"]:
+            raise SystemExit(
+                f"speculative gate failed: speculation-on streaming "
+                f"{sp_on['requests_per_s']:.2f} req/s is below the "
+                f"non-speculative baseline "
+                f"{sp_off['requests_per_s']:.2f} req/s")
+        if sp_on["accepted"] <= 0:
+            raise SystemExit(
+                "speculative gate failed: no request was accepted at the "
+                "median-pinned threshold — the draft-and-verify fast path "
+                "is not engaging")
+        if (sp_on["min_accepted_score"] is not None
+                and sp_on["min_accepted_score"]
+                < speculative["accept_score"]):
+            raise SystemExit(
+                f"speculative gate failed: accepted probe score "
+                f"{sp_on['min_accepted_score']:.3f} below threshold "
+                f"{speculative['accept_score']:.3f}")
+        if not (sp_on["conservation_balanced"]
+                and sp_off["conservation_balanced"]):
+            raise SystemExit(
+                "speculative gate failed: streaming conservation ledger "
+                "does not balance with speculation in the loop")
         if speedup < 1.1:
             raise SystemExit(
                 f"smoke threshold failed: scheduler speedup {speedup:.2f}x "

@@ -10,6 +10,10 @@ Three pillars (see README.md):
     draft/NFE cost-ratio accounting.
   * ``policy``     — per-request adaptive t0 (quality-matched warm-start
     times, binned so the serving jit cache stays bounded).
+  * ``bandit``     — contextual bandit over (t0, NFE) arms per
+    (bucket, score-bin) context, learning online from the verify-step
+    probe reward; interchangeable with ``AdaptiveT0Policy`` behind the
+    scheduler's policy protocol.
 """
 
 from repro.drafting.ar_engine import (
@@ -20,6 +24,7 @@ from repro.drafting.quality import (
     measure_cost_ratio,
 )
 from repro.drafting.policy import AdaptiveT0Policy, bin_t0
+from repro.drafting.bandit import BanditT0Policy, default_accept_score
 from repro.drafting.ref import oracle_generate_rows
 
 __all__ = [
@@ -28,5 +33,6 @@ __all__ = [
     "T0Calibration", "fit_t0_calibration", "make_quality_scorer",
     "measure_cost_ratio", "CostRatioReport",
     "AdaptiveT0Policy", "bin_t0",
+    "BanditT0Policy", "default_accept_score",
     "oracle_generate_rows",
 ]

@@ -19,13 +19,13 @@ intact:
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Optional
+import math
+from typing import Callable, Optional, Tuple
 
 import jax
 import numpy as np
 
 from repro.drafting.quality import T0Calibration
-from repro.serving.batcher import t0_bin
 
 
 def bin_t0(t0: float, *, width: float = 0.05, floor: float = 0.0) -> float:
@@ -36,13 +36,22 @@ def bin_t0(t0: float, *, width: float = 0.05, floor: float = 0.0) -> float:
     score asked for, so the per-request guarantee derived from the binned
     t0 dominates the calibrated intent.
 
-    The grid snap itself is :func:`repro.serving.batcher.t0_bin` — the
-    SAME function the batcher uses to form (bucket, t0-bin) group keys,
-    so a policy-binned t0 can never straddle a batcher bin edge.
+    The snap uses the same epsilon policy as
+    :func:`repro.serving.batcher.t0_bin` — the function the batcher uses
+    to form (bucket, t0-bin) group keys, so a policy-binned t0 (at the
+    default ``floor=0``) can never straddle a batcher bin edge. The
+    forgiveness epsilon is RELATIVE (scaled by ``t0 / width``) on top of
+    the absolute 1e-12: with small widths a t0 lying exactly on the grid
+    can otherwise land one ulp below ``k`` after the subtract/divide and
+    snap a whole bin down — below the calibration floor when the grid
+    starts there.
     """
     if width <= 0.0:
         return max(float(t0), floor)
-    return max(floor, floor + t0_bin(float(t0) - floor, width))
+    v = (float(t0) - floor) / width
+    eps = 1e-12 + (abs(float(t0)) / width) * 4e-15
+    k = math.floor(v + eps)
+    return max(floor, floor + max(k, 0) * width)
 
 
 @dataclasses.dataclass
@@ -66,14 +75,31 @@ class AdaptiveT0Policy:
 
     def t0_for_drafts(self, tokens) -> np.ndarray:
         """(B, N) draft tokens -> (B,) binned per-row t0."""
-        scores = np.asarray(self.scorer(tokens))
+        return self.scores_and_t0(tokens)[1]
+
+    def scores_and_t0(self, tokens) -> Tuple[np.ndarray, np.ndarray]:
+        """(B, N) draft tokens -> ((B,) probe scores, (B,) binned t0).
+
+        The policy-protocol entry point shared with
+        :class:`repro.drafting.bandit.BanditT0Policy`: one probe dispatch
+        yields both the per-row quality scores (which the scheduler's
+        speculative accept/reject stage compares against the acceptance
+        threshold) and the per-row warm-start times, so speculation never
+        pays a second probe.
+        """
+        scores = np.asarray(self.scorer(tokens), np.float64)
         t0 = self.calibration.t0_for_scores(scores)
-        return np.array(
+        return scores, np.array(
             [bin_t0(v, width=self.bin_width, floor=self.t0_floor)
              for v in t0], np.float64)
 
     def t0_for_request(self, tokens) -> float:
         """One t0 for a whole request: the MINIMUM over its sample rows —
-        the worst draft in the request dictates how shallow it enters
-        (all rows of a request share one schedule slice)."""
+        the worst draft in the request dictates how shallow the shared
+        schedule starts. This collapse is for callers that refine every
+        row on ONE schedule slice (the one-shot ``WarmStartServer.serve``
+        batch path); the scheduler's masked per-row refine scan supports
+        heterogeneous entry, so its pre-pass keeps the full
+        :meth:`t0_for_drafts` vector per request (``per_row_t0`` mode)
+        instead of calling this."""
         return float(self.t0_for_drafts(tokens).min())

@@ -47,6 +47,7 @@ def make_quality_scorer(
     *,
     t_probe: float = 0.5,
     temperature: float = 1.0,
+    probe_times: Optional[Sequence[float]] = None,
 ) -> Callable[[jax.Array], jax.Array]:
     """Build ``score(tokens (B, N)) -> (B,) mean per-token log-prob``.
 
@@ -55,16 +56,42 @@ def make_quality_scorer(
     mid-path time ``t_probe``, how much mass its ``p1`` prediction keeps
     on the draft's own tokens — the learned analogue of "how close is
     this draft to the data".
+
+    ``probe_times`` (2–3 values, e.g. ``(0.3, 0.5, 0.7)``) replaces the
+    single ``t_probe`` with a MULTI-TIME probe: the score is the mean of
+    the per-token log-prob over the probe times, one backbone evaluation
+    per time. Near-manifold drafts look good at every path time while a
+    single mid-path probe can be fooled by drafts that happen to sit
+    close to one time's marginal — averaging sharpens the separation
+    between the corruption tiers at a known, fixed extra cost
+    (``len(probe_times)`` NFE per scored batch instead of 1). The single
+    ``t_probe`` default is bit-identical to the pre-multi-time scorer.
     """
+    times = tuple(float(t) for t in
+                  (probe_times if probe_times is not None else (t_probe,)))
+    if not times:
+        raise ValueError("probe_times must name at least one probe time")
+    if any(not (0.0 < t < 1.0) for t in times):
+        raise ValueError(
+            f"probe times must lie in (0, 1), got {times}")
 
     @jax.jit
     def score(tokens: jax.Array) -> jax.Array:
         tokens = jnp.asarray(tokens, jnp.int32)
-        t = jnp.full((tokens.shape[0],), t_probe, jnp.float32)
-        logits = apply_fn(params, tokens, t).astype(jnp.float32) / temperature
-        logp = jax.nn.log_softmax(logits, axis=-1)
-        tok_lp = jnp.take_along_axis(logp, tokens[..., None], axis=-1)[..., 0]
-        return tok_lp.mean(axis=-1)
+
+        def one_time(tp: float) -> jax.Array:
+            t = jnp.full((tokens.shape[0],), tp, jnp.float32)
+            logits = (apply_fn(params, tokens, t).astype(jnp.float32)
+                      / temperature)
+            logp = jax.nn.log_softmax(logits, axis=-1)
+            tok_lp = jnp.take_along_axis(
+                logp, tokens[..., None], axis=-1)[..., 0]
+            return tok_lp.mean(axis=-1)
+
+        total = one_time(times[0])
+        for tp in times[1:]:
+            total = total + one_time(tp)
+        return total / len(times)
 
     return score
 

@@ -13,6 +13,16 @@ Drafting subsystem modes (see ``src/repro/drafting/``):
                   under the learned path and each request enters the
                   refine at its calibrated (binned) warm-start time.
                   Implies --scheduler.
+  --t0 bandit     contextual-bandit t0: per-(bucket, score-bin) arms
+                  over the calibrated t0 grid, learning online from the
+                  verify-step probe reward minus measured refine cost.
+                  Implies --scheduler.
+  --speculative   draft-and-verify fast path: requests whose every row
+                  clears the acceptance probe ship their drafts with 0
+                  refine NFE (ACCEPTED_DRAFT); rejected requests re-pack
+                  bit-identically to speculation-off serving. Implies
+                  --scheduler (needs --t0 auto/bandit; auto is enabled
+                  when neither was requested).
 
 Streaming / SLO admission modes (imply --scheduler):
   --stream           serve through the streaming admission loop
@@ -54,8 +64,23 @@ from repro.training import Trainer
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--t0", default="0.8",
-                    help="warm-start time in [0,1), or 'auto' for "
-                         "per-request quality-adaptive t0")
+                    help="warm-start time in [0,1), 'auto' for per-request "
+                         "quality-adaptive t0, or 'bandit' for the online "
+                         "contextual-bandit policy")
+    ap.add_argument("--speculative", action="store_true",
+                    help="speculative draft-and-verify: accept requests "
+                         "whose every row's probe score clears the "
+                         "acceptance threshold with ZERO refine steps; "
+                         "rejected requests serve bit-identically to "
+                         "speculation-off mode (implies --scheduler and "
+                         "an adaptive --t0 policy)")
+    ap.add_argument("--accept-score", type=float, default=None,
+                    help="speculative acceptance threshold on the probe "
+                         "score (default: the calibration's top anchor)")
+    ap.add_argument("--per-row-t0", action="store_true",
+                    help="per-ROW adaptive t0: rows of one request enter "
+                         "the shared refine scan at their own calibrated "
+                         "step instead of the request-min t0")
     ap.add_argument("--cold-nfe", type=int, default=32)
     ap.add_argument("--num", type=int, default=4)
     ap.add_argument("--seq-len", type=int, default=64)
@@ -99,10 +124,14 @@ def main():
                          "is shed first and carries no SLO deadline")
     args = ap.parse_args()
 
-    t0_auto = str(args.t0).lower() == "auto"
+    t0_mode = str(args.t0).lower()
+    if args.speculative and t0_mode not in ("auto", "bandit"):
+        print("--speculative needs an adaptive t0 policy; enabling --t0 auto")
+        t0_mode = "auto"
+    t0_auto = t0_mode in ("auto", "bandit")
     if (t0_auto or args.stream) and not args.scheduler:
-        print(f"--{'t0 auto' if t0_auto else 'stream'} implies --scheduler; "
-              "enabling it")
+        print(f"--{f't0 {t0_mode}' if t0_auto else 'stream'} implies "
+              "--scheduler; enabling it")
         args.scheduler = True
     # adaptive serving may go as shallow as the calibration floor (the
     # worst tier's target t0); train the flow path there so every served
@@ -167,13 +196,20 @@ def main():
         t0_policy = None
         if t0_auto:
             from repro.drafting import (
-                AdaptiveT0Policy, fit_t0_calibration, make_quality_scorer,
+                AdaptiveT0Policy, BanditT0Policy, fit_t0_calibration,
+                make_quality_scorer,
             )
 
             scorer = make_quality_scorer(model.dfm_apply, state.params)
             calib = fit_t0_calibration(scorer, data[:, :max_bucket],
                                        TEXT_VOCAB, seed=args.seed)
-            t0_policy = AdaptiveT0Policy(scorer=scorer, calibration=calib)
+            if t0_mode == "bandit":
+                t0_policy = BanditT0Policy(scorer=scorer, calibration=calib,
+                                           seed=args.seed)
+                print("t0 policy: contextual bandit over the calibrated "
+                      "grid (online verify-step reward)")
+            else:
+                t0_policy = AdaptiveT0Policy(scorer=scorer, calibration=calib)
             print(f"adaptive t0 calibration: scores {calib.scores} -> "
                   f"t0 {calib.t0s}")
         sched = WarmStartScheduler(
@@ -183,13 +219,21 @@ def main():
             default_t0=t0_train if t0_auto else float(args.t0),
             min_bucket=min(8, max_bucket), max_bucket=max_bucket,
             t0_policy=t0_policy,
+            per_row_t0=args.per_row_t0,
+            speculative=args.speculative,
+            accept_score=args.accept_score,
         )
+        if args.speculative:
+            print(f"speculative accept threshold: "
+                  f"score >= {sched.accept_score:.3f}")
         rng_sizes = np.random.default_rng(args.seed + 1)
         sizes = [int(rng_sizes.integers(max_bucket // 2, max_bucket + 1))
                  for _ in range(args.num)]
 
         if args.stream:
-            from repro.serving import COMPLETED, AdmissionQueue, QueueFull
+            from repro.serving import (
+                ACCEPTED_DRAFT, COMPLETED, AdmissionQueue, QueueFull,
+            )
 
             queue = AdmissionQueue(
                 max_depth=args.queue_depth or None)
@@ -221,6 +265,11 @@ def main():
                   f"timeout {args.timeout_ms or '-'} ms):")
             for res in sched.serve_stream(source=queue, slo_ms=args.slo_ms,
                                           idle_timeout_s=0.02):
+                if res.status == ACCEPTED_DRAFT:
+                    print(f"  [{res.request_id}] ACCEPTED_DRAFT nfe=0 "
+                          f"latency={res.latency_s * 1e3:.0f}ms  "
+                          f"{decode(np.asarray(res.tokens[0]))}")
+                    continue
                 if res.status != COMPLETED:
                     print(f"  [{res.request_id}] {res.status.upper()} "
                           f"({res.priority}, "
@@ -237,7 +286,8 @@ def main():
             rep = sched.stream_report
             lat = rep["latency_s"]
             att = rep["slo_attainment"]
-            print(f"\nstream: {rep['completed']} results in "
+            print(f"\nstream: {rep['completed'] + rep['accepted_draft']} "
+                  f"results ({rep['accepted_draft']} accepted drafts) in "
                   f"{rep['num_micro_batches']} micro-batches, "
                   f"first result at {rep['time_to_first_result_s']:.3f}s, "
                   f"latency p50/p95/p99 = {lat['p50'] * 1e3:.0f}/"
@@ -245,8 +295,16 @@ def main():
                   f"SLO attainment "
                   f"{'-' if att is None else f'{att:.0%}'}, "
                   f"flushes {rep['flush_reasons']}")
+            if rep.get("speculative"):
+                spec = rep["speculative"]
+                print(f"speculative: {spec['accepted']}/{spec['eligible']} "
+                      f"accepted (rate {spec['accept_rate']:.0%}, "
+                      f"threshold {spec['accept_score']:.3f})")
+            if rep.get("bandit"):
+                print(f"bandit arms: {len(rep['bandit'])} contexts learned")
             term = rep["terminal"]
-            if any(v for k, v in term.items() if k != COMPLETED):
+            if any(v for k, v in term.items()
+                   if k not in (COMPLETED, ACCEPTED_DRAFT)):
                 print(f"terminal: {term}; admission {rep['admission']}; "
                       f"conservation "
                       f"{'OK' if rep['conservation']['balanced'] else 'BROKEN'}")
@@ -266,6 +324,13 @@ def main():
               f"jit cache {rep['jit_cache']}")
         if t0_auto:
             print(f"adaptive t0 histogram: {rep['policy']['t0_histogram']}")
+        if rep.get("speculative"):
+            spec = rep["speculative"]
+            print(f"speculative: {spec['accepted']}/{spec['eligible']} "
+                  f"accepted (rate {spec['accept_rate']:.0%}, "
+                  f"threshold {spec['accept_score']:.3f})")
+        if rep.get("bandit"):
+            print(f"bandit arms: {len(rep['bandit'])} contexts learned")
         if engine is not None:
             print(f"draft engine: {engine.stats.as_dict()}")
         for rid in sorted(results)[:4]:

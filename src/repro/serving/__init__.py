@@ -1,6 +1,6 @@
 from repro.serving.batcher import (
-    CANCELLED, COMPLETED, DEADLINE_ARMED, DISPATCHED, FAILED, FILLING,
-    PRIORITY_CLASSES, SHED, TERMINAL_STATUSES, TIMED_OUT, CancelToken,
+    ACCEPTED_DRAFT, CANCELLED, COMPLETED, DEADLINE_ARMED, DISPATCHED, FAILED,
+    FILLING, PRIORITY_CLASSES, SHED, TERMINAL_STATUSES, TIMED_OUT, CancelToken,
     FillingBucket, MicroBatch, RowSpan, ServeRequest, bucket_seq_len,
     pack_requests, pad_rows, priority_rank, split_request, t0_bin,
     usable_rows,
@@ -25,8 +25,8 @@ __all__ = [
     "pack_requests", "t0_bin", "usable_rows", "split_request",
     "FillingBucket", "FILLING", "DEADLINE_ARMED", "DISPATCHED",
     "PRIORITY_CLASSES", "priority_rank", "CancelToken",
-    "COMPLETED", "CANCELLED", "TIMED_OUT", "SHED", "FAILED",
-    "TERMINAL_STATUSES",
+    "COMPLETED", "ACCEPTED_DRAFT", "CANCELLED", "TIMED_OUT", "SHED",
+    "FAILED", "TERMINAL_STATUSES",
     "WarmStartScheduler", "RequestResult", "CompletedRequest",
     "AdmissionQueue", "QueueClosed", "QueueFull",
     "DEFAULT_CLASS_SLO_FACTOR",

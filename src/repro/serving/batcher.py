@@ -57,14 +57,16 @@ def priority_rank(priority: str) -> int:
 
 # terminal request statuses (the request lifecycle state machine's exits):
 # every admitted request resolves to EXACTLY ONE of these — conservation
-# (offered == rejected + shed + completed + cancelled + timed_out +
-# failed) is gated by the overload bench.
+# (offered == rejected + shed + completed + accepted_draft + cancelled +
+# timed_out + failed) is gated by the overload bench.
 COMPLETED = "completed"     # tokens delivered, guarantee enforced
+ACCEPTED_DRAFT = "accepted_draft"   # speculative accept: draft shipped, 0 NFE
 CANCELLED = "cancelled"     # caller cancelled via CancelToken
 TIMED_OUT = "timed_out"     # per-request timeout_s expired
 SHED = "shed"               # evicted from a full bounded AdmissionQueue
 FAILED = "failed"           # refine dispatch failed after retry budget
-TERMINAL_STATUSES = (COMPLETED, CANCELLED, TIMED_OUT, SHED, FAILED)
+TERMINAL_STATUSES = (COMPLETED, ACCEPTED_DRAFT, CANCELLED, TIMED_OUT, SHED,
+                     FAILED)
 
 
 class CancelToken:
@@ -132,6 +134,12 @@ class ServeRequest:
     sample_offset: int = 0          # first sample index (chunks only)
     parent_id: Optional[int] = None     # original request id (chunks only)
     parent_samples: int = 0         # parent's total num_samples (chunks only)
+    # heterogeneous per-ROW warm-start times (adaptive per-row t0 mode):
+    # one t0 per sample row, resolved by the scheduler's scoring pre-pass.
+    # When set, `t0` must equal min(row_t0s) — the request-level value the
+    # batcher groups by and the guarantee bound is derived from; rows with
+    # deeper t0 enter the shared masked refine schedule later.
+    row_t0s: Tuple[float, ...] = ()
 
     def __post_init__(self):
         if self.seq_len < 1:
@@ -157,6 +165,19 @@ class ServeRequest:
                 f"chunk [{self.sample_offset}, "
                 f"{self.sample_offset + self.num_samples}) exceeds "
                 f"parent_samples {self.parent_samples}")
+        if self.row_t0s:
+            if len(self.row_t0s) != self.num_samples:
+                raise ValueError(
+                    f"row_t0s has {len(self.row_t0s)} entries for "
+                    f"num_samples {self.num_samples}")
+            if any(not (0.0 <= v < 1.0) for v in self.row_t0s):
+                raise ValueError(
+                    f"row_t0s must lie in [0, 1), got {self.row_t0s}")
+            if self.t0 is None or not math.isclose(
+                    self.t0, min(self.row_t0s), abs_tol=1e-12):
+                raise ValueError(
+                    f"t0 {self.t0} must equal min(row_t0s) "
+                    f"{min(self.row_t0s)} when per-row t0s are set")
 
     @property
     def root_id(self) -> int:
@@ -202,6 +223,9 @@ class MicroBatch:
     spans: Tuple[RowSpan, ...]
     padded_rows: int                # quantum-padded row count
     t0_spans: Tuple[float, ...] = ()  # per-span effective t0 (len(spans))
+    # per-span per-ROW t0 tuples (heterogeneous rows inside one request);
+    # empty tuples mean "homogeneous at the span's t0_spans value"
+    row_t0_spans: Tuple[Tuple[float, ...], ...] = ()
 
     def __post_init__(self):
         if not self.t0_spans:
@@ -210,6 +234,13 @@ class MicroBatch:
         elif len(self.t0_spans) != len(self.spans):
             raise ValueError(
                 f"t0_spans has {len(self.t0_spans)} entries for "
+                f"{len(self.spans)} spans")
+        if not self.row_t0_spans:
+            object.__setattr__(
+                self, "row_t0_spans", tuple(() for _ in self.spans))
+        elif len(self.row_t0_spans) != len(self.spans):
+            raise ValueError(
+                f"row_t0_spans has {len(self.row_t0_spans)} entries for "
                 f"{len(self.spans)} spans")
 
     @property
@@ -222,9 +253,17 @@ class MicroBatch:
         """(padded_rows,) float64 per-row effective t0. Padding rows get
         the batch's LARGEST t0 (fewest steps) so they can never extend
         the scan; their outputs are discarded anyway."""
-        t0s = np.full((self.padded_rows,), max(self.t0_spans), np.float64)
-        for span, t0 in zip(self.spans, self.t0_spans):
-            t0s[span.row_offset:span.row_offset + span.rows] = t0
+        pad_t0 = max(
+            max(rt) if rt else t0
+            for t0, rt in zip(self.t0_spans, self.row_t0_spans))
+        t0s = np.full((self.padded_rows,), pad_t0, np.float64)
+        for span, t0, rt in zip(self.spans, self.t0_spans,
+                                self.row_t0_spans):
+            lo = span.row_offset
+            if rt:
+                t0s[lo:lo + span.rows] = np.asarray(rt, np.float64)
+            else:
+                t0s[lo:lo + span.rows] = t0
         return t0s
 
     @property
@@ -310,10 +349,15 @@ def split_request(req: ServeRequest, *, max_rows: int, unit: int = 1,
     total = req.num_samples if req.parent_id is None else req.parent_samples
     for off in range(0, req.num_samples, cap):
         n = min(cap, req.num_samples - off)
+        # a chunk keeps its rows' own per-row t0 slice (its request-level
+        # t0 is that slice's min, like any per-row request)
+        row_t0s = req.row_t0s[off:off + n] if req.row_t0s else ()
         chunks.append(dataclasses.replace(
             req, request_id=alloc_id(), num_samples=n,
             sample_offset=req.sample_offset + off,
-            parent_id=parent, parent_samples=total))
+            parent_id=parent, parent_samples=total,
+            row_t0s=row_t0s,
+            t0=min(row_t0s) if row_t0s else req.t0))
     return chunks
 
 
@@ -440,10 +484,21 @@ def t0_bin(t0: float, bin_width: float) -> float:
     """Group label for a t0: the exact value when ``bin_width == 0``
     (legacy: only identical t0s share a micro-batch), else the lower edge
     of its bin — requests whose t0 fall in one bin share micro-batches
-    and refine on one masked per-row schedule."""
+    and refine on one masked per-row schedule.
+
+    The snap-down is forgiven a RELATIVE epsilon on ``t0 / bin_width``,
+    not just the absolute 1e-12: for small bins (width ~1e-4) one ulp of
+    the division result exceeds 1e-12, and a t0 lying EXACTLY on the grid
+    (``k * width`` up to float rounding) would snap a full bin below
+    itself — below the calibration floor when the grid starts there. An
+    intentional sub-grid offset (the t0 = 1 - 1e-12 edge case) is still
+    orders of magnitude above the relative term, so genuinely-below-edge
+    values keep snapping DOWN.
+    """
     if bin_width <= 0.0:
         return float(t0)
-    return math.floor(float(t0) / bin_width + 1e-12) * bin_width
+    v = float(t0) / bin_width
+    return math.floor(v + 1e-12 + abs(v) * 4e-15) * bin_width
 
 
 def pack_requests(
@@ -505,28 +560,30 @@ def pack_requests(
 
     batches: List[MicroBatch] = []
 
-    def emit(blen, spans, t0s, used):
+    def emit(blen, spans, t0s, row_t0s, used):
         t0_min = min(t0s)
         batches.append(MicroBatch(
             bucket_len=blen, t0=t0_min,
             n_steps=guarantees.warm_nfe(cold_nfe, t0_min),
             spans=tuple(spans), padded_rows=pad_rows(used, unit),
-            t0_spans=tuple(t0s),
+            t0_spans=tuple(t0s), row_t0_spans=tuple(row_t0s),
         ))
 
     for (blen, _bin, _cls), reqs in groups.items():
         spans: List[RowSpan] = []
         t0s: List[float] = []
+        row_t0s: List[Tuple[float, ...]] = []
         used = 0
         for req, t0 in reqs:
             # flush BEFORE the padded row count would exceed max_rows, so
             # padded_rows (the actual dispatch size) respects the cap
             if used and pad_rows(used + req.num_samples, unit) > max_rows:
-                emit(blen, spans, t0s, used)
-                spans, t0s, used = [], [], 0
+                emit(blen, spans, t0s, row_t0s, used)
+                spans, t0s, row_t0s, used = [], [], [], 0
             spans.append(RowSpan(request=req, row_offset=used))
             t0s.append(t0)
+            row_t0s.append(req.row_t0s)
             used += req.num_samples
         if spans:
-            emit(blen, spans, t0s, used)
+            emit(blen, spans, t0s, row_t0s, used)
     return batches

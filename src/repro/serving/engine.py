@@ -134,6 +134,18 @@ class PerNFECostModel:
             return self._per_key[key]
         return self._global
 
+    def cost_for_nfe(self, nfe: int, key=None) -> Optional[float]:
+        """Measured seconds attributed to an ``nfe``-step refine share —
+        the bandit's reward-costing hook. Unlike :meth:`estimate_s` this
+        prices EXACTLY ``nfe`` steps (0 steps cost 0.0 — a speculatively
+        accepted row spends nothing), so a per-row cost can be formed
+        from the row's own warm NFE while the dispatch is shared.
+        ``None`` until the first steady-state observation."""
+        if nfe <= 0:
+            return 0.0
+        per = self.per_nfe_s(key)
+        return None if per is None else per * nfe
+
     def estimate_s(self, key, nfe: int, *,
                    include_compile: bool = False) -> Optional[float]:
         """Estimated refine latency for an ``nfe``-step dispatch at

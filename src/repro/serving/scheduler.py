@@ -50,10 +50,10 @@ from repro.core.sampler import (
     scan_refine_loop, scan_refine_loop_rows,
 )
 from repro.serving.batcher import (
-    CANCELLED, COMPLETED, DRAFT_STREAM, FAILED, FLOW_STREAM, PRIORITY_CLASSES,
-    SHED, TIMED_OUT, CancelToken, FillingBucket, MicroBatch, ServeRequest,
-    bucket_seq_len, pack_requests, pad_rows, priority_rank, split_request,
-    usable_rows,
+    ACCEPTED_DRAFT, CANCELLED, COMPLETED, DRAFT_STREAM, FAILED, FLOW_STREAM,
+    PRIORITY_CLASSES, SHED, TIMED_OUT, CancelToken, FillingBucket, MicroBatch,
+    ServeRequest, bucket_seq_len, pack_requests, pad_rows, priority_rank,
+    split_request, usable_rows,
 )
 from repro.serving.engine import (
     DispatchFailure, DispatchRetryPolicy, PerNFECostModel,
@@ -74,7 +74,14 @@ DEFAULT_CLASS_SLO_FACTOR: Dict[str, Optional[float]] = {
 
 @dataclasses.dataclass(frozen=True)
 class RequestResult:
-    """Per-request output + the guarantee that was enforced for it."""
+    """Per-request output + the guarantee that was enforced for it.
+
+    ``nfe`` is the request-level NFE bound ``warm_nfe(cold_nfe, t0)`` —
+    with heterogeneous per-row t0 (``row_t0s`` non-empty) it is the
+    WORST row's step count; deeper rows spent fewer. ``nfe == 0`` marks
+    a speculatively ACCEPTED request: its draft cleared the acceptance
+    probe and shipped with zero refine steps (``micro_batch == -1``,
+    no guarantee machinery engaged — the guarantee holds vacuously)."""
 
     request_id: int
     tokens: np.ndarray              # (num_samples, seq_len) int32
@@ -82,6 +89,7 @@ class RequestResult:
     t0: float
     bucket_len: int
     micro_batch: int
+    row_t0s: Tuple[float, ...] = ()   # per-row t0 (per-row adaptive mode)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -354,14 +362,43 @@ class WarmStartScheduler:
         refine of batch k (off -> strictly serial, for debugging/timing).
       mesh: optional ``jax.sharding.Mesh``; enables the SERVE_RULES
         sharded refine dispatch. ``None`` is the single-device path.
-      t0_policy: optional :class:`repro.drafting.AdaptiveT0Policy`.
+      t0_policy: optional :class:`repro.drafting.AdaptiveT0Policy` or
+        :class:`repro.drafting.BanditT0Policy` (the two share the policy
+        protocol: ``scores_and_t0`` / ``t0_for_drafts`` + the
+        ``calibration`` / ``bin_width`` / ``t0_floor`` attributes).
         When set, requests submitted WITHOUT a t0 override are drafted in
         a scoring pre-pass, their warm-start time chosen from measured
         draft quality (binned — see ``t0_bin_width``), and the pre-pass
-        drafts are reused by the pipeline (never drafted twice).
+        drafts are reused by the pipeline (never drafted twice). A
+        bandit policy additionally receives an online reward per refined
+        row: the probe re-run on the refined tokens (the verify step)
+        minus the row's measured refine seconds priced by the per-NFE
+        cost model.
       t0_bin_width: grouping bin for per-request t0 values (see
         ``batcher.pack_requests``); defaults to ``t0_policy.bin_width``
         when a policy is given, else 0 (exact-t0 grouping).
+      per_row_t0: keep the pre-pass's per-ROW t0 vector instead of
+        collapsing a request to its min — rows enter the shared masked
+        refine scan at their OWN step index (the scan already supports
+        heterogeneous entry), so a request with one poor and three good
+        drafts no longer pays the poor row's step count on every row.
+        The request-level guarantee bound stays ``warm_nfe(cold_nfe,
+        min(row_t0s))``.
+      speculative: enable the draft-and-verify fast path: after the
+        scoring pre-pass, a request whose EVERY row's probe score clears
+        ``accept_score`` ships its drafts directly — zero refine steps,
+        terminal status ``ACCEPTED_DRAFT`` (batch path: ``nfe == 0``).
+        Rejected requests re-pack into the normal (bucket, t0-bin,
+        priority) warm-start path bit-identical to speculation-disabled
+        serving: per-row fold_in PRNG streams and NFE schedules are
+        functions of each request alone, and the same
+        ``require_row_guarantees`` gate runs on every dispatch. Only
+        requests WITHOUT a t0 override are eligible (an explicit t0 is a
+        demand for refine; oversize chunks resolve their t0 at admission
+        and are likewise never accepted). Requires ``t0_policy``.
+      accept_score: speculative acceptance threshold on the probe score;
+        ``None`` uses the policy's own (bandit) or the calibration's top
+        anchor score (the pretty-good tier's mean).
     """
 
     def __init__(
@@ -384,6 +421,9 @@ class WarmStartScheduler:
         t0_bin_width: Optional[float] = None,
         retry_policy: Optional[DispatchRetryPolicy] = None,
         class_slo_factor: Optional[Dict[str, Optional[float]]] = None,
+        per_row_t0: bool = False,
+        speculative: bool = False,
+        accept_score: Optional[float] = None,
     ):
         if cold_nfe < 1:
             raise ValueError(f"cold_nfe must be >= 1, got {cold_nfe}")
@@ -406,6 +446,37 @@ class WarmStartScheduler:
             t0_bin_width = (getattr(t0_policy, "bin_width", 0.0)
                             if t0_policy is not None else 0.0)
         self.t0_bin_width = float(t0_bin_width)
+        self.per_row_t0 = bool(per_row_t0)
+        self.speculative = bool(speculative)
+        if self.speculative and t0_policy is None:
+            raise ValueError(
+                "speculative serving needs a t0_policy: acceptance is "
+                "decided by the policy's quality probe")
+        if accept_score is None and t0_policy is not None:
+            accept_score = getattr(t0_policy, "accept_score", None)
+            if accept_score is None:
+                cal = getattr(t0_policy, "calibration", None)
+                scores = getattr(cal, "scores", None)
+                if scores:
+                    accept_score = float(scores[-1])
+        self.accept_score = (None if accept_score is None
+                             else float(accept_score))
+        if self.speculative and self.accept_score is None:
+            raise ValueError(
+                "speculative serving needs an accept_score (none given "
+                "and the policy carries no calibration to derive one)")
+        # bandit mode: the policy learns online from refined outcomes
+        self._bandit_mode = (t0_policy is not None
+                             and hasattr(t0_policy, "update")
+                             and hasattr(t0_policy, "scorer"))
+        # request_id -> (bucket_len, per-row draft probe scores): the
+        # context each in-flight row's arm was selected under, consumed
+        # when its refined reward is observed (bandit mode only)
+        self._row_scores: Dict[int, Tuple[int, np.ndarray]] = {}
+        self._reward_probes = 0         # refined-batch probe dispatches
+        # lifetime speculative counters (per-run deltas in reports)
+        self._spec_eligible = 0
+        self._spec_accepted = 0
 
         self._queue: List[ServeRequest] = []
         self._next_id = 0
@@ -652,7 +723,43 @@ class WarmStartScheduler:
             bucket_len=mb.bucket_len, rows=mb.rows)
         t_flow = time.perf_counter() - t0
         self.cost_model.observe(key, t_flow, len(ts), compiled=was_miss)
+        # bandit verify step AFTER the cost observation so the reward
+        # probe's own time never poisons the per-NFE refine EWMA
+        if self._bandit_mode and self._row_scores:
+            self._observe_rewards(mb, x)
         return x, t_flow
+
+    def _observe_rewards(self, mb: MicroBatch, x) -> None:
+        """Bandit reward observation for one refined micro-batch (the
+        VERIFY step): re-run the quality probe on the refined tokens
+        (one backbone evaluation per micro-batch, amortised over all its
+        rows) and feed each row's arm the refined score minus that row's
+        refine seconds priced by the measured per-NFE cost model — the
+        bandit optimizes measured wall time, not a step-count proxy.
+        Rows whose (bucket, draft-score) context was not recorded in the
+        pre-pass (explicit-t0 requests, chunks) are skipped."""
+        pending = [(span, self._row_scores.pop(span.request.request_id))
+                   for span in mb.spans
+                   if span.request.request_id in self._row_scores]
+        if not pending:
+            return
+        refined = np.asarray(self.t0_policy.scorer(x))
+        self._reward_probes += 1
+        row_t0s = mb.row_t0s
+        cold_s = self.cost_model.cost_for_nfe(self.cold_nfe)
+        for span, (blen, draft_scores) in pending:
+            for r in range(span.rows):
+                t0r = float(row_t0s[span.row_offset + r])
+                nfe_r = guarantees.warm_nfe(self.cold_nfe, t0r)
+                row_s = self.cost_model.cost_for_nfe(nfe_r, mb.compile_key)
+                if row_s is not None and cold_s:
+                    cost_norm = row_s / cold_s
+                else:
+                    cost_norm = nfe_r / self.cold_nfe
+                self.t0_policy.update(
+                    blen, float(draft_scores[r]), t0r,
+                    quality_score=float(refined[span.row_offset + r]),
+                    cost_norm=cost_norm)
 
     # ---- jit-cache / fused-dispatch reporting ----------------------------
 
@@ -708,10 +815,27 @@ class WarmStartScheduler:
         Drafts every request at its bucket length (row-keyed, batched per
         bucket), scores the drafts of requests WITHOUT a t0 override, and
         resolves their warm-start time through the policy. Returns
-        ``(resolved_requests, predrafted, policy_report)`` — the drafts
-        are kept and reused by the pipeline (requests are never drafted
-        twice), identical to what the draft stage would have produced
-        because the pre-pass derives the same per-row key streams.
+        ``(resolved_requests, predrafted, policy_report, accepted)`` —
+        the drafts are kept and reused by the pipeline (requests are
+        never drafted twice), identical to what the draft stage would
+        have produced because the pre-pass derives the same per-row key
+        streams.
+
+        **Speculative accept/reject** (``speculative=True``): a scored
+        request whose EVERY row's probe score clears ``accept_score`` is
+        pulled out of ``resolved_requests`` and returned in ``accepted``
+        (``[{"request", "tokens", "t0", "scores"}]`` — tokens at bucket
+        length); it never packs, never refines, never touches the PRNG
+        or schedule of any other request. Rejected requests resolve
+        exactly as with speculation off: the policy selects their t0
+        BEFORE any accept decision is applied, so a rejected request's
+        (t0, keys, schedule) — and therefore its output bytes — are
+        identical to a speculation-disabled run.
+
+        In bandit mode the pre-pass also records each scored row's
+        (bucket, draft-score) context for the reward observed when its
+        refined micro-batch completes, and credits acceptances to the
+        bandit's accept counters.
         """
         t_start = time.perf_counter()
         by_bucket: Dict[int, List[ServeRequest]] = {}
@@ -722,7 +846,10 @@ class WarmStartScheduler:
 
         predrafted: Dict[int, np.ndarray] = {}
         resolved_t0: Dict[int, float] = {}
+        resolved_rows: Dict[int, Tuple[float, ...]] = {}
+        accepted_info: Dict[int, dict] = {}
         scored = 0
+        eligible = 0
         for blen, reqs in sorted(by_bucket.items()):
             seeds, idx, offsets = [], [], {}
             for req in reqs:
@@ -739,29 +866,73 @@ class WarmStartScheduler:
                 rows = np.concatenate([
                     x[offsets[r.request_id]:offsets[r.request_id] + r.num_samples]
                     for r in need_score])
-                t0_rows = self.t0_policy.t0_for_drafts(rows)
+                if hasattr(self.t0_policy, "scores_and_t0"):
+                    scores_rows, t0_rows = \
+                        self.t0_policy.scores_and_t0(rows)
+                else:
+                    scores_rows = None
+                    t0_rows = self.t0_policy.t0_for_drafts(rows)
                 at = 0
                 for r in need_score:
-                    resolved_t0[r.request_id] = float(
-                        t0_rows[at:at + r.num_samples].min())
+                    rs = t0_rows[at:at + r.num_samples]
+                    sc = (None if scores_rows is None
+                          else scores_rows[at:at + r.num_samples])
                     at += r.num_samples
+                    if self.speculative and sc is not None:
+                        eligible += 1
+                        if float(sc.min()) >= self.accept_score:
+                            accepted_info[r.request_id] = {
+                                "t0": float(rs.min()),
+                                "scores": np.array(sc),
+                            }
+                            if self._bandit_mode:
+                                for s in sc:
+                                    self.t0_policy.observe_accept(
+                                        blen, float(s))
+                            continue
+                    if self._bandit_mode and sc is not None:
+                        self._row_scores[r.request_id] = (blen, np.array(sc))
+                    if self.per_row_t0:
+                        resolved_rows[r.request_id] = tuple(
+                            float(v) for v in rs)
+                    resolved_t0[r.request_id] = float(rs.min())
                 scored += len(need_score)
             for req in reqs:
                 o = offsets[req.request_id]
                 predrafted[req.request_id] = x[o:o + req.num_samples]
 
-        resolved = [
-            req if req.t0 is not None
-            else dataclasses.replace(req, t0=resolved_t0[req.request_id])
-            for req in requests
-        ]
+        resolved: List[ServeRequest] = []
+        accepted: List[dict] = []
+        for req in requests:
+            info = accepted_info.get(req.request_id)
+            if info is not None:
+                accepted.append({
+                    "request": req,
+                    "tokens": predrafted[req.request_id],
+                    "t0": info["t0"],
+                    "scores": info["scores"],
+                })
+                continue
+            if req.t0 is not None:
+                resolved.append(req)
+            else:
+                resolved.append(dataclasses.replace(
+                    req, t0=resolved_t0[req.request_id],
+                    row_t0s=resolved_rows.get(req.request_id, ())))
+        self._spec_eligible += eligible
+        self._spec_accepted += len(accepted)
         report = {
             "scored_requests": scored,
             "prepass_time_s": time.perf_counter() - t_start,
             "t0_histogram": dict(sorted(_histogram(
                 list(resolved_t0.values())).items())),
+            "speculative": (None if not self.speculative else {
+                "eligible": eligible,
+                "accepted": len(accepted),
+                "accept_score": self.accept_score,
+            }),
         }
-        return resolved, predrafted, report
+        return resolved, predrafted, report, accepted
 
     def serve_requests(
         self, requests: Sequence[ServeRequest]
@@ -772,8 +943,9 @@ class WarmStartScheduler:
         wall0 = time.perf_counter()
         policy_report = None
         predrafted = None
+        accepted: List[dict] = []
         if self.t0_policy is not None:
-            requests_resolved, predrafted, policy_report = \
+            requests_resolved, predrafted, policy_report, accepted = \
                 self._policy_prepass(requests)
         else:
             requests_resolved = list(requests)
@@ -787,6 +959,19 @@ class WarmStartScheduler:
             t0_bin_width=self.t0_bin_width)
 
         results: Dict[int, RequestResult] = {}
+        # speculatively accepted requests terminate HERE: the pre-pass
+        # drafts (sliced to the request's own seq_len) are the result,
+        # zero refine steps, never packed (micro_batch == -1)
+        for acc in accepted:
+            req = acc["request"]
+            results[req.request_id] = RequestResult(
+                request_id=req.request_id,
+                tokens=np.asarray(acc["tokens"])[:, :req.seq_len],
+                nfe=0, t0=acc["t0"],
+                bucket_len=bucket_seq_len(req.seq_len,
+                                          min_bucket=self.min_bucket,
+                                          max_bucket=self.max_bucket),
+                micro_batch=-1)
         batch_reports: List[dict] = []
         cache_snap = self._jit_cache_snapshot()
         # pre-pass drafting+scoring counts as draft-stage time; it is
@@ -802,7 +987,8 @@ class WarmStartScheduler:
             draft_total += t_draft
             flow_total += t_flow
             x_host = np.asarray(x)
-            for span, span_t0 in zip(mb.spans, mb.t0_spans):
+            for span, span_t0, span_rows in zip(mb.spans, mb.t0_spans,
+                                                mb.row_t0_spans):
                 req = span.request
                 results[req.request_id] = RequestResult(
                     request_id=req.request_id,
@@ -810,7 +996,8 @@ class WarmStartScheduler:
                                   :req.seq_len],
                     nfe=guarantees.warm_nfe(self.cold_nfe, span_t0),
                     t0=span_t0,
-                    bucket_len=mb.bucket_len, micro_batch=k)
+                    bucket_len=mb.bucket_len, micro_batch=k,
+                    row_t0s=span_rows)
             batch_reports.append({
                 "micro_batch": k,
                 "bucket_len": mb.bucket_len,
@@ -844,7 +1031,17 @@ class WarmStartScheduler:
         overlapped = max(0.0, draft_total + flow_total - wall)
         denom = min(draft_total, flow_total)
         rows = sum(mb.rows for mb in batches)
-        nfe_values = [r.nfe for r in results.values()]
+
+        def req_mean_nfe(r: RequestResult) -> float:
+            # per-row adaptive mode: a request's NFE spend is the mean
+            # over its rows' own step counts (r.nfe stays the worst-row
+            # bound); accepted requests spent 0
+            if r.row_t0s:
+                return float(np.mean([
+                    guarantees.warm_nfe(self.cold_nfe, t) for t in r.row_t0s]))
+            return float(r.nfe)
+
+        nfe_values = [req_mean_nfe(r) for r in results.values()]
         report = {
             "num_requests": len(requests),
             "num_micro_batches": len(batches),
@@ -864,8 +1061,25 @@ class WarmStartScheduler:
             "mesh": None if self.mesh is None else dict(self.mesh.shape),
             "adaptive_t0": self.t0_policy is not None,
             "policy": policy_report,
+            "speculative": (None if not self.speculative else {
+                "enabled": True,
+                "eligible": policy_report["speculative"]["eligible"],
+                "accepted": len(accepted),
+                "accept_rate": (
+                    len(accepted) / policy_report["speculative"]["eligible"]
+                    if policy_report["speculative"]["eligible"] else 0.0),
+                "accept_score": self.accept_score,
+                # worst probe score that shipped unrefined — must sit at
+                # or above accept_score (benches gate on this)
+                "min_accepted_score": (
+                    min(float(np.min(a["scores"])) for a in accepted)
+                    if accepted else None),
+            }),
+            "bandit": (self.t0_policy.arm_stats()
+                       if self._bandit_mode else None),
             "batches": batch_reports,
         }
+        self._row_scores.clear()
         return results, report
 
     # ---- streaming / SLO-aware admission ---------------------------------
@@ -942,9 +1156,15 @@ class WarmStartScheduler:
         reqs = fb.flush()               # deadline order
         predrafted = None
         if self.t0_policy is not None:
-            reqs, predrafted, prep = self._policy_prepass(reqs)
+            reqs, predrafted, prep, accepted = self._policy_prepass(reqs)
             stats["scored_requests"] += prep["scored_requests"]
             stats["prepass_time_s"] += prep["prepass_time_s"]
+            # speculatively accepted requests skip packing entirely; the
+            # serving loop yields them as ACCEPTED_DRAFT terminals
+            for acc in accepted:
+                acc["reason"] = reason
+                acc["flushed_s"] = now
+            stats["accepted_pending"].extend(accepted)
         batches = pack_requests(
             reqs, cold_nfe=self.cold_nfe, default_t0=self.default_t0,
             max_rows=self.max_rows, min_bucket=self.min_bucket,
@@ -1054,12 +1274,14 @@ class WarmStartScheduler:
         partials: Dict[int, dict] = {}  # parent_id -> chunk reassembly
         stats = {"scored_requests": 0, "prepass_time_s": 0.0,
                  "flush_reasons": {}, "split_requests": 0,
-                 "failed_micro_batches": 0, "dropped_micro_batches": 0}
+                 "failed_micro_batches": 0, "dropped_micro_batches": 0,
+                 "accepted_pending": []}
         mb_reports: List[dict] = []
         latencies: List[float] = []
         slo_total = slo_met_n = 0
         completed_n = 0
         admitted_n = 0
+        spec_min_score: Optional[float] = None
         draft_total = flow_total = 0.0
         t_first: Optional[float] = None
         first_arrival_s: Optional[float] = None
@@ -1073,10 +1295,12 @@ class WarmStartScheduler:
         # the stream report)
         resolved: set = set()
         terminal_counts = {s: 0 for s in
-                           (COMPLETED, CANCELLED, TIMED_OUT, SHED, FAILED)}
+                           (COMPLETED, ACCEPTED_DRAFT, CANCELLED, TIMED_OUT,
+                            SHED, FAILED)}
         by_class: Dict[str, dict] = {
-            c: {"completed": 0, "shed": 0, "cancelled": 0, "timed_out": 0,
-                "failed": 0, "latencies": [], "slo_total": 0, "slo_met": 0}
+            c: {"completed": 0, "accepted_draft": 0, "shed": 0,
+                "cancelled": 0, "timed_out": 0, "failed": 0,
+                "latencies": [], "slo_total": 0, "slo_met": 0}
             for c in PRIORITY_CLASSES}
 
         def class_deadline(req: ServeRequest) -> Optional[float]:
@@ -1206,7 +1430,8 @@ class WarmStartScheduler:
             })
             x_host = np.asarray(x)
             out = []
-            for span, span_t0 in zip(mb.spans, mb.t0_spans):
+            for span, span_t0, span_rows in zip(mb.spans, mb.t0_spans,
+                                                mb.row_t0_spans):
                 req = span.request
                 if req.root_id in resolved:
                     continue    # already terminal (a sibling chunk's fate)
@@ -1261,6 +1486,7 @@ class WarmStartScheduler:
                     request_id=rid, tokens=tokens,
                     nfe=guarantees.warm_nfe(self.cold_nfe, span_t0),
                     t0=span_t0, bucket_len=mb.bucket_len, micro_batch=k,
+                    row_t0s=(span_rows if chunks == 1 else ()),
                     arrival_s=arrival, finished_s=finished_s,
                     latency_s=latency, flush_reason=pending["reason"],
                     deadline_s=deadline, slo_met=met, chunks=chunks,
@@ -1328,6 +1554,59 @@ class WarmStartScheduler:
                             ready.extend(
                                 self._flush_bucket(fb, reason, now, stats))
                             del filling[fkey]
+                    # speculative accepts terminate here: the pre-pass
+                    # drafts ship as ACCEPTED_DRAFT terminals with zero
+                    # refine steps — rejected siblings already re-packed
+                    # above, bit-identical to speculation-off serving
+                    while stats["accepted_pending"]:
+                        acc = stats["accepted_pending"].pop(0)
+                        req = acc["request"]
+                        now_a = clock.time()
+                        if req.root_id in resolved:
+                            continue
+                        if req.cancelled:
+                            item = terminal(req, CANCELLED, now_a)
+                            if item is not None:
+                                yield item
+                            continue
+                        if req.expired(now_a):
+                            item = terminal(req, TIMED_OUT, now_a)
+                            if item is not None:
+                                yield item
+                            continue
+                        resolved.add(req.request_id)
+                        s_min = float(np.min(acc["scores"]))
+                        spec_min_score = (
+                            s_min if spec_min_score is None
+                            else min(spec_min_score, s_min))
+                        deadline = class_deadline(req)
+                        met = None if deadline is None else now_a <= deadline
+                        if met is not None:
+                            slo_total += 1
+                            slo_met_n += int(met)
+                        latency = now_a - req.arrival_s
+                        latencies.append(latency)
+                        terminal_counts[ACCEPTED_DRAFT] += 1
+                        cls = by_class[req.priority]
+                        cls["accepted_draft"] += 1
+                        cls["latencies"].append(latency)
+                        if deadline is not None:
+                            cls["slo_total"] += 1
+                            cls["slo_met"] += int(met)
+                        if t_first is None:
+                            t_first = now_a
+                        yield CompletedRequest(
+                            request_id=req.request_id,
+                            tokens=np.asarray(acc["tokens"])[:, :req.seq_len],
+                            nfe=0, t0=acc["t0"],
+                            bucket_len=bucket_seq_len(
+                                req.seq_len, min_bucket=self.min_bucket,
+                                max_bucket=self.max_bucket),
+                            micro_batch=-1,
+                            arrival_s=req.arrival_s, finished_s=now_a,
+                            latency_s=latency, flush_reason=acc["reason"],
+                            deadline_s=deadline, slo_met=met, chunks=1,
+                            status=ACCEPTED_DRAFT, priority=req.priority)
                     # pipeline: draft of the NEXT micro-batch overlaps the
                     # refine of the current one (same structure as the
                     # batch path's worker thread)
@@ -1383,12 +1662,13 @@ class WarmStartScheduler:
         resolved_total = sum(terminal_counts.values())
         by_class_report = {}
         for cname, cs in by_class.items():
-            if not any((cs["completed"], cs["shed"], cs["cancelled"],
-                        cs["timed_out"], cs["failed"])):
+            if not any((cs["completed"], cs["accepted_draft"], cs["shed"],
+                        cs["cancelled"], cs["timed_out"], cs["failed"])):
                 continue
             lat = cs["latencies"]
             by_class_report[cname] = {
-                "completed": cs["completed"], "shed": cs["shed"],
+                "completed": cs["completed"],
+                "accepted_draft": cs["accepted_draft"], "shed": cs["shed"],
                 "cancelled": cs["cancelled"], "timed_out": cs["timed_out"],
                 "failed": cs["failed"],
                 "slo_attainment": (cs["slo_met"] / cs["slo_total"]
@@ -1402,6 +1682,7 @@ class WarmStartScheduler:
             "streaming": True,
             "num_requests": admitted_n,
             "completed": completed_n,
+            "accepted_draft": terminal_counts[ACCEPTED_DRAFT],
             "num_micro_batches": len(mb_reports),
             "split_requests": stats["split_requests"],
             "flush_reasons": dict(sorted(stats["flush_reasons"].items())),
@@ -1428,6 +1709,18 @@ class WarmStartScheduler:
             "policy": (None if self.t0_policy is None else
                        {"scored_requests": stats["scored_requests"],
                         "prepass_time_s": stats["prepass_time_s"]}),
+            "speculative": (None if not self.speculative else {
+                "enabled": True,
+                "accepted": terminal_counts[ACCEPTED_DRAFT],
+                "eligible": stats["scored_requests"],
+                "accept_rate": (
+                    terminal_counts[ACCEPTED_DRAFT] / stats["scored_requests"]
+                    if stats["scored_requests"] else 0.0),
+                "accept_score": self.accept_score,
+                "min_accepted_score": spec_min_score,
+            }),
+            "bandit": (self.t0_policy.arm_stats()
+                       if self._bandit_mode else None),
             # overload-hardening sections: the admission ledger, terminal
             # status counts, per-class outcomes/latency and the exact
             # conservation check (offered == rejected + every terminal)
@@ -1451,6 +1744,7 @@ class WarmStartScheduler:
             },
             "batches": mb_reports,
         }
+        self._row_scores.clear()
 
 
 def _histogram(values: List[float]) -> Dict[str, int]:

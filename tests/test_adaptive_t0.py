@@ -3,6 +3,7 @@ per-row guarantee accounting, t0-binned packing, the scheduler policy
 pre-pass, float-edge warm_nfe/refine_schedule behaviour, and the
 batch-keyed vs row-keyed draft determinism contract."""
 
+import math
 import warnings
 
 import jax
@@ -215,6 +216,55 @@ def test_bin_t0_snaps_down_only():
     assert bin_t0(0.87, width=0.0) == 0.87              # no binning
 
 
+def test_bin_t0_grid_points_are_fixed_points():
+    """t0 == floor + k*width must bin to ITSELF, not a full bin below:
+    with an absolute epsilon, one ulp of t0/width (large at small
+    widths) exceeds it and the floor() lands at k-1 — binning a request
+    a whole bin shallower than calibrated. Regression for the relative
+    epsilon fix, at the widths where the absolute one breaks."""
+    for floor in (0.0, 0.3, 0.5):
+        for width in (1e-4, 1e-3, 0.05, 0.1):
+            for k in (1, 7, 5011, 4999):
+                t0 = floor + k * width
+                if not (0.0 <= t0 < 1.0):
+                    continue
+                got = bin_t0(t0, width=width, floor=floor)
+                assert got == pytest.approx(t0, abs=width * 1e-6), (
+                    f"floor={floor} width={width} k={k}")
+                # idempotent: a binned value re-bins to itself
+                assert bin_t0(got, width=width, floor=floor) == \
+                    pytest.approx(got, abs=width * 1e-6)
+    # the original failure: floor=0.3, width=1e-4, k=5011 ->
+    # t0=0.8011 used to bin to 0.8010 (one full bin down)
+    assert bin_t0(0.3 + 5011 * 1e-4, width=1e-4, floor=0.3) == \
+        pytest.approx(0.8011, abs=1e-10)
+
+
+def test_bin_t0_near_one_never_snaps_up():
+    """The relative epsilon must stay below the gap to the next grid
+    point: t0 = 1 - 1e-12 (a legal warm start) may never round UP to an
+    illegal t0 = 1.0 bin."""
+    for width in (0.05, 0.1, 0.25):
+        got = bin_t0(1.0 - 1e-12, width=width)
+        assert got < 1.0
+        # snaps DOWN to the last grid point strictly below 1
+        assert got == pytest.approx((math.ceil(1.0 / width) - 1) * width
+                                    if (1.0 / width) % 1 else
+                                    (round(1.0 / width) - 1) * width)
+    assert t0_bin(1.0 - 1e-12, 0.05) < 1.0
+
+
+def test_t0_bin_small_width_grid_idempotent():
+    """batcher.t0_bin at width=1e-4: every grid point is a fixed point
+    (same relative-epsilon fix as policy.bin_t0)."""
+    width = 1e-4
+    for k in (1, 4999, 5011, 9000):
+        t0 = k * width
+        assert t0_bin(t0, width) == pytest.approx(t0, abs=width * 1e-6)
+        assert t0_bin(t0_bin(t0, width), width) == \
+            pytest.approx(t0_bin(t0, width), abs=width * 1e-6)
+
+
 # ---------------------------------------------------------------------------
 # scheduler policy pre-pass (adaptive t0)
 # ---------------------------------------------------------------------------
@@ -308,6 +358,69 @@ def test_batch_keyed_draft_is_pack_variant_row_keyed_is_not():
     rk_alone = _serve_target(uniform_draft(11), False)
     rk_packed = _serve_target(uniform_draft(11), True)
     np.testing.assert_array_equal(rk_alone, rk_packed)
+
+
+# ---------------------------------------------------------------------------
+# multi-time probe (satellite)
+# ---------------------------------------------------------------------------
+
+def _mode_apply(params, tokens, t):
+    """Toy backbone: logits peaked on token 2, confidence growing with t.
+    Rows made of 2s (the 'data manifold') probe high; corrupted rows
+    keep fewer 2s and probe low — at EVERY probe time."""
+    base = jnp.zeros(tokens.shape + (11,)).at[..., 2].set(10.0)
+    return base * (0.5 + t)[:, None, None]
+
+
+def test_multi_time_probe_single_default_bit_identical():
+    from repro.drafting import make_quality_scorer
+    toks = jax.random.randint(jax.random.key(0), (4, 8), 0, 11, jnp.int32)
+    s1 = make_quality_scorer(_mode_apply, {}, t_probe=0.5)
+    s2 = make_quality_scorer(_mode_apply, {}, probe_times=(0.5,))
+    np.testing.assert_array_equal(np.asarray(s1(toks)), np.asarray(s2(toks)))
+
+
+def test_multi_time_probe_validates_times():
+    from repro.drafting import make_quality_scorer
+    with pytest.raises(ValueError, match="at least one"):
+        make_quality_scorer(_mode_apply, {}, probe_times=())
+    with pytest.raises(ValueError, match=r"\(0, 1\)"):
+        make_quality_scorer(_mode_apply, {}, probe_times=(0.3, 1.0))
+
+
+def test_multi_time_probe_separates_tiers_and_averages():
+    from repro.drafting import make_quality_scorer
+    clean = jnp.full((4, 8), 2, jnp.int32)
+    dirty = jax.random.randint(jax.random.key(1), (4, 8), 0, 11, jnp.int32)
+    multi = make_quality_scorer(_mode_apply, {}, probe_times=(0.3, 0.5, 0.7))
+    assert float(np.asarray(multi(clean)).min()) > \
+        float(np.asarray(multi(dirty)).max())
+    # the multi-time score IS the mean of the single-time scores
+    singles = [make_quality_scorer(_mode_apply, {}, t_probe=tp)
+               for tp in (0.3, 0.5, 0.7)]
+    expect = np.mean([np.asarray(s(dirty)) for s in singles], axis=0)
+    np.testing.assert_allclose(np.asarray(multi(dirty)), expect,
+                               rtol=1e-6)
+
+
+def test_multi_time_probe_calibration_monotone_and_clamped():
+    """Regression (satellite): fitting the score -> t0 calibration from
+    a MULTI-TIME probe still yields ascending anchor scores, monotone
+    non-decreasing t0s, and a mapping clamped to [t0_floor, t0_ceil]."""
+    from repro.drafting import fit_t0_calibration, make_quality_scorer
+    scorer = make_quality_scorer(_mode_apply, {},
+                                 probe_times=(0.3, 0.5, 0.7))
+    data = np.full((64, 8), 2, np.int64)       # the toy manifold
+    cal = fit_t0_calibration(scorer, data, 11, num_per_tier=16, seed=0)
+    assert list(cal.scores) == sorted(cal.scores)
+    assert list(cal.t0s) == sorted(cal.t0s)    # monotone non-decreasing
+    # clamped outside the anchored range, interpolated inside
+    lo, hi = cal.scores[0], cal.scores[-1]
+    assert cal.t0_for_score(lo - 100.0) == cal.t0_floor
+    assert cal.t0_for_score(hi + 100.0) == cal.t0_ceil
+    mids = cal.t0_for_scores(np.linspace(lo, hi, 9))
+    assert (np.diff(mids) >= -1e-12).all()
+    assert ((mids >= cal.t0_floor) & (mids <= cal.t0_ceil)).all()
 
 
 def test_batch_keyed_draft_warns_once():

@@ -1,0 +1,341 @@
+"""Speculative draft-and-verify serving + bandit t0 policy.
+
+Covers the PR's core invariants: rejected requests' outputs are
+bit-identical to speculation-disabled serving (batch and stream paths),
+accepted requests ship their drafts with zero refine steps and every
+accepted row's probe score clears the threshold, the streaming
+conservation ledger balances with ``ACCEPTED_DRAFT`` as a terminal
+status, the bandit snapshot/restore round-trips the full learning state,
+and per-ROW adaptive t0 serves each row at its own calibrated depth.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.guarantees import warm_nfe
+from repro.drafting import (
+    AdaptiveT0Policy, BanditT0Policy, T0Calibration, default_accept_score,
+)
+from repro.serving import (
+    ACCEPTED_DRAFT, COMPLETED, TERMINAL_STATUSES, AdmissionQueue,
+    ServeRequest, WarmStartScheduler, uniform_draft,
+)
+
+VOCAB = 11
+
+
+class ToyFlow:
+    def dfm_apply(self, params, x, t, extras=None):
+        return jnp.zeros(x.shape + (VOCAB,)).at[..., 2].set(30.0)
+
+
+def fake_scorer(toks):
+    # deterministic per-row score: mean token value scaled into [0, 1.1)
+    return jnp.asarray(toks, jnp.float32).mean(axis=-1) / 10.0
+
+
+CALIB = T0Calibration(scores=(0.1, 0.9), t0s=(0.5, 0.9),
+                      t0_floor=0.5, t0_ceil=0.9)
+
+
+def make_policy(bin_width=0.1):
+    return AdaptiveT0Policy(scorer=fake_scorer, calibration=CALIB,
+                            bin_width=bin_width)
+
+
+def make_bandit(**kw):
+    kw.setdefault("bin_width", 0.1)
+    return BanditT0Policy(scorer=fake_scorer, calibration=CALIB, **kw)
+
+
+def make_scheduler(**kw):
+    return WarmStartScheduler(
+        flow_model=ToyFlow(), flow_params={},
+        draft_fn=kw.pop("draft_fn", uniform_draft(VOCAB)),
+        cold_nfe=kw.pop("cold_nfe", 20),
+        default_t0=kw.pop("default_t0", 0.8), **kw)
+
+
+REQS = [dict(seq_len=8, num_samples=2, seed=i) for i in range(6)]
+
+
+def _split_threshold():
+    """An accept_score that deterministically splits REQS into accepted
+    and rejected (between the per-request min scores' extremes). Scores
+    each request's drafts exactly as the pre-pass does."""
+    from repro.serving.scheduler import _derive_row_keys
+    mins = []
+    for r in REQS:
+        keys, _ = _derive_row_keys(
+            jnp.asarray(np.full((r["num_samples"],), r["seed"], np.int32)),
+            jnp.asarray(np.arange(r["num_samples"], dtype=np.int32)))
+        x = uniform_draft(VOCAB)(keys, 8)
+        mins.append(float(np.asarray(fake_scorer(x)).min()))
+    lo, hi = min(mins), max(mins)
+    assert hi > lo            # seeds give distinct draft qualities
+    return (lo + hi) / 2.0
+
+
+# ---------------------------------------------------------------------------
+# batch path
+# ---------------------------------------------------------------------------
+
+def test_rejected_requests_bit_identical_batch_path():
+    thr = _split_threshold()
+    runs = []
+    for spec in (False, True):
+        sched = make_scheduler(t0_policy=make_policy(), speculative=spec,
+                               accept_score=thr)
+        for r in REQS:
+            sched.submit(**r)
+        runs.append(sched.run())
+    (res_off, _), (res_on, rep_on) = runs
+    spec = rep_on["speculative"]
+    assert spec["enabled"] and 0 < spec["accepted"] < len(REQS)
+    assert spec["accept_rate"] == spec["accepted"] / spec["eligible"]
+    seen_accept = seen_reject = False
+    for rid in res_off:
+        r_off, r_on = res_off[rid], res_on[rid]
+        if r_on.nfe == 0:                    # speculatively accepted
+            seen_accept = True
+            assert r_on.micro_batch == -1
+            # every accepted row's probe score clears the threshold
+            scores = np.asarray(fake_scorer(r_on.tokens))
+            assert (scores >= thr).all()
+        else:                                # rejected -> normal path
+            seen_reject = True
+            np.testing.assert_array_equal(r_off.tokens, r_on.tokens)
+            assert r_off.nfe == r_on.nfe and r_off.t0 == r_on.t0
+    assert seen_accept and seen_reject
+
+
+def test_accepted_tokens_are_the_drafts():
+    """Acceptance ships the pre-pass drafts verbatim (0 refine steps) —
+    the same rows speculation-off would have ENTERED the refine with."""
+    thr = _split_threshold()
+    sched = make_scheduler(t0_policy=make_policy(), speculative=True,
+                           accept_score=thr)
+    rids = [sched.submit(**r) for r in REQS]
+    results, _ = sched.run()
+    from repro.serving.scheduler import _derive_row_keys
+    hit = 0
+    for rid, r in zip(rids, REQS):
+        if results[rid].nfe != 0:
+            continue
+        hit += 1
+        keys, _ = _derive_row_keys(
+            jnp.asarray(np.full((r["num_samples"],), r["seed"], np.int32)),
+            jnp.asarray(np.arange(r["num_samples"], dtype=np.int32)))
+        drafts = np.asarray(uniform_draft(VOCAB)(keys, 8))
+        np.testing.assert_array_equal(results[rid].tokens,
+                                      drafts[:, :r["seq_len"]])
+    assert hit > 0
+
+
+def test_explicit_t0_requests_never_accepted():
+    sched = make_scheduler(t0_policy=make_policy(), speculative=True,
+                           accept_score=-100.0)    # would accept anything
+    auto = sched.submit(seq_len=8, seed=1)
+    fixed = sched.submit(seq_len=8, seed=2, t0=0.75)
+    results, rep = sched.run()
+    assert results[auto].nfe == 0                  # scored and accepted
+    assert results[fixed].nfe == warm_nfe(20, 0.75)  # override: refined
+    assert rep["speculative"]["eligible"] == 1
+
+
+def test_speculative_requires_policy_and_threshold():
+    with pytest.raises(ValueError, match="needs a t0_policy"):
+        make_scheduler(speculative=True)
+    # a policy without calibration-derived threshold must be explicit
+    sched = make_scheduler(t0_policy=make_policy(), speculative=True)
+    assert sched.accept_score == default_accept_score(CALIB)
+
+
+# ---------------------------------------------------------------------------
+# streaming path
+# ---------------------------------------------------------------------------
+
+def test_rejected_requests_bit_identical_stream_and_conservation():
+    thr = _split_threshold()
+
+    def stream(spec):
+        sched = make_scheduler(t0_policy=make_policy(), speculative=spec,
+                               accept_score=thr)
+        reqs = [ServeRequest(request_id=i, **r) for i, r in enumerate(REQS)]
+        out = {c.request_id: c for c in sched.serve_stream(reqs)}
+        return out, sched.stream_report
+
+    out_off, _ = stream(False)
+    out_on, rep = stream(True)
+    assert rep["terminal"][ACCEPTED_DRAFT] > 0
+    assert set(rep["terminal"]) == set(TERMINAL_STATUSES)
+    # conservation: offered == rejected + every terminal, with
+    # ACCEPTED_DRAFT counted as a terminal resolution
+    assert rep["conservation"]["balanced"]
+    assert (rep["terminal"][COMPLETED] + rep["terminal"][ACCEPTED_DRAFT]
+            == len(REQS))
+    for rid, c_off in out_off.items():
+        c_on = out_on[rid]
+        if c_on.status == ACCEPTED_DRAFT:
+            assert c_on.nfe == 0 and c_on.micro_batch == -1
+            assert (np.asarray(fake_scorer(c_on.tokens)) >= thr).all()
+        else:
+            assert c_on.status == COMPLETED
+            np.testing.assert_array_equal(c_off.tokens, c_on.tokens)
+            assert c_off.nfe == c_on.nfe and c_off.t0 == c_on.t0
+    spec = rep["speculative"]
+    assert spec["accepted"] == rep["terminal"][ACCEPTED_DRAFT]
+    assert rep["accepted_draft"] == spec["accepted"]
+
+
+def test_cancelled_accepted_request_resolves_cancelled():
+    """A cancel that lands before the accept drains wins: the request
+    resolves CANCELLED, not ACCEPTED_DRAFT, and conservation holds."""
+    thr = -100.0                       # accept everything eligible
+    sched = make_scheduler(t0_policy=make_policy(), speculative=True,
+                           accept_score=thr)
+    queue = AdmissionQueue()
+    rid = queue.submit(seq_len=8, num_samples=2, seed=1)
+    queue.cancel(rid)
+    queue.close()
+    out = {c.request_id: c for c in sched.serve_stream(source=queue)}
+    assert out[rid].status == "cancelled"
+    assert sched.stream_report["conservation"]["balanced"]
+    assert sched.stream_report["terminal"][ACCEPTED_DRAFT] == 0
+
+
+# ---------------------------------------------------------------------------
+# bandit policy
+# ---------------------------------------------------------------------------
+
+def test_bandit_arms_never_shallower_than_calibrated():
+    """Every arm a context can serve is >= the calibrated lookup's t0,
+    so the bandit's mean NFE can only improve on the static policy."""
+    pol = make_bandit()
+    static = make_policy()
+    toks = np.asarray(
+        uniform_draft(VOCAB)(jax.random.split(jax.random.key(0), 16), 8))
+    scores = np.asarray(fake_scorer(toks), np.float64)
+    for _ in range(8):                 # exercise exploration too
+        t0s = pol.select(8, scores)
+        cal = static.t0_for_drafts(toks)
+        assert (t0s >= cal - 1e-12).all()
+        assert (t0s <= CALIB.t0_ceil + 1e-12).all()
+
+
+def test_bandit_prior_reproduces_calibrated_policy_greedily():
+    """Fresh epsilon-greedy bandit with epsilon=0: the prior makes the
+    calibrated arm strictly best, so selection IS the calibrated t0."""
+    pol = make_bandit(exploration="epsilon", epsilon=0.0)
+    static = make_policy()
+    toks = np.asarray(
+        uniform_draft(VOCAB)(jax.random.split(jax.random.key(1), 8), 8))
+    scores = np.asarray(fake_scorer(toks), np.float64)
+    np.testing.assert_allclose(pol.select(8, scores),
+                               static.t0_for_drafts(toks))
+
+
+def test_bandit_learns_deeper_arm_from_reward():
+    pol = make_bandit(exploration="epsilon", epsilon=0.0, cost_weight=0.5)
+    score = 0.5                        # mid context
+    deep = CALIB.t0_ceil
+    # deep arm refines just as well but costs less -> higher reward
+    for _ in range(12):
+        pol.update(8, score, deep, quality_score=0.9, cost_norm=0.1)
+    t0 = pol.select(8, np.asarray([score]))[0]
+    assert t0 == pytest.approx(0.9)
+
+
+def test_bandit_snapshot_restore_round_trip():
+    pol = make_bandit(exploration="epsilon", epsilon=0.3, seed=7)
+    scores = np.linspace(0.1, 0.9, 16)
+    pol.select(8, scores)
+    pol.select(16, scores)
+    for s in scores[:8]:
+        pol.update(8, float(s), 0.9, quality_score=0.8, cost_norm=0.2)
+    pol.observe_accept(8, 0.9)
+    snap = pol.snapshot()
+    import json
+    snap = json.loads(json.dumps(snap))        # must survive JSON
+    fresh = make_bandit(exploration="epsilon", epsilon=0.3, seed=999)
+    fresh.restore(snap)
+    assert fresh.arm_stats() == pol.arm_stats()
+    # the exploration RNG stream continues identically after restore
+    np.testing.assert_allclose(fresh.select(8, scores), pol.select(8, scores))
+    assert fresh.arm_stats() == pol.arm_stats()
+
+
+def test_bandit_restore_rejects_grid_mismatch_and_bad_version():
+    pol = make_bandit()
+    snap = pol.snapshot()
+    other = make_bandit(bin_width=0.05)
+    with pytest.raises(ValueError, match="grid"):
+        other.restore(snap)
+    bad = dict(snap, version=99)
+    with pytest.raises(ValueError, match="version"):
+        pol.restore(bad)
+
+
+def test_bandit_scheduler_end_to_end_rewards_flow():
+    """Bandit behind the scheduler: rewards from the verify probe land in
+    the served arms and the report exposes the per-arm stats."""
+    pol = make_bandit(exploration="epsilon", epsilon=0.0)
+    sched = make_scheduler(t0_policy=pol, per_row_t0=True)
+    # single-sample requests: each row is served at its OWN selected arm
+    # (multi-row request-min collapse would serve better rows below
+    # their arm, which rightly earns no credit)
+    for i in range(8):
+        sched.submit(seq_len=8, num_samples=1, seed=i)
+    _, rep = sched.run()
+    stats = rep["bandit"]
+    assert stats                        # contexts materialised
+    pulled = sum(a["count"] for ctx in stats.values()
+                 for a in ctx["arms"].values())
+    # every refined row reported a reward on top of the priors
+    priors = len(stats) * pol.prior_weight
+    assert pulled == pytest.approx(priors + 8)
+
+
+# ---------------------------------------------------------------------------
+# per-row t0 (satellite)
+# ---------------------------------------------------------------------------
+
+def test_per_row_t0_serves_rows_at_own_depth():
+    sched = make_scheduler(t0_policy=make_policy(), per_row_t0=True)
+    rid = sched.submit(seq_len=8, num_samples=4, seed=3)
+    results, rep = sched.run()
+    r = results[rid]
+    assert len(r.row_t0s) == 4
+    assert r.t0 == pytest.approx(min(r.row_t0s))
+    assert r.nfe == warm_nfe(20, r.t0)          # bound = worst row
+    # the report charges the MEAN over rows, <= the worst-row bound
+    mean_nfe = np.mean([warm_nfe(20, t) for t in r.row_t0s])
+    assert rep["mean_request_nfe"] == pytest.approx(mean_nfe)
+    assert rep["mean_request_nfe"] <= r.nfe
+
+
+def test_per_row_t0_tokens_match_request_min_mode():
+    """Row outputs under per-row entry are bit-identical to the same
+    rows served alone at their own t0 (the masked-scan invariance), and
+    requests where all rows agree match request-min mode exactly."""
+    outs = []
+    for per_row in (False, True):
+        sched = make_scheduler(t0_policy=make_policy(), per_row_t0=per_row)
+        rid = sched.submit(seq_len=8, num_samples=3, seed=11)
+        results, _ = sched.run()
+        outs.append(results[rid])
+    a, b = outs
+    if len(set(b.row_t0s)) == 1:        # homogeneous rows: identical serve
+        np.testing.assert_array_equal(a.tokens, b.tokens)
+    # each per-row-served row == that row served alone at its own t0
+    for i, t0_row in enumerate(b.row_t0s):
+        sched = make_scheduler()
+        solo = sched.submit(seq_len=8, seed=11, t0=t0_row)
+        # align the row's PRNG stream via sample_offset
+        sched._queue[-1] = ServeRequest(
+            request_id=solo, seq_len=8, num_samples=1, seed=11,
+            t0=t0_row, sample_offset=i)
+        res, _ = sched.run()
+        np.testing.assert_array_equal(b.tokens[i], res[solo].tokens[0])

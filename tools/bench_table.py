@@ -55,6 +55,16 @@ def main(root: Path) -> None:
             f"({st['time_to_first_result_s']['p95']:.3f}s vs "
             f"{st['baseline_end_of_run_s']['p95']:.3f}s p95)",
             "BENCH_serving.json"))
+    sp = s.get("speculative_streaming")
+    if sp:
+        on, off = sp["on"], sp["off"]
+        rows.append(row(
+            "speculative streaming vs same policy w/o speculation",
+            f"{sp['speedup_requests_per_s']:.2f}× requests/s "
+            f"({on['requests_per_s']:.1f} vs {off['requests_per_s']:.1f}), "
+            f"accept rate {on['accept_rate']:.0%} "
+            f"({on['accepted']}/{on['eligible']})",
+            "BENCH_serving.json"))
     ov = s.get("overload")
     if ov:
         adm = ov["admission"]
@@ -92,6 +102,15 @@ def main(root: Path) -> None:
         f"{adaptive:.1f} vs {fixed:.1f} mean NFE/request "
         f"(−{100 * (1 - adaptive / fixed):.0f}%)",
         "BENCH_drafting.json"))
+    bs = d.get("bandit_speculative")
+    if bs:
+        rows.append(row(
+            "bandit t0 + speculative accept vs calibrated lookup",
+            f"{bs['mean_request_nfe']:.1f} vs {adaptive:.1f} mean "
+            f"NFE/request "
+            f"(−{d['speculative_nfe_reduction_pct']:.0f}%), accept rate "
+            f"{bs['accept_rate']:.0%} ({bs['accepted']}/{bs['eligible']})",
+            "BENCH_drafting.json"))
 
     print("| metric | current number (CPU smoke run) | source |")
     print("|---|---|---|")
