@@ -42,9 +42,16 @@ while the cheap tier is shed, best_effort p99 bounded, and the terminal
 accounting exactly conserved (offered == rejected + completed + shed +
 cancelled + timed_out + failed).
 
+The TRACING section A/Bs the streaming drain with the default no-op
+``NullTracer`` against a live ``SpanTracer`` ring (spans, instants and
+per-request flow arrows all recorded) on identically configured
+schedulers, and gates that tracing-enabled throughput stays >= 0.9x the
+tracing-disabled baseline — observability must not tax the serve path.
+
 Writes ``BENCH_serving.json`` (per-stage latency, overlap efficiency,
 jit-cache hit counts, requests/s for both engines, the speedup, the
-streaming latency columns, and the overload section).
+streaming latency columns, the overload section, and the tracing
+overhead ratio).
 
 Run:  PYTHONPATH=src python benchmarks/bench_serving.py [--smoke] [--out F]
 """
@@ -376,6 +383,54 @@ def run_overload(sched, *, n_offered, rate_rps, slo_ms, max_bucket,
     }
 
 
+def run_tracing_overhead(model, params, draft_fn, warmup, streams, *,
+                         cold_nfe, max_rows, slo_ms, fused_block=1):
+    """Tracer-overhead A/B on the streaming admission loop.
+
+    Two identically configured schedulers (same warmup) drain the same
+    fresh streams through ``serve_stream`` from closed queues; the only
+    difference is the tracer — the default no-op :class:`NullTracer` vs
+    a live :class:`SpanTracer` ring recording every span, instant and
+    per-request flow arrow. The metrics registry is on for BOTH sides
+    (it is structural: the stream report is derived from it), so the
+    ratio isolates exactly what ``--trace-out`` adds. The smoke gate
+    requires tracing-on throughput >= 0.9x tracing-off.
+    """
+    from repro.obs import SpanTracer
+
+    def drain(tracer):
+        sched = WarmStartScheduler(
+            flow_model=model, flow_params=params, draft_fn=draft_fn,
+            cold_nfe=cold_nfe, default_t0=T0, max_rows=max_rows,
+            fused_block=fused_block, tracer=tracer)
+        for w in warmup:                           # warm the jit caches
+            sched.serve_requests(w)
+        wall = 0.0
+        for stream in streams:
+            queue = AdmissionQueue(metrics=sched.metrics)
+            for req in stream:
+                queue.push(req)
+            queue.close()
+            t_start = time.perf_counter()
+            for _ in sched.serve_stream(source=queue, slo_ms=slo_ms,
+                                        idle_timeout_s=0.005):
+                pass
+            wall += time.perf_counter() - t_start
+        n = sum(len(s) for s in streams)
+        return wall, n / wall
+
+    off_wall, off_rps = drain(None)                # NullTracer default
+    tracer = SpanTracer(capacity=65536)
+    on_wall, on_rps = drain(tracer)
+    return {
+        "off": {"wall_time_s": off_wall, "requests_per_s": off_rps},
+        "on": {"wall_time_s": on_wall, "requests_per_s": on_rps,
+               "spans_emitted": tracer.emitted,
+               "spans_dropped": tracer.dropped},
+        "throughput_ratio_on_vs_off": on_rps / off_rps,
+    }
+
+
 def run_one_shot_baseline(model, params, draft_fn, warmup, streams, *,
                           cold_nfe):
     """Serve each request alone through the one-shot WarmStartServer at
@@ -477,6 +532,13 @@ def main():
         rate_rps=2.0 * n_requests / warm_wall, slo_ms=slo_ms,
         max_bucket=max_bucket, queue_depth=6, seed=7)
 
+    # tracing-overhead A/B: NullTracer vs a live SpanTracer ring on the
+    # same streaming drain — the observability layer must stay cheap
+    tracing = run_tracing_overhead(
+        model, params, draft_fn, warmup, streams,
+        cold_nfe=args.cold_nfe, max_rows=max_rows, slo_ms=slo_ms,
+        fused_block=args.fused_block)
+
     speedup = sched_rps / base_rps
     # cross-check every served request's NFE against an independent
     # recomputation of the paper guarantee for its effective t0
@@ -511,6 +573,7 @@ def main():
         "streaming": streaming,
         "speculative_streaming": speculative,
         "overload": overload,
+        "tracing_overhead": tracing,
         "guarantees_enforced": nfe_ok,
     }
     with open(args.out, "w") as f:
@@ -567,7 +630,21 @@ def main():
           f"dispatch retries {overload['dispatch']['retries']}, "
           f"conservation "
           f"{'OK' if overload['conservation']['balanced'] else 'BROKEN'}")
+    tr_on, tr_off = tracing["on"], tracing["off"]
+    print(f"tracing   : off {tr_off['requests_per_s']:.2f} req/s vs on "
+          f"{tr_on['requests_per_s']:.2f} req/s "
+          f"(ratio {tracing['throughput_ratio_on_vs_off']:.2f}, "
+          f"{tr_on['spans_emitted']} spans recorded, "
+          f"{tr_on['spans_dropped']} dropped)")
     if args.smoke:
+        if tracing["throughput_ratio_on_vs_off"] < 0.9:
+            raise SystemExit(
+                f"tracing gate failed: tracing-enabled streaming "
+                f"{tr_on['requests_per_s']:.2f} req/s is "
+                f"{tracing['throughput_ratio_on_vs_off']:.2f}x the "
+                f"tracing-disabled baseline "
+                f"{tr_off['requests_per_s']:.2f} req/s (< 0.9x) — the "
+                f"span tracer is no longer low-overhead")
         if not overload["conservation"]["balanced"]:
             raise SystemExit(
                 f"overload gate failed: conservation ledger does not "

@@ -4,7 +4,9 @@ reports, then the continuous-batching WarmStartScheduler serving a
 mixed-size request stream through bucketed micro-batches with the
 draft/refine stages overlapped, an overload stanza (depth-bounded
 admission queue shedding lowest-priority-first, cancellation, and
-per-request timeouts, with exact terminal-status conservation), and
+per-request timeouts, with exact terminal-status conservation), a
+telemetry stanza (live metrics-delta lines mid-stream + an end-of-run
+per-stage span breakdown from the `repro.obs` tracer), and
 finally the drafting subsystem — KV-cached row-keyed AR drafts +
 measured cost ratio + per-request quality-adaptive t0
 (`--draft ar-kv --t0 auto` in the launcher).
@@ -69,12 +71,19 @@ def main():
         print("  sample:", decode(np.asarray(out[0])))
 
     # --- continuous batching: mixed-size request stream -------------------
+    # a SpanTracer records every pipeline stage (the default is a no-op
+    # NullTracer); the scheduler's MetricsRegistry is always on — the
+    # stream reports below are derived from it
     print("\ncontinuous-batching scheduler (mixed seq lens, t0 overrides) ...")
+    from repro.obs import PeriodicMetricsLogger, SpanTracer
+
+    tracer = SpanTracer(capacity=16384)
     sched = WarmStartScheduler(
         flow_model=model, flow_params=state.params,
         draft_fn=corruption_draft(data, TEXT_VOCAB, corruption=0.25),
         cold_nfe=COLD_NFE, default_t0=T0, max_rows=16,
         max_bucket=32,   # largest pow2 the SEQ=48 model's positions cover
+        tracer=tracer,
     )
     sizes = np.random.default_rng(7)
     for i in range(12):
@@ -112,6 +121,11 @@ def main():
             queue.submit(seq_len=int(arr.integers(8, 33)), seed=2000 + i)
         queue.close()
 
+    # periodic telemetry: counter-delta lines from the live registry
+    # while the stream is in flight (what --metrics-interval-s prints)
+    mlog = PeriodicMetricsLogger(sched.metrics, interval_s=0.5,
+                                 sink=lambda line: print(f"  {line}"))
+    mlog.start()
     producer = threading.Thread(target=replay)
     producer.start()
     for res in sched.serve_stream(source=queue, slo_ms=5000.0,
@@ -120,6 +134,7 @@ def main():
               f"slo_met={res.slo_met} flush={res.flush_reason}: "
               f"{decode(np.asarray(res.tokens[0]))}")
     producer.join()
+    mlog.stop()
     srep = sched.stream_report
     print(f"  first result {srep['time_to_first_result_s'] * 1e3:.0f}ms "
           f"after first admission, p95 latency "
@@ -173,6 +188,22 @@ def main():
         att = crep["slo_attainment"]
         print(f"  {cls}: completed={crep['completed']} shed={crep['shed']} "
               f"attainment={'-' if att is None else format(att, '.0%')}")
+
+    # --- telemetry: per-stage breakdown from the recorded spans -----------
+    # the same analysis tools/trace_summary.py runs on a --trace-out file;
+    # every request above (completed, shed, timed out, cancelled) carries
+    # a complete admission->terminal flow chain in these records
+    from repro.obs import stage_breakdown, to_trace_events
+
+    print("\ntelemetry (spans recorded across the streaming demos) ...")
+    for row in stage_breakdown(to_trace_events(tracer.records())):
+        print(f"  {row['track']:>15s}/{row['name']:<16s} n={row['count']:<3d} "
+              f"total={row['total_ms']:7.1f}ms mean={row['mean_ms']:6.1f}ms")
+    n_chains = sum(1 for r in tracer.records()
+                   if r.name == "request_terminal")
+    print(f"  {tracer.emitted} records ({n_chains} request chains, "
+          f"{tracer.dropped} dropped); write a Perfetto-loadable file "
+          f"with repro.launch.serve --trace-out trace.json")
 
     # --- drafting subsystem: AR-KV drafts + adaptive t0 -------------------
     print("\ndrafting subsystem (KV-cached AR drafts, quality-adaptive t0) ...")

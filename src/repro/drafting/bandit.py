@@ -142,6 +142,14 @@ class BanditT0Policy:
         self._accepts: Dict[Tuple[int, int], int] = {}
         self._selects: Dict[Tuple[int, int], int] = {}
         self._rng = np.random.default_rng(self.seed)
+        # optional repro.obs.MetricsRegistry (duck-typed): arm pulls,
+        # reward updates and speculative accepts as labelled counters
+        self._metrics = None
+
+    def bind_metrics(self, registry) -> None:
+        """Attach a metrics registry; the scheduler calls this so bandit
+        arm pulls / updates / accepts surface in serving telemetry."""
+        self._metrics = registry
 
     # ---- grid / context helpers -----------------------------------------
 
@@ -200,8 +208,12 @@ class BanditT0Policy:
         """(B,) probe scores -> (B,) per-row t0 arms for ``bucket_len``."""
         out = np.empty((len(scores),), np.float64)
         for i, s in enumerate(np.asarray(scores, np.float64)):
-            out[i] = self._grid_t0(
-                self._select_arm(self._context(bucket_len, s)))
+            k = self._select_arm(self._context(bucket_len, s))
+            out[i] = self._grid_t0(k)
+            if self._metrics is not None:
+                self._metrics.counter(
+                    "bandit.arm_pulls", bucket=int(bucket_len),
+                    t0=f"{self._grid_t0(k):.3f}").inc()
         return out
 
     # ---- policy protocol (interchangeable with AdaptiveT0Policy) ---------
@@ -254,6 +266,8 @@ class BanditT0Policy:
             return 0.0
         r = self.reward(quality_score=quality_score, cost_norm=cost_norm)
         arms[k].update(r)
+        if self._metrics is not None:
+            self._metrics.counter("bandit.updates").inc()
         return r
 
     def observe_accept(self, bucket_len: int, draft_score: float) -> None:
@@ -263,6 +277,8 @@ class BanditT0Policy:
         ctx = self._context(bucket_len, draft_score)
         self._context_arms(ctx)
         self._accepts[ctx] = self._accepts.get(ctx, 0) + 1
+        if self._metrics is not None:
+            self._metrics.counter("bandit.accepts").inc()
 
     # ---- introspection / persistence ------------------------------------
 

@@ -41,6 +41,18 @@ Streaming / SLO admission modes (imply --scheduler):
   --priority CLASS   priority class (premium | standard | best_effort)
                      for the streamed requests — shedding never touches
                      a higher class before a lower one.
+
+Telemetry (imply --scheduler; see ``src/repro/obs/``):
+  --trace-out F.json        record pipeline spans (draft worker, refine
+                            dispatch, scoring pre-pass, flush decisions)
+                            and per-request admission→terminal flow
+                            arrows; writes Chrome trace-event JSON that
+                            loads in https://ui.perfetto.dev. Summarise
+                            offline with ``tools/trace_summary.py``;
+  --metrics-out F.json      dump the metrics registry (counters, gauges,
+                            histograms) at end of run;
+  --metrics-interval-s S    print live counter-delta lines every S
+                            seconds while streaming.
 """
 
 from __future__ import annotations
@@ -122,7 +134,27 @@ def main():
                     help="priority class for the streamed requests: premium "
                          "is shed last and dispatched first, best_effort "
                          "is shed first and carries no SLO deadline")
+    ap.add_argument("--trace-out", default=None, metavar="trace.json",
+                    help="record pipeline spans + per-request flow arrows "
+                         "and write a Chrome trace-event JSON here (load "
+                         "it in https://ui.perfetto.dev); implies "
+                         "--scheduler")
+    ap.add_argument("--trace-capacity", type=int, default=65536,
+                    help="span ring-buffer capacity for --trace-out "
+                         "(oldest records evict beyond it)")
+    ap.add_argument("--metrics-out", default=None, metavar="metrics.json",
+                    help="dump the metrics registry snapshot (counters / "
+                         "gauges / histograms) to this JSON file at the "
+                         "end of the run; implies --scheduler")
+    ap.add_argument("--metrics-interval-s", type=float, default=0.0,
+                    help="print a live '[metrics t=..]' counter-delta line "
+                         "every this many seconds while serving "
+                         "(0 = off; streaming mode)")
     args = ap.parse_args()
+
+    if (args.trace_out or args.metrics_out) and not args.scheduler:
+        print("--trace-out/--metrics-out imply --scheduler; enabling it")
+        args.scheduler = True
 
     t0_mode = str(args.t0).lower()
     if args.speculative and t0_mode not in ("auto", "bandit"):
@@ -212,6 +244,10 @@ def main():
                 t0_policy = AdaptiveT0Policy(scorer=scorer, calibration=calib)
             print(f"adaptive t0 calibration: scores {calib.scores} -> "
                   f"t0 {calib.t0s}")
+        tracer = None
+        if args.trace_out:
+            from repro.obs import SpanTracer
+            tracer = SpanTracer(capacity=args.trace_capacity)
         sched = WarmStartScheduler(
             flow_model=model, flow_params=state.params,
             draft_fn=draft_fn,
@@ -222,7 +258,31 @@ def main():
             per_row_t0=args.per_row_t0,
             speculative=args.speculative,
             accept_score=args.accept_score,
+            tracer=tracer,
         )
+
+        def write_telemetry():
+            """Flush trace / metrics artifacts at the end of a run."""
+            if args.trace_out:
+                from repro.obs import stage_breakdown, write_chrome_trace
+                trace = write_chrome_trace(
+                    args.trace_out, tracer,
+                    metadata={"mode": "stream" if args.stream else "batch",
+                              "t0": t0_mode, "num": args.num})
+                print(f"\ntrace: {len(trace['traceEvents'])} events -> "
+                      f"{args.trace_out} (dropped {tracer.dropped} spans; "
+                      f"open in ui.perfetto.dev)")
+                rows = stage_breakdown(trace)
+                if rows:
+                    print("per-stage time breakdown:")
+                    for r in rows:
+                        print(f"  {r['track']:>15s}/{r['name']:<16s} "
+                              f"n={r['count']:<4d} total={r['total_ms']:8.1f}ms "
+                              f"mean={r['mean_ms']:6.1f}ms "
+                              f"max={r['max_ms']:6.1f}ms")
+            if args.metrics_out:
+                sched.metrics.dump_json(args.metrics_out)
+                print(f"metrics: registry snapshot -> {args.metrics_out}")
         if args.speculative:
             print(f"speculative accept threshold: "
                   f"score >= {sched.accept_score:.3f}")
@@ -236,7 +296,13 @@ def main():
             )
 
             queue = AdmissionQueue(
-                max_depth=args.queue_depth or None)
+                max_depth=args.queue_depth or None, metrics=sched.metrics)
+            mlogger = None
+            if args.metrics_interval_s > 0:
+                from repro.obs import PeriodicMetricsLogger
+                mlogger = PeriodicMetricsLogger(
+                    sched.metrics, interval_s=args.metrics_interval_s)
+                mlogger.start()
             timeout_s = (args.timeout_ms / 1e3) if args.timeout_ms else None
             rng_arr = np.random.default_rng(args.seed + 2)
 
@@ -283,6 +349,8 @@ def main():
                       f"latency={res.latency_s * 1e3:.0f}ms{slo}  "
                       f"{decode(np.asarray(res.tokens[0]))}")
             producer.join()
+            if mlogger is not None:
+                mlogger.stop()
             rep = sched.stream_report
             lat = rep["latency_s"]
             att = rep["slo_attainment"]
@@ -310,6 +378,7 @@ def main():
                       f"{'OK' if rep['conservation']['balanced'] else 'BROKEN'}")
             if engine is not None:
                 print(f"draft engine: {engine.stats.as_dict()}")
+            write_telemetry()
             return
 
         for i, L in enumerate(sizes):
@@ -337,6 +406,7 @@ def main():
             r = results[rid]
             print(f"[{rid}] t0={r.t0:.2f} nfe={r.nfe} bucket={r.bucket_len} "
                   f"{decode(np.asarray(r.tokens[0]))}")
+        write_telemetry()
         return
 
     t0 = float(args.t0)

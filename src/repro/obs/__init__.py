@@ -1,0 +1,43 @@
+"""Observability layer: span tracing, metrics registry, Perfetto export.
+
+Stdlib-only — importable without jax/numpy so tools and tests can load
+it cheaply. See README.md in this directory for a quickstart.
+"""
+
+from .export import (
+    load_trace,
+    stage_breakdown,
+    to_trace_events,
+    validate_trace,
+    write_chrome_trace,
+)
+from .metrics import (
+    DEFAULT_LATENCY_BUCKETS_S,
+    Counter,
+    Gauge,
+    Histogram,
+    MetricsRegistry,
+    PeriodicMetricsLogger,
+    metric_key,
+    parse_metric_key,
+)
+from .tracer import NullTracer, SpanRecord, SpanTracer
+
+__all__ = [
+    "Counter",
+    "DEFAULT_LATENCY_BUCKETS_S",
+    "Gauge",
+    "Histogram",
+    "MetricsRegistry",
+    "NullTracer",
+    "PeriodicMetricsLogger",
+    "SpanRecord",
+    "SpanTracer",
+    "load_trace",
+    "metric_key",
+    "parse_metric_key",
+    "stage_breakdown",
+    "to_trace_events",
+    "validate_trace",
+    "write_chrome_trace",
+]

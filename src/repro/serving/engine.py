@@ -99,10 +99,13 @@ class PerNFECostModel:
     a partial bucket must flush.
     """
 
-    def __init__(self, alpha: float = 0.3):
+    def __init__(self, alpha: float = 0.3, metrics=None):
         if not (0.0 < alpha <= 1.0):
             raise ValueError(f"alpha must be in (0, 1], got {alpha}")
         self.alpha = alpha
+        # optional repro.obs.MetricsRegistry (duck-typed, no import):
+        # exports the model's EWMAs as gauges + an observation counter
+        self.metrics = metrics
         self._per_key: Dict[Any, float] = {}    # key -> per-NFE seconds
         self._global: Optional[float] = None    # per-NFE seconds, any key
         self._compile: Optional[float] = None   # first-dispatch overhead
@@ -119,13 +122,19 @@ class PerNFECostModel:
         compile-overhead EWMA instead of poisoning the per-NFE one.
         """
         per_nfe = flow_time_s / max(nfe, 1)
+        if self.metrics is not None:
+            self.metrics.counter("cost_model.observations").inc()
         if compiled:
             base = self.estimate_s(key, nfe)
             self._compile = self._ewma(
                 self._compile, max(0.0, flow_time_s - (base or 0.0)))
+            if self.metrics is not None:
+                self.metrics.gauge("cost_model.compile_s").set(self._compile)
             return
         self._per_key[key] = self._ewma(self._per_key.get(key), per_nfe)
         self._global = self._ewma(self._global, per_nfe)
+        if self.metrics is not None:
+            self.metrics.gauge("cost_model.per_nfe_s").set(self._global)
 
     def per_nfe_s(self, key=None) -> Optional[float]:
         """Best per-NFE estimate for ``key`` (global fallback); ``None``

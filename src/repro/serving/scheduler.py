@@ -58,6 +58,23 @@ from repro.serving.batcher import (
 from repro.serving.engine import (
     DispatchFailure, DispatchRetryPolicy, PerNFECostModel,
 )
+from repro.obs import MetricsRegistry, NullTracer, parse_metric_key
+
+
+def _key_label(key: Any) -> str:
+    """Compile key -> registry-label-safe string ((16, 4, 4) -> 16x4x4);
+    metric labels may not contain commas or braces."""
+    if isinstance(key, tuple):
+        return "x".join(str(p) for p in key)
+    return str(key)
+
+
+def _key_from_label(label: str) -> str:
+    """Inverse of :func:`_key_label` back to the report's str(tuple)."""
+    parts = label.split("x")
+    if len(parts) > 1:
+        return f"({', '.join(parts)})"
+    return label
 
 # per-class SLO scaling for the streaming admission loop: a class's
 # deadline is arrival + slo * factor; None disarms the deadline entirely
@@ -188,7 +205,10 @@ class AdmissionQueue:
     lifetime so late cancels stay addressable.
     """
 
-    def __init__(self, *, max_depth: Optional[int] = None, clock=None):
+    _instances = itertools.count()
+
+    def __init__(self, *, max_depth: Optional[int] = None, clock=None,
+                 metrics: Optional[MetricsRegistry] = None):
         if max_depth is not None and max_depth < 1:
             raise ValueError(f"max_depth must be >= 1, got {max_depth}")
         self._clock = clock if clock is not None else _MonotonicClock()
@@ -199,22 +219,31 @@ class AdmissionQueue:
         self.max_depth = max_depth
         self._tokens: Dict[int, CancelToken] = {}
         self._shed: List[ServeRequest] = []
-        self._offered = 0
-        self._accepted = 0
-        self._rejected = 0
-        self._shed_total = 0
-        self._shed_by_class: Dict[str, int] = {}
+        # the admission ledger lives in the metrics registry (the queue
+        # is its owner — see docs/ARCHITECTURE.md metric ownership). A
+        # shared registry serves several queues over its lifetime, so
+        # each queue's counters carry a distinct `queue=` label and
+        # stats() stays exact per queue.
+        self.metrics = metrics if metrics is not None else MetricsRegistry()
+        self._queue_label = f"q{next(AdmissionQueue._instances)}"
+        q = self._queue_label
+        self._c_offered = self.metrics.counter("admission.offered", queue=q)
+        self._c_accepted = self.metrics.counter("admission.accepted", queue=q)
+        self._c_rejected = self.metrics.counter("admission.rejected", queue=q)
+        self._c_shed = self.metrics.counter("admission.shed", queue=q)
+        self._g_depth = self.metrics.gauge("admission.queue_depth", queue=q)
+        self._shed_classes: set = set()
 
     def _admit_locked(self, req: ServeRequest) -> None:
         """Depth-bounded enqueue; caller holds the lock. Counts the
         offer, then either enqueues, sheds a lower-class victim to make
         room, or raises QueueFull."""
-        self._offered += 1
+        self._c_offered.inc()
         if self.max_depth is not None and len(self._items) >= self.max_depth:
             rank_in = priority_rank(req.priority)
             worst = max(priority_rank(r.priority) for r in self._items)
             if worst <= rank_in:
-                self._rejected += 1
+                self._c_rejected.inc()
                 raise QueueFull(
                     f"admission queue full (depth {self.max_depth}) and "
                     f"request {req.request_id} ({req.priority}) does not "
@@ -227,12 +256,15 @@ class AdmissionQueue:
                     victim = self._items[i]
                     del self._items[i]
                     self._shed.append(victim)
-                    self._shed_total += 1
-                    self._shed_by_class[victim.priority] = \
-                        self._shed_by_class.get(victim.priority, 0) + 1
+                    self._c_shed.inc()
+                    self._shed_classes.add(victim.priority)
+                    self.metrics.counter(
+                        "admission.shed_by_class", queue=self._queue_label,
+                        priority=victim.priority).inc()
                     break
-        self._accepted += 1
+        self._c_accepted.inc()
         self._items.append(req)
+        self._g_depth.set(len(self._items))
 
     def submit(self, *, seq_len: int, num_samples: int = 1, seed: int = 0,
                t0: Optional[float] = None, priority: str = "standard",
@@ -299,6 +331,7 @@ class AdmissionQueue:
         with self._lock:
             items = list(self._items)
             self._items.clear()
+            self._g_depth.set(0)
         return items
 
     def take_shed(self) -> List[ServeRequest]:
@@ -310,14 +343,20 @@ class AdmissionQueue:
 
     def stats(self) -> dict:
         """Exact admission ledger: ``offered == accepted + rejected``;
-        shed requests are the subset of accepted ones later evicted."""
+        shed requests are the subset of accepted ones later evicted.
+        Every value is read from this queue's registry counters — the
+        registry IS the ledger."""
         with self._lock:
             return {
-                "offered": self._offered,
-                "accepted": self._accepted,
-                "rejected": self._rejected,
-                "shed": self._shed_total,
-                "shed_by_class": dict(sorted(self._shed_by_class.items())),
+                "offered": self._c_offered.value,
+                "accepted": self._c_accepted.value,
+                "rejected": self._c_rejected.value,
+                "shed": self._c_shed.value,
+                "shed_by_class": {
+                    c: self.metrics.counter(
+                        "admission.shed_by_class", queue=self._queue_label,
+                        priority=c).value
+                    for c in sorted(self._shed_classes)},
                 "max_depth": self.max_depth,
             }
 
@@ -399,6 +438,16 @@ class WarmStartScheduler:
       accept_score: speculative acceptance threshold on the probe score;
         ``None`` uses the policy's own (bandit) or the calibration's top
         anchor score (the pretty-good tier's mean).
+      tracer: optional :class:`repro.obs.SpanTracer` recording pipeline
+        spans (draft worker, refine dispatch, scoring pre-pass, flush
+        decisions) and per-request admission→terminal flow events for
+        Perfetto export. Defaults to the no-op
+        :class:`repro.obs.NullTracer` — hot paths pay ~zero when off.
+      metrics: optional :class:`repro.obs.MetricsRegistry`; the
+        scheduler owns its serving counters there (terminal statuses,
+        SLO, flush reasons, jit hit/miss, dispatch retries, speculative
+        accepts) and ``stream_report`` sections are DERIVED from the
+        registry. A fresh private registry is created when omitted.
     """
 
     def __init__(
@@ -424,6 +473,8 @@ class WarmStartScheduler:
         per_row_t0: bool = False,
         speculative: bool = False,
         accept_score: Optional[float] = None,
+        tracer: Optional[Any] = None,
+        metrics: Optional[MetricsRegistry] = None,
     ):
         if cold_nfe < 1:
             raise ValueError(f"cold_nfe must be >= 1, got {cold_nfe}")
@@ -473,26 +524,31 @@ class WarmStartScheduler:
         # context each in-flight row's arm was selected under, consumed
         # when its refined reward is observed (bandit mode only)
         self._row_scores: Dict[int, Tuple[int, np.ndarray]] = {}
-        self._reward_probes = 0         # refined-batch probe dispatches
-        # lifetime speculative counters (per-run deltas in reports)
-        self._spec_eligible = 0
-        self._spec_accepted = 0
+
+        # observability: spans into the (default no-op) tracer, counters
+        # into the registry — run/stream reports are registry deltas
+        self.tracer = tracer if tracer is not None else NullTracer()
+        self.metrics = metrics if metrics is not None else MetricsRegistry()
+        m = self.metrics
+        self._c_reward_probes = m.counter("bandit.reward_probes")
+        self._c_spec_eligible = m.counter("speculative.eligible")
+        self._c_spec_accepted = m.counter("speculative.accepted")
+        self._c_cache_hits = m.counter("jit_cache.hits")
+        self._c_cache_misses = m.counter("jit_cache.misses")
+        self._c_fused_blocks = m.counter("fused.blocks_dispatched")
+        self._c_fused_steps = m.counter("fused.steps_fused")
+        self._c_dispatch_retries = m.counter("dispatch.retries")
+        self._c_dispatch_failures = m.counter("dispatch.failures")
+        if t0_policy is not None and hasattr(t0_policy, "bind_metrics"):
+            t0_policy.bind_metrics(m)
 
         self._queue: List[ServeRequest] = []
         self._next_id = 0
         self._compiled: set = set()     # compile_key accounting
-        self._cache_hits = 0
-        self._cache_misses = 0
-        # per-compile-key hit/miss counters + fused-dispatch accounting
-        # (exported into run/stream reports for the bench streaming view)
-        self._key_hits: Dict[Any, int] = {}
-        self._key_misses: Dict[Any, int] = {}
-        self._fused_blocks_dispatched = 0
-        self._fused_steps_fused = 0
         # measured latency oracle for the SLO admission loop: per-NFE
         # refine cost EWMA per compile key (+ global fallback), fed by
         # every _stage_refine dispatch; draft-stage cost EWMA beside it
-        self.cost_model = PerNFECostModel()
+        self.cost_model = PerNFECostModel(metrics=m)
         self._draft_cost_ewma: Optional[float] = None
         self._chunk_ids = itertools.count(_CHUNK_ID_BASE)
         self.stream_report: Optional[dict] = None
@@ -505,8 +561,6 @@ class WarmStartScheduler:
             for cls, factor in class_slo_factor.items():
                 priority_rank(cls)      # raises on unknown classes
                 self.class_slo_factor[cls] = factor
-        self._dispatch_retries = 0
-        self._dispatch_failures = 0
         # test-only fault injection: when set, called as hook(mb, attempt)
         # immediately before every refine dispatch attempt; raising from
         # it makes that attempt fail exactly like a device fault would
@@ -566,6 +620,36 @@ class WarmStartScheduler:
                 out_shardings=rows2,
                 donate_argnums=donate,
             )
+
+    # ---- registry-backed counter views (lifetime totals) -----------------
+
+    @property
+    def _cache_hits(self) -> int:
+        return self._c_cache_hits.value
+
+    @property
+    def _cache_misses(self) -> int:
+        return self._c_cache_misses.value
+
+    @property
+    def _dispatch_retries(self) -> int:
+        return self._c_dispatch_retries.value
+
+    @property
+    def _dispatch_failures(self) -> int:
+        return self._c_dispatch_failures.value
+
+    @property
+    def _spec_eligible(self) -> int:
+        return self._c_spec_eligible.value
+
+    @property
+    def _spec_accepted(self) -> int:
+        return self._c_spec_accepted.value
+
+    @property
+    def _reward_probes(self) -> int:
+        return self._c_reward_probes.value
 
     # ---- request intake --------------------------------------------------
 
@@ -627,23 +711,27 @@ class WarmStartScheduler:
         used the same per-row keys, so the tokens are identical either
         way — padding rows just stay zero).
         """
-        t0 = time.perf_counter()
-        seeds, idx = self._mb_row_streams(mb)
-        draft_keys, flow_keys = _derive_row_keys(
-            jnp.asarray(seeds), jnp.asarray(idx))
-        if predrafted is not None:
-            x = np.zeros((mb.padded_rows, mb.bucket_len), np.int32)
-            for span in mb.spans:
-                x[span.row_offset:span.row_offset + span.rows] = \
-                    predrafted[span.request.request_id]
-            x = jnp.asarray(x)
-        else:
-            x = self.draft_fn(draft_keys, mb.bucket_len)
-        x = jax.block_until_ready(x)
-        t_draft = time.perf_counter() - t0
-        self._draft_cost_ewma = (
-            t_draft if self._draft_cost_ewma is None
-            else 0.7 * self._draft_cost_ewma + 0.3 * t_draft)
+        with self.tracer.span("draft", track="draft_worker",
+                              bucket=mb.bucket_len, rows=mb.rows,
+                              predrafted=predrafted is not None):
+            t0 = time.perf_counter()
+            seeds, idx = self._mb_row_streams(mb)
+            draft_keys, flow_keys = _derive_row_keys(
+                jnp.asarray(seeds), jnp.asarray(idx))
+            if predrafted is not None:
+                x = np.zeros((mb.padded_rows, mb.bucket_len), np.int32)
+                for span in mb.spans:
+                    x[span.row_offset:span.row_offset + span.rows] = \
+                        predrafted[span.request.request_id]
+                x = jnp.asarray(x)
+            else:
+                x = self.draft_fn(draft_keys, mb.bucket_len)
+            x = jax.block_until_ready(x)
+            t_draft = time.perf_counter() - t0
+            self._draft_cost_ewma = (
+                t_draft if self._draft_cost_ewma is None
+                else 0.7 * self._draft_cost_ewma + 0.3 * t_draft)
+            self.metrics.gauge("draft.cost_ewma_s").set(self._draft_cost_ewma)
         return x, flow_keys, t_draft
 
     def _dispatch_refine(self, mb: MicroBatch, x, flow_keys, ts, hs,
@@ -676,10 +764,10 @@ class WarmStartScheduler:
                 return jax.block_until_ready(out)
             except Exception as err:  # noqa: BLE001 — device faults vary
                 if attempt >= policy.max_retries:
-                    self._dispatch_failures += 1
+                    self._c_dispatch_failures.inc()
                     raise DispatchFailure(
                         mb.compile_key, attempt + 1, err) from err
-                self._dispatch_retries += 1
+                self._c_dispatch_retries.inc()
                 sleep = (self._stream_clock.sleep
                          if self._stream_clock is not None else time.sleep)
                 sleep(policy.backoff_s(attempt))
@@ -688,45 +776,58 @@ class WarmStartScheduler:
     def _stage_refine(self, mb: MicroBatch, x, flow_keys):
         """Flow stage for one micro-batch: one jitted scan dispatch over
         the per-row masked schedule."""
-        t0 = time.perf_counter()
-        key = mb.compile_key
-        if key in self._compiled:
-            self._cache_hits += 1
-            self._key_hits[key] = self._key_hits.get(key, 0) + 1
-            was_miss = False
-        else:
-            self._compiled.add(key)
-            self._cache_misses += 1
-            self._key_misses[key] = self._key_misses.get(key, 0) + 1
-            was_miss = True
-        ts, hs, active, key_idx, nfe_rows = refine_schedule_rows(
-            mb.row_t0s, 1.0 / self.cold_nfe, self.cold_nfe)
-        if self.fused_block > 1:
-            k = min(self.fused_block, len(ts))
-            self._fused_blocks_dispatched += -(-len(ts) // k)
-            self._fused_steps_fused += len(ts)
-        x = self._dispatch_refine(mb, x, flow_keys, ts, hs, active, key_idx)
-        # observed NFE = what the executed schedule actually spent: the
-        # scan length for the batch (cross-checked against an independent
-        # warm_nfe(cold_nfe, min t0) recomputation — the worst-case
-        # 1/(1 - min t0) guarantee), and per ROW the active-step count,
-        # which must equal each row's own warm_nfe(cold_nfe, t0_row). A
-        # batcher/schedule regression (wrong n_steps, wrong grouping,
-        # stale cold_nfe, a row overshooting its bound) raises here.
-        guarantees.require_bucket_guarantee(
-            self.cold_nfe, mb.t0, len(ts),
-            bucket_len=mb.bucket_len, rows=mb.rows)
-        observed_rows = active.sum(axis=0)
-        mask = mb.row_mask
-        guarantees.require_row_guarantees(
-            self.cold_nfe, mb.row_t0s[mask], observed_rows[mask],
-            bucket_len=mb.bucket_len, rows=mb.rows)
-        t_flow = time.perf_counter() - t0
-        self.cost_model.observe(key, t_flow, len(ts), compiled=was_miss)
-        # bandit verify step AFTER the cost observation so the reward
-        # probe's own time never poisons the per-NFE refine EWMA
-        if self._bandit_mode and self._row_scores:
-            self._observe_rewards(mb, x)
+        span = self.tracer.span("refine", track="refine_dispatch",
+                                bucket=mb.bucket_len, rows=mb.rows,
+                                padded_rows=mb.padded_rows,
+                                key=str(mb.compile_key))
+        with span as sp:
+            t0 = time.perf_counter()
+            key = mb.compile_key
+            if key in self._compiled:
+                self._c_cache_hits.inc()
+                self.metrics.counter("jit_cache.per_key",
+                                     key=_key_label(key), kind="hit").inc()
+                was_miss = False
+            else:
+                self._compiled.add(key)
+                self._c_cache_misses.inc()
+                self.metrics.counter("jit_cache.per_key",
+                                     key=_key_label(key), kind="miss").inc()
+                was_miss = True
+            sp["cache"] = "miss" if was_miss else "hit"
+            ts, hs, active, key_idx, nfe_rows = refine_schedule_rows(
+                mb.row_t0s, 1.0 / self.cold_nfe, self.cold_nfe)
+            sp["nfe"] = len(ts)
+            if self.fused_block > 1:
+                k = min(self.fused_block, len(ts))
+                self._c_fused_blocks.inc(-(-len(ts) // k))
+                self._c_fused_steps.inc(len(ts))
+            x = self._dispatch_refine(mb, x, flow_keys, ts, hs, active,
+                                      key_idx)
+            # observed NFE = what the executed schedule actually spent:
+            # the scan length for the batch (cross-checked against an
+            # independent warm_nfe(cold_nfe, min t0) recomputation — the
+            # worst-case 1/(1 - min t0) guarantee), and per ROW the
+            # active-step count, which must equal each row's own
+            # warm_nfe(cold_nfe, t0_row). A batcher/schedule regression
+            # (wrong n_steps, wrong grouping, stale cold_nfe, a row
+            # overshooting its bound) raises here.
+            guarantees.require_bucket_guarantee(
+                self.cold_nfe, mb.t0, len(ts),
+                bucket_len=mb.bucket_len, rows=mb.rows)
+            observed_rows = active.sum(axis=0)
+            mask = mb.row_mask
+            guarantees.require_row_guarantees(
+                self.cold_nfe, mb.row_t0s[mask], observed_rows[mask],
+                bucket_len=mb.bucket_len, rows=mb.rows)
+            t_flow = time.perf_counter() - t0
+            self.cost_model.observe(key, t_flow, len(ts), compiled=was_miss)
+            # bandit verify step AFTER the cost observation so the reward
+            # probe's own time never poisons the per-NFE refine EWMA
+            if self._bandit_mode and self._row_scores:
+                with self.tracer.span("reward_probe", track="refine_dispatch",
+                                      bucket=mb.bucket_len):
+                    self._observe_rewards(mb, x)
         return x, t_flow
 
     def _observe_rewards(self, mb: MicroBatch, x) -> None:
@@ -744,7 +845,7 @@ class WarmStartScheduler:
         if not pending:
             return
         refined = np.asarray(self.t0_policy.scorer(x))
-        self._reward_probes += 1
+        self._c_reward_probes.inc()
         row_t0s = mb.row_t0s
         cold_s = self.cost_model.cost_for_nfe(self.cold_nfe)
         for span, (blen, draft_scores) in pending:
@@ -764,31 +865,31 @@ class WarmStartScheduler:
     # ---- jit-cache / fused-dispatch reporting ----------------------------
 
     def _jit_cache_snapshot(self):
-        """Counter snapshot so each run/stream reports its OWN deltas
-        (lifetime totals stay on the instance)."""
-        return (self._cache_hits, self._cache_misses,
-                dict(self._key_hits), dict(self._key_misses),
-                self._fused_blocks_dispatched, self._fused_steps_fused)
+        """Registry snapshot so each run/stream reports its OWN deltas
+        (lifetime totals stay in the metrics registry)."""
+        return self.metrics.snapshot()
 
     def _jit_cache_delta(self, snap) -> dict:
-        """The report's ``jit_cache`` section: aggregate + per-compile-key
-        hit/miss counts and fused-block dispatch totals since ``snap``."""
-        hits0, misses0, kh0, km0, fb0, fs0 = snap
-        per_key = {}
-        for k in sorted(set(self._key_hits) | set(self._key_misses),
-                        key=str):
-            h = self._key_hits.get(k, 0) - kh0.get(k, 0)
-            m = self._key_misses.get(k, 0) - km0.get(k, 0)
-            if h or m:
-                per_key[str(k)] = {"hits": h, "misses": m}
+        """The report's ``jit_cache`` section, derived from registry
+        counter deltas since ``snap``: aggregate + per-compile-key
+        hit/miss counts and fused-block dispatch totals."""
+        deltas = self.metrics.counter_deltas(snap)
+        per_key: Dict[str, Dict[str, int]] = {}
+        for mkey, v in deltas.items():
+            name, labels = parse_metric_key(mkey)
+            if name != "jit_cache.per_key":
+                continue
+            entry = per_key.setdefault(
+                _key_from_label(labels["key"]), {"hits": 0, "misses": 0})
+            entry["hits" if labels["kind"] == "hit" else "misses"] += v
         return {
-            "hits": self._cache_hits - hits0,
-            "misses": self._cache_misses - misses0,
-            "per_key": per_key,
+            "hits": deltas.get("jit_cache.hits", 0),
+            "misses": deltas.get("jit_cache.misses", 0),
+            "per_key": dict(sorted(per_key.items())),
             "fused": {
                 "fused_block": self.fused_block,
-                "blocks_dispatched": self._fused_blocks_dispatched - fb0,
-                "steps_fused": self._fused_steps_fused - fs0,
+                "blocks_dispatched": deltas.get("fused.blocks_dispatched", 0),
+                "steps_fused": deltas.get("fused.steps_fused", 0),
             },
         }
 
@@ -810,6 +911,16 @@ class WarmStartScheduler:
             raise
 
     def _policy_prepass(self, requests: Sequence[ServeRequest]):
+        """Traced wrapper for :meth:`_policy_prepass_inner` (the span
+        carries the scored/accepted counts for the Perfetto view)."""
+        with self.tracer.span("scoring_prepass", track="scoring",
+                              requests=len(requests)) as sp:
+            out = self._policy_prepass_inner(requests)
+            sp["scored"] = out[2]["scored_requests"]
+            sp["accepted"] = len(out[3])
+        return out
+
+    def _policy_prepass_inner(self, requests: Sequence[ServeRequest]):
         """Adaptive-t0 scoring pre-pass (t0_policy mode).
 
         Drafts every request at its bucket length (row-keyed, batched per
@@ -919,8 +1030,9 @@ class WarmStartScheduler:
                 resolved.append(dataclasses.replace(
                     req, t0=resolved_t0[req.request_id],
                     row_t0s=resolved_rows.get(req.request_id, ())))
-        self._spec_eligible += eligible
-        self._spec_accepted += len(accepted)
+        self.metrics.counter("policy.scored_requests").inc(scored)
+        self._c_spec_eligible.inc(eligible)
+        self._c_spec_accepted.inc(len(accepted))
         report = {
             "scored_requests": scored,
             "prepass_time_s": time.perf_counter() - t_start,
@@ -1153,11 +1265,18 @@ class WarmStartScheduler:
         override are drafted+scored in one batch and the drafts reused
         by the pipeline, exactly as the batch path's global pre-pass
         does per bucket."""
+        occupancy = fb.rows
+        self.tracer.instant("bucket_flush", track="flush", reason=reason,
+                            bucket=fb.bucket_len, rows=occupancy,
+                            requests=len(fb.requests))
+        self.metrics.counter("serve.flush", reason=reason).inc()
+        self.metrics.histogram(
+            "bucket.flush_rows", buckets=(1, 2, 4, 8, 16, 32, 64, 128),
+            bucket=fb.bucket_len).observe(occupancy)
         reqs = fb.flush()               # deadline order
         predrafted = None
         if self.t0_policy is not None:
             reqs, predrafted, prep, accepted = self._policy_prepass(reqs)
-            stats["scored_requests"] += prep["scored_requests"]
             stats["prepass_time_s"] += prep["prepass_time_s"]
             # speculatively accepted requests skip packing entirely; the
             # serving loop yields them as ACCEPTED_DRAFT terminals
@@ -1170,8 +1289,13 @@ class WarmStartScheduler:
             max_rows=self.max_rows, min_bucket=self.min_bucket,
             max_bucket=self.max_bucket, row_quantum=self.row_quantum,
             row_multiple=self._row_multiple, t0_bin_width=self.t0_bin_width)
-        stats["flush_reasons"][reason] = \
-            stats["flush_reasons"].get(reason, 0) + 1
+        for mb in batches:
+            for span in mb.spans:
+                self.tracer.instant(
+                    "request_packed", track="flush",
+                    flow_id=span.request.root_id, flow_ph="t",
+                    request_id=span.request.root_id, bucket=mb.bucket_len,
+                    reason=reason)
         return [{"mb": mb, "predrafted": predrafted, "reason": reason,
                  "flushed_s": now} for mb in batches]
 
@@ -1238,7 +1362,7 @@ class WarmStartScheduler:
             raise ValueError("serve_stream needs `requests` and/or `source`")
         own_source = source is None
         if own_source:
-            source = AdmissionQueue(clock=clock)
+            source = AdmissionQueue(clock=clock, metrics=self.metrics)
         if requests is not None:
             now0 = clock.time()
             with source._lock:
@@ -1256,11 +1380,12 @@ class WarmStartScheduler:
                         req = dataclasses.replace(
                             req, cancel_token=CancelToken())
                     source._tokens[req.request_id] = req.cancel_token
-                    source._offered += 1
-                    source._accepted += 1
+                    source._c_offered.inc()
+                    source._c_accepted.inc()
                     source._items.append(req)
                     source._next_id = max(source._next_id,
                                           req.request_id + 1)
+                source._g_depth.set(len(source._items))
         if own_source:
             # no external producer: the pre-known set IS the stream
             source.close()
@@ -1272,36 +1397,33 @@ class WarmStartScheduler:
         filling: Dict[Tuple[int, str], FillingBucket] = {}
         ready: List[dict] = []          # flushed micro-batches -> pipeline
         partials: Dict[int, dict] = {}  # parent_id -> chunk reassembly
-        stats = {"scored_requests": 0, "prepass_time_s": 0.0,
-                 "flush_reasons": {}, "split_requests": 0,
-                 "failed_micro_batches": 0, "dropped_micro_batches": 0,
-                 "accepted_pending": []}
+        stats = {"prepass_time_s": 0.0, "accepted_pending": []}
         mb_reports: List[dict] = []
         latencies: List[float] = []
-        slo_total = slo_met_n = 0
-        completed_n = 0
-        admitted_n = 0
+        class_latencies: Dict[str, List[float]] = {
+            c: [] for c in PRIORITY_CLASSES}
         spec_min_score: Optional[float] = None
         draft_total = flow_total = 0.0
         t_first: Optional[float] = None
         first_arrival_s: Optional[float] = None
-        cache_snap = self._jit_cache_snapshot()
-        retries0 = self._dispatch_retries
+        # ONE registry snapshot anchors every report section: terminal
+        # statuses, per-class SLO, flush reasons, jit cache, dispatch
+        # retries — the stream report is DERIVED from counter deltas
+        # against it, never from parallel hand-rolled dicts
+        m0 = self._jit_cache_snapshot()
         wall0 = clock.time()
         mb_index = itertools.count()
         # terminal-status bookkeeping: every admitted ROOT request id
         # lands in `resolved` exactly once, with exactly one terminal
         # CompletedRequest yielded for it (conservation is checked in
-        # the stream report)
+        # the stream report); the status counts live in the registry
+        # (`serve.terminal{priority,status}`)
         resolved: set = set()
-        terminal_counts = {s: 0 for s in
-                           (COMPLETED, ACCEPTED_DRAFT, CANCELLED, TIMED_OUT,
-                            SHED, FAILED)}
-        by_class: Dict[str, dict] = {
-            c: {"completed": 0, "accepted_draft": 0, "shed": 0,
-                "cancelled": 0, "timed_out": 0, "failed": 0,
-                "latencies": [], "slo_total": 0, "slo_met": 0}
-            for c in PRIORITY_CLASSES}
+        m = self.metrics
+        tracer = self.tracer
+
+        def count_terminal(status: str, priority: str) -> None:
+            m.counter("serve.terminal", status=status, priority=priority).inc()
 
         def class_deadline(req: ServeRequest) -> Optional[float]:
             """arrival + slo * class factor, or None for classes whose
@@ -1325,14 +1447,18 @@ class WarmStartScheduler:
             resolved.add(root)
             part = partials.pop(root, None)
             n_chunks = part["num_chunks"] if part is not None else 1
-            terminal_counts[status] += 1
-            cls = by_class[req.priority]
-            cls[status] += 1
+            count_terminal(status, req.priority)
             # shed / timed-out / failed requests count AGAINST their
             # class's SLO attainment (the system failed to serve them in
-            # time); a caller's cancel does not
+            # time); a caller's cancel does not. `served=False` keeps
+            # them out of the GLOBAL attainment (served results only).
             if status != CANCELLED and class_deadline(req) is not None:
-                cls["slo_total"] += 1
+                m.counter("serve.slo_total", priority=req.priority,
+                          served=False).inc()
+            tracer.instant("request_terminal", track="terminal",
+                           flow_id=root, flow_ph="f", request_id=root,
+                           status=status, priority=req.priority,
+                           latency_ms=(now - req.arrival_s) * 1e3)
             return CompletedRequest(
                 request_id=root,
                 tokens=np.zeros((0, req.seq_len), np.int32),
@@ -1343,7 +1469,7 @@ class WarmStartScheduler:
                 status=status, priority=req.priority)
 
         def admit(req: ServeRequest, now: float):
-            nonlocal admitted_n, first_arrival_s
+            nonlocal first_arrival_s
             if req.parent_id is not None:
                 # chunk metadata is minted by THIS loop's splitter; an
                 # externally-fabricated chunk has no reassembly slot
@@ -1351,7 +1477,7 @@ class WarmStartScheduler:
                     f"request {req.request_id} carries chunk metadata "
                     f"(parent_id={req.parent_id}); submit the parent "
                     f"request whole — the admission loop splits it")
-            admitted_n += 1
+            m.counter("serve.admitted").inc()
             if first_arrival_s is None or req.arrival_s < first_arrival_s:
                 first_arrival_s = req.arrival_s
             pieces = [req]
@@ -1362,7 +1488,7 @@ class WarmStartScheduler:
                 if self.t0_policy is not None and req.t0 is None:
                     t0 = self._score_chunks_t0(pieces)
                     pieces = [dataclasses.replace(p, t0=t0) for p in pieces]
-                stats["split_requests"] += 1
+                m.counter("serve.split_requests").inc()
                 partials[req.request_id] = {
                     "tokens": None, "rows_done": 0, "chunks_done": 0,
                     "num_chunks": len(pieces), "arrival_s": req.arrival_s,
@@ -1398,7 +1524,7 @@ class WarmStartScheduler:
                 pending = ready.pop(best)
                 if all(s.request.root_id in resolved
                        for s in pending["mb"].spans):
-                    stats["dropped_micro_batches"] += 1
+                    m.counter("serve.dropped_micro_batches").inc()
                     continue
                 return pending
             return None
@@ -1413,13 +1539,14 @@ class WarmStartScheduler:
             shape and the NFE schedule are functions of each request
             alone, so the surviving rows' bytes are identical either
             way."""
-            nonlocal draft_total, flow_total, completed_n, t_first
-            nonlocal slo_total, slo_met_n
+            nonlocal draft_total, flow_total, t_first
             draft_total += t_draft
             flow_total += t_flow
             mb = pending["mb"]
             k = next(mb_index)
             finished_s = clock.time()
+            m.histogram("serve.queue_wait_s").observe(
+                finished_s - pending["flushed_s"])
             mb_reports.append({
                 "micro_batch": k, "bucket_len": mb.bucket_len,
                 "rows": mb.rows, "padded_rows": mb.padded_rows,
@@ -1467,19 +1594,22 @@ class WarmStartScheduler:
                 resolved.add(rid)
                 deadline = class_deadline(req)
                 met = None if deadline is None else finished_s <= deadline
-                if met is not None:
-                    slo_total += 1
-                    slo_met_n += int(met)
                 latency = finished_s - arrival
                 latencies.append(latency)
-                completed_n += 1
-                terminal_counts[COMPLETED] += 1
-                cls = by_class[req.priority]
-                cls["completed"] += 1
-                cls["latencies"].append(latency)
+                class_latencies[req.priority].append(latency)
+                count_terminal(COMPLETED, req.priority)
+                m.histogram("serve.latency_s",
+                            priority=req.priority).observe(latency)
                 if deadline is not None:
-                    cls["slo_total"] += 1
-                    cls["slo_met"] += int(met)
+                    m.counter("serve.slo_total", priority=req.priority,
+                              served=True).inc()
+                    if met:
+                        m.counter("serve.slo_met",
+                                  priority=req.priority).inc()
+                tracer.instant("request_terminal", track="terminal",
+                               flow_id=rid, flow_ph="f", request_id=rid,
+                               status=COMPLETED, priority=req.priority,
+                               latency_ms=latency * 1e3)
                 if t_first is None:
                     t_first = finished_s
                 out.append(CompletedRequest(
@@ -1503,12 +1633,26 @@ class WarmStartScheduler:
                 while True:
                     now = clock.time()
                     # overload: requests the bounded queue evicted become
-                    # SHED terminal results, never silent drops
+                    # SHED terminal results, never silent drops. Every
+                    # request the loop first sees (shed or drained) opens
+                    # its flow chain with a request_admitted instant, so
+                    # admission→terminal trace coverage equals the
+                    # conservation ledger exactly.
                     for req in source.take_shed():
+                        tracer.instant("request_admitted", track="admission",
+                                       flow_id=req.root_id, flow_ph="s",
+                                       request_id=req.root_id,
+                                       priority=req.priority,
+                                       seq_len=req.seq_len)
                         item = terminal(req, SHED, now)
                         if item is not None:
                             yield item
                     for req in source.drain():
+                        tracer.instant("request_admitted", track="admission",
+                                       flow_id=req.root_id, flow_ph="s",
+                                       request_id=req.root_id,
+                                       priority=req.priority,
+                                       seq_len=req.seq_len)
                         if req.cancelled:
                             item = terminal(req, CANCELLED, now)
                             if item is not None:
@@ -1581,18 +1725,25 @@ class WarmStartScheduler:
                             else min(spec_min_score, s_min))
                         deadline = class_deadline(req)
                         met = None if deadline is None else now_a <= deadline
-                        if met is not None:
-                            slo_total += 1
-                            slo_met_n += int(met)
                         latency = now_a - req.arrival_s
                         latencies.append(latency)
-                        terminal_counts[ACCEPTED_DRAFT] += 1
-                        cls = by_class[req.priority]
-                        cls["accepted_draft"] += 1
-                        cls["latencies"].append(latency)
+                        class_latencies[req.priority].append(latency)
+                        count_terminal(ACCEPTED_DRAFT, req.priority)
+                        m.histogram("serve.latency_s",
+                                    priority=req.priority).observe(latency)
                         if deadline is not None:
-                            cls["slo_total"] += 1
-                            cls["slo_met"] += int(met)
+                            m.counter("serve.slo_total",
+                                      priority=req.priority,
+                                      served=True).inc()
+                            if met:
+                                m.counter("serve.slo_met",
+                                          priority=req.priority).inc()
+                        tracer.instant("request_terminal", track="terminal",
+                                       flow_id=req.request_id, flow_ph="f",
+                                       request_id=req.request_id,
+                                       status=ACCEPTED_DRAFT,
+                                       priority=req.priority,
+                                       latency_ms=latency * 1e3)
                         if t_first is None:
                             t_first = now_a
                         yield CompletedRequest(
@@ -1635,7 +1786,7 @@ class WarmStartScheduler:
                             # fault isolation: the retry budget is spent —
                             # fail ONLY this micro-batch's requests and
                             # keep serving the stream
-                            stats["failed_micro_batches"] += 1
+                            m.counter("serve.failed_micro_batches").inc()
                             draft_total += t_draft
                             fail_s = clock.time()
                             for span in current["mb"].spans:
@@ -1658,21 +1809,48 @@ class WarmStartScheduler:
         def pct(vals, q):
             return float(np.percentile(vals, q)) if vals else 0.0
 
+        # ---- report assembly: every counter-valued section below is a
+        # registry delta against the m0 snapshot — the registry is the
+        # single source of truth (raw latency lists stay local only for
+        # exact percentiles)
+        parsed = [(parse_metric_key(k), v)
+                  for k, v in self.metrics.counter_deltas(m0).items()]
+
+        def dsum(name: str, **match) -> int:
+            want = {k: str(v) for k, v in match.items()}
+            return sum(v for (n, labels), v in parsed
+                       if n == name and all(labels.get(mk) == mv
+                                            for mk, mv in want.items()))
+
         admission = source.stats()
+        statuses = (COMPLETED, ACCEPTED_DRAFT, CANCELLED, TIMED_OUT, SHED,
+                    FAILED)
+        terminal_counts = {s: dsum("serve.terminal", status=s)
+                           for s in statuses}
+        completed_n = terminal_counts[COMPLETED]
         resolved_total = sum(terminal_counts.values())
+        flush_reasons = {labels["reason"]: v for (n, labels), v in parsed
+                         if n == "serve.flush"}
+        scored_requests = dsum("policy.scored_requests")
+        slo_served = dsum("serve.slo_total", served=True)
+        slo_met_n = dsum("serve.slo_met")
         by_class_report = {}
-        for cname, cs in by_class.items():
-            if not any((cs["completed"], cs["accepted_draft"], cs["shed"],
-                        cs["cancelled"], cs["timed_out"], cs["failed"])):
+        for cname in PRIORITY_CLASSES:
+            counts = {s: dsum("serve.terminal", status=s, priority=cname)
+                      for s in statuses}
+            if not any(counts.values()):
                 continue
-            lat = cs["latencies"]
+            lat = class_latencies[cname]
+            ctot = dsum("serve.slo_total", priority=cname)
+            cmet = dsum("serve.slo_met", priority=cname)
             by_class_report[cname] = {
-                "completed": cs["completed"],
-                "accepted_draft": cs["accepted_draft"], "shed": cs["shed"],
-                "cancelled": cs["cancelled"], "timed_out": cs["timed_out"],
-                "failed": cs["failed"],
-                "slo_attainment": (cs["slo_met"] / cs["slo_total"]
-                                   if cs["slo_total"] else None),
+                "completed": counts[COMPLETED],
+                "accepted_draft": counts[ACCEPTED_DRAFT],
+                "shed": counts[SHED],
+                "cancelled": counts[CANCELLED],
+                "timed_out": counts[TIMED_OUT],
+                "failed": counts[FAILED],
+                "slo_attainment": (cmet / ctot if ctot else None),
                 "latency_ms": {
                     "p50": pct(lat, 50) * 1e3, "p95": pct(lat, 95) * 1e3,
                     "p99": pct(lat, 99) * 1e3, "n": len(lat),
@@ -1680,14 +1858,15 @@ class WarmStartScheduler:
             }
         self.stream_report = {
             "streaming": True,
-            "num_requests": admitted_n,
+            "num_requests": dsum("serve.admitted"),
             "completed": completed_n,
             "accepted_draft": terminal_counts[ACCEPTED_DRAFT],
             "num_micro_batches": len(mb_reports),
-            "split_requests": stats["split_requests"],
-            "flush_reasons": dict(sorted(stats["flush_reasons"].items())),
+            "split_requests": dsum("serve.split_requests"),
+            "flush_reasons": dict(sorted(flush_reasons.items())),
             "slo_ms": slo_ms,
-            "slo_attainment": (slo_met_n / slo_total if slo_total else None),
+            "slo_attainment": (slo_met_n / slo_served
+                               if slo_served else None),
             "latency_s": {
                 "mean": float(np.mean(latencies)) if latencies else 0.0,
                 "p50": pct(latencies, 50), "p95": pct(latencies, 95),
@@ -1704,18 +1883,18 @@ class WarmStartScheduler:
             "wall_time_s": wall,
             "draft_time_s": draft_total,
             "flow_time_s": flow_total,
-            "jit_cache": self._jit_cache_delta(cache_snap),
+            "jit_cache": self._jit_cache_delta(m0),
             "adaptive_t0": self.t0_policy is not None,
             "policy": (None if self.t0_policy is None else
-                       {"scored_requests": stats["scored_requests"],
+                       {"scored_requests": scored_requests,
                         "prepass_time_s": stats["prepass_time_s"]}),
             "speculative": (None if not self.speculative else {
                 "enabled": True,
                 "accepted": terminal_counts[ACCEPTED_DRAFT],
-                "eligible": stats["scored_requests"],
+                "eligible": scored_requests,
                 "accept_rate": (
-                    terminal_counts[ACCEPTED_DRAFT] / stats["scored_requests"]
-                    if stats["scored_requests"] else 0.0),
+                    terminal_counts[ACCEPTED_DRAFT] / scored_requests
+                    if scored_requests else 0.0),
                 "accept_score": self.accept_score,
                 "min_accepted_score": spec_min_score,
             }),
@@ -1734,10 +1913,10 @@ class WarmStartScheduler:
                 "balanced": (admission["offered"]
                              == admission["rejected"] + resolved_total),
             },
-            "dropped_micro_batches": stats["dropped_micro_batches"],
+            "dropped_micro_batches": dsum("serve.dropped_micro_batches"),
             "dispatch": {
-                "retries": self._dispatch_retries - retries0,
-                "failed_micro_batches": stats["failed_micro_batches"],
+                "retries": dsum("dispatch.retries"),
+                "failed_micro_batches": dsum("serve.failed_micro_batches"),
                 "failed_requests": terminal_counts[FAILED],
                 "max_retries": self.retry_policy.max_retries,
                 "backoff_base_s": self.retry_policy.backoff_base_s,

@@ -89,6 +89,14 @@ def main(root: Path) -> None:
             f"dispatch retries {ov['dispatch']['retries']} "
             f"(injected faults, exp backoff)",
             "BENCH_serving.json"))
+    tr = s.get("tracing_overhead")
+    if tr:
+        rows.append(row(
+            "span-tracing overhead on streaming serve",
+            f"{tr['throughput_ratio_on_vs_off']:.2f}× throughput with a "
+            f"live SpanTracer ring vs NullTracer "
+            f"({tr['on']['spans_emitted']} spans recorded; gate ≥ 0.9×)",
+            "BENCH_serving.json"))
 
     d = json.loads((root / "BENCH_drafting.json").read_text())
     adaptive = d["adaptive_t0"]["mean_request_nfe"]

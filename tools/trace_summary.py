@@ -1,0 +1,77 @@
+#!/usr/bin/env python
+"""Summarise (and optionally validate) a Chrome trace produced by
+``repro.launch.serve --trace-out``.
+
+Prints a per-stage time breakdown (track/span totals sorted by total
+time) plus per-request flow-chain coverage. With ``--check`` the script
+exits non-zero when the trace fails schema validation — every event must
+be well-formed trace-event JSON and every admitted request must carry a
+complete admission→terminal flow chain.
+
+    PYTHONPATH=src python tools/trace_summary.py trace.json
+    PYTHONPATH=src python tools/trace_summary.py trace.json --check \
+        --expected-requests 6
+
+Only needs the stdlib-only ``repro.obs`` package — no jax/numpy.
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+
+from repro.obs import load_trace, stage_breakdown, validate_trace
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("trace", help="Chrome trace-event JSON file "
+                                  "(from serve --trace-out)")
+    ap.add_argument("--check", action="store_true",
+                    help="validate the trace schema and flow chains; "
+                         "exit 1 on any problem")
+    ap.add_argument("--expected-requests", type=int, default=None,
+                    help="with --check: require exactly this many "
+                         "complete admission→terminal request chains")
+    args = ap.parse_args()
+
+    trace = load_trace(args.trace)
+    events = trace.get("traceEvents", [])
+    print(f"{args.trace}: {len(events)} events")
+
+    rows = stage_breakdown(trace)
+    if rows:
+        print("\nper-stage time breakdown:")
+        print(f"  {'track':>15s} {'span':<16s} {'count':>6s} "
+              f"{'total_ms':>10s} {'mean_ms':>8s} {'max_ms':>8s}")
+        for r in rows:
+            print(f"  {r['track']:>15s} {r['name']:<16s} {r['count']:>6d} "
+                  f"{r['total_ms']:>10.2f} {r['mean_ms']:>8.2f} "
+                  f"{r['max_ms']:>8.2f}")
+    else:
+        print("\nno duration spans in trace")
+
+    admitted = [e for e in events if e.get("name") == "request_admitted"]
+    terminal = [e for e in events if e.get("name") == "request_terminal"]
+    statuses = {}
+    for e in terminal:
+        st = (e.get("args") or {}).get("status", "?")
+        statuses[st] = statuses.get(st, 0) + 1
+    by_status = ", ".join(f"{k}={v}" for k, v in sorted(statuses.items()))
+    print(f"\nrequest flow chains: {len(admitted)} admitted, "
+          f"{len(terminal)} terminal ({by_status or 'none'})")
+
+    if args.check:
+        problems = validate_trace(trace,
+                                  expected_requests=args.expected_requests)
+        if problems:
+            print(f"\nFAIL: {len(problems)} problem(s):", file=sys.stderr)
+            for p in problems:
+                print(f"  - {p}", file=sys.stderr)
+            return 1
+        print("check: OK (schema valid, all request chains complete)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
