@@ -20,7 +20,14 @@ Three claims of the drafting subsystem, measured:
      whose every row clears the acceptance probe ship with ZERO refine
      steps) spends strictly fewer mean refine steps than the static
      calibrated policy, at an accept rate > 0 and with every accepted
-     row's probe score at or above the threshold (all three gated).
+     row's probe score at or above the threshold (all three gated);
+  5. **distilled tier serves at NFE <= 2 behind a real quality floor**
+     — a few-step head self-distilled on (draft, refined, t0) pairs
+     harvested from this bench's own adaptive serving pass serves
+     ``tier="distilled"`` requests at K steps, with the median-split
+     probe-score floor really splitting the stream (served > 0 AND
+     quality-floor fallbacks > 0, both gated) and every served
+     request's min probe score at or above the floor.
 
 Writes ``BENCH_drafting.json`` (incl. the bandit's per-arm stats).
 
@@ -30,6 +37,7 @@ Run:  PYTHONPATH=src python benchmarks/bench_drafting.py [--smoke] [--out F]
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import json
 from functools import partial
 
@@ -43,12 +51,15 @@ from repro.core import CorruptionDraft, KNNRefinementCoupling, WarmStartPath, pa
 from repro.core.guarantees import warm_nfe
 from repro.data import SyntheticCorpus, TEXT_VOCAB
 from repro.drafting import (
-    ARDraftEngine, AdaptiveT0Policy, BanditT0Policy, LSTMDraftAdapter,
-    fit_t0_calibration, make_quality_scorer, measure_cost_ratio,
+    ARDraftEngine, AdaptiveT0Policy, BanditT0Policy, DistilledRefiner,
+    LSTMDraftAdapter, PairBuffer, fit_t0_calibration, make_quality_scorer,
+    measure_cost_ratio, train_distilled,
 )
 from repro.models import LSTMConfig, LSTMModel, build_model
 from repro.optim import AdamW
-from repro.serving import ServeRequest, WarmStartScheduler, bucket_seq_len
+from repro.serving import (
+    DISTILLED_TIER, ServeRequest, WarmStartScheduler, bucket_seq_len,
+)
 from repro.serving.scheduler import _derive_row_keys
 from repro.training import Trainer
 
@@ -232,9 +243,14 @@ def main():
     draft_fn = mixed_quality_draft(data, TEXT_VOCAB)
     streams = [request_stream(n_requests, max_bucket, seed=s)
                for s in range(args.passes + 1)]
+    # the adaptive pass doubles as the distillation harvest: every
+    # guaranteed refine dispatch feeds its (draft, refined, t0) rows
+    # into the pair buffer (observation only — outputs are untouched)
+    pair_buf = PairBuffer()
     adaptive = serve(model, params, draft_fn, streams,
                      cold_nfe=args.cold_nfe, default_t0=calib.t0_floor,
-                     max_bucket=max_bucket, policy=policy)
+                     max_bucket=max_bucket, policy=policy,
+                     pair_buffer=pair_buf)
     fixed = serve(model, params, draft_fn, streams,
                   cold_nfe=args.cold_nfe, default_t0=calib.t0_floor,
                   max_bucket=max_bucket)
@@ -261,6 +277,75 @@ def main():
           f"accept rate {spec['accept_rate']:.0%} "
           f"({spec['accepted']}/{spec['eligible']} at "
           f"score >= {accept_score:.3f})")
+
+    # ---- 5. distilled few-step tier -------------------------------------
+    print(f"training distilled head on {len(pair_buf)} harvested "
+          "(draft, refined, t0) pairs ...")
+    dmodel = DistilledRefiner(vocab_size=TEXT_VOCAB)
+    dparams, dtrain = train_distilled(dmodel, pair_buf,
+                                      key=jax.random.key(5), epochs=6)
+    distilled_nfe = 1
+
+    def distilled_sched(gate):
+        return WarmStartScheduler(
+            flow_model=model, flow_params=params, draft_fn=draft_fn,
+            cold_nfe=args.cold_nfe, default_t0=calib.t0_floor, max_rows=16,
+            max_bucket=max_bucket,
+            t0_policy=AdaptiveT0Policy(scorer=scorer, calibration=calib,
+                                       bin_width=0.05),
+            distilled_model=dmodel, distilled_params=dparams,
+            distilled_nfe=distilled_nfe, distilled_accept_score=gate)
+
+    # full-bucket distilled requests: the quality floor scores the packed
+    # bucket rows, so full-length requests make the floor-open probe pass
+    # score exactly what the serving gate scores
+    dstreams = [[dataclasses.replace(r, seq_len=max_bucket,
+                                     tier=DISTILLED_TIER) for r in s]
+                for s in streams]
+    probe = distilled_sched(-1e9)
+    pres, _ = probe.serve_requests(dstreams[1])
+    mins = sorted(float(np.asarray(scorer(r.tokens)).min())
+                  for r in pres.values())
+    mid = len(mins) // 2
+    gate = ((mins[mid - 1] + mins[mid]) / 2.0
+            if mins[0] < mins[-1] else mins[0])
+
+    dsched = distilled_sched(gate)
+    dsched.serve_requests(dstreams[0])          # warm the jit caches
+    dserved = dfallbacks = 0
+    dmin_score = None
+    dnfes = []
+    for stream in dstreams[1:]:
+        dres, drep = dsched.serve_requests(stream)
+        d = drep["distilled"]
+        dserved += d["served"]
+        dfallbacks += d["fallbacks"]
+        if d["min_served_score"] is not None:
+            dmin_score = (d["min_served_score"] if dmin_score is None
+                          else min(dmin_score, d["min_served_score"]))
+        for r in dres.values():
+            if r.row_t0s:
+                dnfes.append(float(np.mean(
+                    [warm_nfe(args.cold_nfe, t) for t in r.row_t0s])))
+            else:
+                dnfes.append(float(r.nfe))
+    distilled = {
+        "nfe": distilled_nfe,
+        "gate_score": gate,
+        "requests": sum(len(s) for s in dstreams[1:]),
+        "served": dserved,
+        "fallbacks": dfallbacks,
+        "min_served_score": dmin_score,
+        "mean_stream_nfe": float(np.mean(dnfes)),
+        "train": {"pairs": dtrain.pairs, "steps": dtrain.steps,
+                  "first_loss": dtrain.first_loss,
+                  "final_loss": dtrain.final_loss,
+                  "final_agreement": dtrain.final_agreement},
+    }
+    print(f"distilled tier: {dserved}/{distilled['requests']} served at "
+          f"NFE={distilled_nfe} ({dfallbacks} quality-floor fallbacks at "
+          f"floor {gate:.3f}, blended stream mean NFE "
+          f"{distilled['mean_stream_nfe']:.2f})")
 
     out = {
         "config": {
@@ -290,6 +375,7 @@ def main():
         },
         "speculative_nfe_reduction_pct": 100.0 * (
             1.0 - spec["mean_request_nfe"] / adaptive["mean_request_nfe"]),
+        "distilled": distilled,
     }
     with open(args.out, "w") as f:
         json.dump(out, f, indent=2)
@@ -317,6 +403,17 @@ def main():
         failures.append(
             f"accepted row probe score {spec['min_accepted_score']:.3f} "
             f"below threshold {accept_score:.3f}")
+    if distilled["nfe"] > 2:
+        failures.append(f"distilled NFE {distilled['nfe']} > 2")
+    if distilled["served"] <= 0:
+        failures.append("distilled tier served 0 requests")
+    if distilled["fallbacks"] <= 0:
+        failures.append("distilled quality floor never fell back")
+    if (distilled["min_served_score"] is not None
+            and distilled["min_served_score"] < gate):
+        failures.append(
+            f"distilled-served min probe score "
+            f"{distilled['min_served_score']:.3f} below floor {gate:.3f}")
     if failures:
         raise SystemExit("bench gates failed: " + "; ".join(failures))
 

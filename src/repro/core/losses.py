@@ -47,6 +47,48 @@ def dfm_cross_entropy(
     return jnp.mean(nll)
 
 
+def distill_map_loss(
+    apply_fn: Callable[..., jax.Array],
+    params,
+    x_draft: jax.Array,
+    x_refined: jax.Array,
+    t0: jax.Array,
+    *,
+    weights: Optional[jax.Array] = None,
+    z_loss: float = 0.0,
+):
+    """Flow-map self-distillation loss for the few-step refiner head.
+
+    The distilled head learns the MAP ``x_{t0} -> x_1`` in one jump
+    (Distilled Decoding / Flow Generator Matching style): predict the
+    refined terminal token distribution directly from the draft state at
+    its warm-start time. Unlike :func:`ws_dfm_loss` there is no
+    interpolation and no time sampling — the ``(draft, refined, t0)``
+    triples come straight from the serving pipeline's refine dispatches
+    (see ``repro.drafting.distill.PairBuffer``), so the teacher is the
+    guaranteed path itself.
+
+    Args:
+      apply_fn: distilled head ``(params, tokens (B,N), t (B,)) -> logits``.
+      x_draft: (B, N) int draft tokens at the rows' warm-start times.
+      x_refined: (B, N) int refined tokens the guaranteed path produced.
+      t0: (B,) per-row warm-start times the pairs were harvested at.
+    Returns:
+      (loss, aux dict) — aux carries ``agreement``, the fraction of
+      argmax predictions already matching the teacher (the train-time
+      proxy for the serve-time quality-floor pass rate).
+    """
+    logits = apply_fn(params, x_draft, jnp.asarray(t0, jnp.float32))
+    loss = dfm_cross_entropy(logits, x_refined, weights=weights, z_loss=z_loss)
+    agree = (jnp.argmax(logits, axis=-1) == x_refined).astype(jnp.float32)
+    if weights is not None:
+        w = weights.astype(jnp.float32)
+        agreement = jnp.sum(agree * w) / jnp.maximum(jnp.sum(w), 1.0)
+    else:
+        agreement = jnp.mean(agree)
+    return loss, {"loss": loss, "agreement": agreement}
+
+
 def ws_dfm_loss(
     apply_fn: Callable[..., jax.Array],
     params,

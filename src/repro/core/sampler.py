@@ -155,6 +155,45 @@ def refine_schedule_rows(t0_rows, cold_nfe_h: float, cold_nfe: int):
     return ts, hs, active, key_idx, nfe_rows
 
 
+def distill_schedule_rows(t0_rows, num_steps: int):
+    """Per-row K-step schedule for the DISTILLED few-step refiner tier.
+
+    Where :func:`refine_schedule_rows` prices row ``r`` at its guaranteed
+    ``warm_nfe(cold_nfe, t0_r)`` steps of the COLD step size, the
+    distilled head collapses the whole ``[t0_r, 1]`` trajectory into
+    exactly ``num_steps`` (K in {1, 2}) equal steps per row:
+    ``h_r = (1 - t0_r) / K``, with the same final-step clip to land on
+    ``t = 1``. Every row is active on every step and ``nfe_rows == K``
+    for all rows regardless of the batch's t0 spread — the structural
+    "NFE <= K" the distilled SLO tier is priced (and bench-gated) on.
+
+    Returns ``(ts, hs, active, key_idx, nfe_rows)`` in the same shapes
+    and dtypes as :func:`refine_schedule_rows`, so
+    :func:`scan_refine_loop_rows` consumes either schedule unchanged.
+    """
+    if num_steps < 1:
+        raise ValueError(f"num_steps must be >= 1, got {num_steps}")
+    t0_rows = np.asarray(t0_rows, np.float64)
+    if t0_rows.ndim != 1:
+        raise ValueError(f"t0_rows must be 1-D, got shape {t0_rows.shape}")
+    if np.any(t0_rows < 0.0) or np.any(t0_rows >= 1.0):
+        raise ValueError(f"t0_rows must lie in [0, 1), got {t0_rows}")
+    b = t0_rows.shape[0]
+    h_rows = (1.0 - t0_rows) / num_steps
+    local = np.arange(num_steps, dtype=np.int64)[:, None]
+    # same float path as refine_schedule: f64 accumulate, f32 cast, clip h
+    ts = (t0_rows[None, :] + local * h_rows[None, :]).astype(np.float32)
+    hs = np.minimum(
+        h_rows[None, :].astype(np.float32), np.float32(1.0) - ts
+    ).astype(np.float32)
+    active = np.ones((num_steps, b), dtype=bool)
+    key_idx = np.broadcast_to(
+        np.arange(num_steps, dtype=np.int32)[:, None], (num_steps, b)
+    ).astype(np.int32)
+    nfe_rows = np.full((b,), num_steps, np.int32)
+    return ts, hs, active, key_idx, nfe_rows
+
+
 def scan_refine_loop_rows(
     logits_fn: Callable[[jax.Array, jax.Array], jax.Array],
     one_step: Callable,

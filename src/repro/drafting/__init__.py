@@ -14,6 +14,10 @@ Three pillars (see README.md):
     (bucket, score-bin) context, learning online from the verify-step
     probe reward; interchangeable with ``AdaptiveT0Policy`` behind the
     scheduler's policy protocol.
+  * ``distill``    — self-distilled few-step refiner head trained on
+    (draft, refined, t0) pairs harvested from the serving pipeline's
+    own refine dispatches, served as the cheap ``tier="distilled"``
+    request class behind a probe-score quality floor.
 """
 
 from repro.drafting.ar_engine import (
@@ -25,6 +29,10 @@ from repro.drafting.quality import (
 )
 from repro.drafting.policy import AdaptiveT0Policy, bin_t0
 from repro.drafting.bandit import BanditT0Policy, default_accept_score
+from repro.drafting.distill import (
+    DistilledRefiner, DistillReport, PairBuffer, distilled_checkpoint_exists,
+    restore_distilled, save_distilled, train_distilled,
+)
 from repro.drafting.ref import oracle_generate_rows
 
 __all__ = [
@@ -34,5 +42,7 @@ __all__ = [
     "measure_cost_ratio", "CostRatioReport",
     "AdaptiveT0Policy", "bin_t0",
     "BanditT0Policy", "default_accept_score",
+    "PairBuffer", "DistilledRefiner", "DistillReport", "train_distilled",
+    "save_distilled", "restore_distilled", "distilled_checkpoint_exists",
     "oracle_generate_rows",
 ]

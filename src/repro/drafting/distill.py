@@ -1,0 +1,296 @@
+"""Self-distilled few-step refiner: the serving stack's cheap SLO tier.
+
+Distilled Decoding and Flow Generator Matching (PAPERS.md) show a whole
+flow-matching refine trajectory can be collapsed into a 1-2 step
+generator. This module does that *against the serving pipeline itself*:
+
+  * :class:`PairBuffer` — a bounded, thread-safe FIFO of
+    ``(draft, refined, t0)`` rows harvested from the scheduler's refine
+    dispatches (the guaranteed path is the teacher; no extra teacher
+    forward passes are ever run);
+  * :class:`DistilledRefiner` — a deliberately small flow-map head
+    ``dfm_apply(params, tokens, t) -> logits`` that predicts the refined
+    terminal token distribution directly from the draft state at its
+    warm-start time (loss: :func:`repro.core.losses.distill_map_loss`);
+  * :func:`train_distilled` — the self-distillation training loop over
+    the buffer (AdamW, one jitted step per sequence length);
+  * :func:`save_distilled` / :func:`restore_distilled` — checkpointing
+    through ``repro.checkpoint.io`` (flat npz + manifest).
+
+Serving integration lives in the scheduler: ``tier="distilled"``
+requests pack into their own (bucket, t0-bin, priority) bins, run
+``distilled_nfe`` (K in {1, 2}) steps of this head through the SAME
+masked row scan as the guaranteed path
+(:func:`repro.core.sampler.distill_schedule_rows`), and pass a
+calibrated probe-score quality floor — or fall back to the guaranteed
+refine path, bit-identical to a fresh guaranteed request.
+"""
+
+from __future__ import annotations
+
+import collections
+import dataclasses
+import threading
+from functools import partial
+from typing import Iterator, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint.io import latest_step, restore_checkpoint, save_checkpoint
+from repro.core.losses import distill_map_loss
+from repro.optim.adamw import AdamW
+
+
+class PairBuffer:
+    """Bounded FIFO of ``(draft, refined, t0)`` training rows.
+
+    Fed by the scheduler's refine dispatches (``pair_buffer=`` ctor arg):
+    every guaranteed micro-batch contributes its real (non-padding) rows
+    — the draft state that entered the scan, the refined tokens that
+    left it, and the per-row warm-start time. Rows of different sequence
+    lengths coexist; :meth:`batches` groups by length so every training
+    batch is rectangular. Capacity-bounded with oldest-first eviction so
+    a long-running server distills against *recent* traffic.
+
+    Thread-safe: the streaming serving loop appends from its dispatch
+    thread while a trainer drains snapshots.
+    """
+
+    def __init__(self, capacity: int = 4096):
+        if capacity < 1:
+            raise ValueError(f"capacity must be >= 1, got {capacity}")
+        self.capacity = capacity
+        self._rows: collections.deque = collections.deque()
+        self._lock = threading.Lock()
+        self._added = 0
+        self._evicted = 0
+
+    def add_batch(self, draft, refined, t0_rows, *, mask=None) -> int:
+        """Append the real rows of one dispatched micro-batch.
+
+        Args:
+          draft: (B, N) int tokens that entered the refine scan.
+          refined: (B, N) int tokens the scan produced.
+          t0_rows: (B,) per-row warm-start times.
+          mask: optional (B,) bool — False rows (padding) are skipped.
+        Returns:
+          number of rows actually added.
+        """
+        draft = np.asarray(draft)
+        refined = np.asarray(refined)
+        t0_rows = np.asarray(t0_rows, np.float64)
+        if draft.shape != refined.shape or draft.ndim != 2:
+            raise ValueError(
+                f"draft/refined must share a (B, N) shape, got "
+                f"{draft.shape} vs {refined.shape}")
+        if t0_rows.shape != (draft.shape[0],):
+            raise ValueError(
+                f"t0_rows shape {t0_rows.shape} does not match batch "
+                f"{draft.shape[0]}")
+        added = 0
+        with self._lock:
+            for r in range(draft.shape[0]):
+                if mask is not None and not bool(mask[r]):
+                    continue
+                self._rows.append((
+                    np.asarray(draft[r], np.int32).copy(),
+                    np.asarray(refined[r], np.int32).copy(),
+                    float(t0_rows[r]),
+                ))
+                self._added += 1
+                added += 1
+                if len(self._rows) > self.capacity:
+                    self._rows.popleft()
+                    self._evicted += 1
+        return added
+
+    def __len__(self) -> int:
+        with self._lock:
+            return len(self._rows)
+
+    def stats(self) -> dict:
+        with self._lock:
+            return {"size": len(self._rows), "added": self._added,
+                    "evicted": self._evicted, "capacity": self.capacity}
+
+    def snapshot(self) -> dict:
+        """Length-grouped arrays: ``{N: (draft (M,N), refined, t0 (M,))}``."""
+        with self._lock:
+            rows = list(self._rows)
+        groups: dict = {}
+        for d, x, t0 in rows:
+            groups.setdefault(d.shape[0], []).append((d, x, t0))
+        return {
+            n: (np.stack([d for d, _, _ in g]),
+                np.stack([x for _, x, _ in g]),
+                np.asarray([t for _, _, t in g], np.float64))
+            for n, g in groups.items()
+        }
+
+    def batches(self, batch_size: int, *, rng: Optional[np.random.Generator]
+                = None) -> Iterator[Tuple[np.ndarray, np.ndarray, np.ndarray]]:
+        """One epoch of rectangular ``(draft, refined, t0)`` batches.
+
+        Rows are grouped by sequence length (each group optionally
+        shuffled by ``rng``) and chunked to at most ``batch_size`` rows.
+        """
+        if batch_size < 1:
+            raise ValueError(f"batch_size must be >= 1, got {batch_size}")
+        for _, (draft, refined, t0) in sorted(self.snapshot().items()):
+            order = np.arange(draft.shape[0])
+            if rng is not None:
+                rng.shuffle(order)
+            for lo in range(0, order.shape[0], batch_size):
+                sel = order[lo:lo + batch_size]
+                yield draft[sel], refined[sel], t0[sel]
+
+
+@dataclasses.dataclass(frozen=True)
+class DistilledRefiner:
+    """The distilled flow-map head: tiny by design.
+
+    ``dfm_apply(params, tokens (B, N), t (B,)) -> logits (B, N, V)`` —
+    the same protocol as the flow backbone, so the head plugs into the
+    scheduler's masked row scan, the quality probe scorer, and the jit
+    cache unchanged. Architecture: token embedding, a 3-tap depthwise
+    positional mix, FiLM conditioning on the warm-start time, one
+    residual MLP block, and an output projection with a learnable
+    copy-gate bias toward the input token — the refined sequence shares
+    most tokens with the draft, so the head starts as a draft-copier and
+    learns only the corrections (which is what makes a 1-epoch smoke
+    distillation land above the quality floor on easy rows).
+    """
+
+    vocab_size: int
+    d_model: int = 32
+    hidden: int = 64
+    copy_gate_init: float = 2.0
+
+    def init(self, key) -> dict:
+        ks = jax.random.split(key, 5)
+        s = 0.02
+        v, d, h = self.vocab_size, self.d_model, self.hidden
+        return {
+            "embed": s * jax.random.normal(ks[0], (v, d), jnp.float32),
+            "mix": jnp.asarray([0.0, 1.0, 0.0], jnp.float32)[:, None]
+                   + s * jax.random.normal(ks[1], (3, d), jnp.float32),
+            "t_film": jnp.zeros((2, d), jnp.float32),
+            "w1": s * jax.random.normal(ks[2], (d, h), jnp.float32),
+            "b1": jnp.zeros((h,), jnp.float32),
+            "w2": s * jax.random.normal(ks[3], (h, d), jnp.float32),
+            "b2": jnp.zeros((d,), jnp.float32),
+            "out": s * jax.random.normal(ks[4], (d, v), jnp.float32),
+            "out_b": jnp.zeros((v,), jnp.float32),
+            "copy_gate": jnp.asarray(self.copy_gate_init, jnp.float32),
+        }
+
+    def dfm_apply(self, params, tokens, t, *, extras: Optional[dict] = None):
+        del extras
+        e = params["embed"][tokens]                       # (B, N, d)
+        left = jnp.pad(e, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+        right = jnp.pad(e, ((0, 0), (0, 1), (0, 0)))[:, 1:]
+        hid = (left * params["mix"][0] + e * params["mix"][1]
+               + right * params["mix"][2])
+        tc = jnp.asarray(t, jnp.float32)[:, None, None]
+        hid = hid * (1.0 + tc * params["t_film"][0]) + tc * params["t_film"][1]
+        z = jnp.tanh(hid @ params["w1"] + params["b1"])
+        hid = hid + z @ params["w2"] + params["b2"]
+        logits = hid @ params["out"] + params["out_b"]
+        onehot = jax.nn.one_hot(tokens, self.vocab_size, dtype=jnp.float32)
+        return logits + params["copy_gate"] * onehot
+
+
+@dataclasses.dataclass(frozen=True)
+class DistillReport:
+    """What one :func:`train_distilled` run did."""
+
+    steps: int
+    epochs: int
+    pairs: int                  # distinct buffered rows trained against
+    first_loss: float
+    final_loss: float
+    final_agreement: float      # argmax-vs-teacher token agreement
+
+    def as_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+def train_distilled(
+    model: DistilledRefiner,
+    buffer: PairBuffer,
+    *,
+    key,
+    params: Optional[dict] = None,
+    epochs: int = 1,
+    batch_size: int = 64,
+    learning_rate: float = 3e-2,
+    weight_decay: float = 0.0,
+    z_loss: float = 0.0,
+    seed: int = 0,
+) -> Tuple[dict, DistillReport]:
+    """Self-distillation training loop over a harvested pair buffer.
+
+    One jitted train step per sequence length present in the buffer
+    (batches are rectangular per length; the tail batch of each group
+    retraces once — lengths are pow2-bucketed upstream so the compile
+    set stays tiny). Returns ``(params, DistillReport)``.
+    """
+    if len(buffer) == 0:
+        raise ValueError("PairBuffer is empty — serve some guaranteed "
+                         "traffic with pair_buffer= attached first")
+    opt = AdamW(learning_rate=learning_rate, weight_decay=weight_decay)
+    if params is None:
+        params = model.init(key)
+    opt_state = opt.init(params)
+
+    @partial(jax.jit, donate_argnums=(0, 1))
+    def train_step(params, opt_state, draft, refined, t0):
+        def loss_fn(p):
+            return distill_map_loss(
+                model.dfm_apply, p, draft, refined, t0, z_loss=z_loss)
+        (loss, aux), grads = jax.value_and_grad(loss_fn, has_aux=True)(params)
+        params, opt_state = opt.update(grads, opt_state, params)
+        return params, opt_state, loss, aux["agreement"]
+
+    rng = np.random.default_rng(seed)
+    steps = 0
+    first_loss = final_loss = final_agreement = float("nan")
+    for _ in range(epochs):
+        for draft, refined, t0 in buffer.batches(batch_size, rng=rng):
+            params, opt_state, loss, agreement = train_step(
+                params, opt_state, jnp.asarray(draft), jnp.asarray(refined),
+                jnp.asarray(t0, jnp.float32))
+            final_loss = float(loss)
+            final_agreement = float(agreement)
+            if steps == 0:
+                first_loss = final_loss
+            steps += 1
+    report = DistillReport(
+        steps=steps, epochs=epochs, pairs=len(buffer),
+        first_loss=first_loss, final_loss=final_loss,
+        final_agreement=final_agreement)
+    return params, report
+
+
+def save_distilled(directory, params, step: int = 0) -> str:
+    """Checkpoint distilled head params (flat npz + manifest, atomic)."""
+    return save_checkpoint(directory, {"params": params}, step)
+
+
+def restore_distilled(directory, model: DistilledRefiner,
+                      step: Optional[int] = None) -> dict:
+    """Restore distilled head params saved by :func:`save_distilled`.
+
+    The template comes from ``model.init`` (shapes only — values are
+    overwritten), so callers need the same :class:`DistilledRefiner`
+    config the checkpoint was trained with.
+    """
+    template = {"params": model.init(jax.random.key(0))}
+    return restore_checkpoint(directory, template, step)["params"]
+
+
+def distilled_checkpoint_exists(directory) -> bool:
+    """True when ``directory`` holds at least one distilled checkpoint."""
+    return latest_step(directory) is not None

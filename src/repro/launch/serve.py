@@ -24,6 +24,32 @@ Drafting subsystem modes (see ``src/repro/drafting/``):
                   --scheduler (needs --t0 auto/bandit; auto is enabled
                   when neither was requested).
 
+Distilled SLO tier (implies --scheduler and an adaptive --t0 policy):
+  --tier distilled          serve the request set as the cheap
+                            ``tier="distilled"`` class: a few-step
+                            self-distilled refiner head (trained on
+                            (draft, refined, t0) pairs harvested from a
+                            guaranteed warm-up pass, or restored from
+                            --distill-ckpt) serves each request at
+                            NFE = K in {1, 2} behind a probe-score
+                            quality floor; requests that miss the floor
+                            fall back to the guaranteed path
+                            bit-identical to a fresh guaranteed request;
+  --distill-ckpt DIR        restore the distilled head from DIR if a
+                            checkpoint exists there, else train one and
+                            save it to DIR;
+  --distilled-nfe K         steps for the distilled head (1 or 2);
+  --distilled-accept-score  explicit quality floor; default: two-pass
+                            calibration (pass 1 serves with the floor
+                            open and takes the median split of the
+                            per-request min probe scores, pass 2 is the
+                            real serve);
+  --check-distilled         exit non-zero unless the distilled tier
+                            really served (served > 0), the quality
+                            floor really rejected (fallbacks > 0), the
+                            ledger conserves every admission, and the
+                            distilled NFE is <= 2.
+
 Streaming / SLO admission modes (imply --scheduler):
   --stream           serve through the streaming admission loop
                      (``serve_stream``): results print as each
@@ -89,6 +115,26 @@ def main():
     ap.add_argument("--accept-score", type=float, default=None,
                     help="speculative acceptance threshold on the probe "
                          "score (default: the calibration's top anchor)")
+    ap.add_argument("--tier", choices=("guaranteed", "distilled"),
+                    default="guaranteed",
+                    help="request class to serve: 'distilled' routes the "
+                         "set through the few-step distilled refiner tier "
+                         "behind its quality floor (implies --scheduler "
+                         "and an adaptive --t0 policy)")
+    ap.add_argument("--distill-ckpt", default=None, metavar="DIR",
+                    help="distilled-head checkpoint dir: restore from it "
+                         "when present, else train on harvested pairs and "
+                         "save to it")
+    ap.add_argument("--distilled-nfe", type=int, default=1,
+                    help="distilled refiner steps K (1 or 2)")
+    ap.add_argument("--distilled-accept-score", type=float, default=None,
+                    help="probe-score quality floor for the distilled "
+                         "tier (default: two-pass median-split "
+                         "calibration over the request set)")
+    ap.add_argument("--check-distilled", action="store_true",
+                    help="gate mode: exit non-zero unless the distilled "
+                         "tier served > 0, fell back > 0, conserved every "
+                         "admission, and shipped at NFE <= 2")
     ap.add_argument("--per-row-t0", action="store_true",
                     help="per-ROW adaptive t0: rows of one request enter "
                          "the shared refine scan at their own calibrated "
@@ -156,9 +202,16 @@ def main():
         print("--trace-out/--metrics-out imply --scheduler; enabling it")
         args.scheduler = True
 
+    if args.check_distilled and args.tier != "distilled":
+        print("--check-distilled implies --tier distilled; enabling it")
+        args.tier = "distilled"
     t0_mode = str(args.t0).lower()
     if args.speculative and t0_mode not in ("auto", "bandit"):
         print("--speculative needs an adaptive t0 policy; enabling --t0 auto")
+        t0_mode = "auto"
+    if args.tier == "distilled" and t0_mode not in ("auto", "bandit"):
+        print("--tier distilled needs an adaptive t0 policy "
+              "(the quality floor scores under it); enabling --t0 auto")
         t0_mode = "auto"
     t0_auto = t0_mode in ("auto", "bandit")
     if (t0_auto or args.stream) and not args.scheduler:
@@ -248,7 +301,10 @@ def main():
         if args.trace_out:
             from repro.obs import SpanTracer
             tracer = SpanTracer(capacity=args.trace_capacity)
-        sched = WarmStartScheduler(
+        rng_sizes = np.random.default_rng(args.seed + 1)
+        sizes = [int(rng_sizes.integers(max_bucket // 2, max_bucket + 1))
+                 for _ in range(args.num)]
+        sched_kw = dict(
             flow_model=model, flow_params=state.params,
             draft_fn=draft_fn,
             cold_nfe=args.cold_nfe,
@@ -258,8 +314,106 @@ def main():
             per_row_t0=args.per_row_t0,
             speculative=args.speculative,
             accept_score=args.accept_score,
-            tracer=tracer,
         )
+        distilled_kw = {}
+        if args.tier == "distilled":
+            from repro.drafting import (
+                DistilledRefiner, PairBuffer, distilled_checkpoint_exists,
+                restore_distilled, save_distilled, train_distilled,
+            )
+
+            # full-bucket requests: the gate scores the packed bucket
+            # rows, so serving at seq_len == bucket makes the two-pass
+            # calibration score exactly what the serving gate scores
+            sizes = [max_bucket] * args.num
+            dmodel = DistilledRefiner(vocab_size=TEXT_VOCAB)
+            if args.distill_ckpt and distilled_checkpoint_exists(
+                    args.distill_ckpt):
+                dparams = restore_distilled(args.distill_ckpt, dmodel)
+                print(f"distilled head restored from {args.distill_ckpt}")
+            else:
+                # harvest (draft, refined, t0) pairs from a guaranteed
+                # warm-up pass over the same request set
+                buf = PairBuffer()
+                harvest = WarmStartScheduler(**sched_kw, pair_buffer=buf)
+                for i, L in enumerate(sizes):
+                    harvest.submit(seq_len=L, num_samples=1, seed=100 + i,
+                                   t0=None)
+                harvest.run()
+                dparams, drep = train_distilled(
+                    dmodel, buf, key=jax.random.key(13), epochs=8)
+                print(f"distilled head trained on {drep.pairs} harvested "
+                      f"pairs: loss {drep.first_loss:.3f} -> "
+                      f"{drep.final_loss:.3f}, "
+                      f"agreement {drep.final_agreement:.2f}")
+                if args.distill_ckpt:
+                    save_distilled(args.distill_ckpt, dparams,
+                                   step=drep.steps)
+                    print(f"distilled head saved to {args.distill_ckpt}")
+            gate = args.distilled_accept_score
+            if gate is None:
+                # two-pass gate calibration, pass 1: serve the set with
+                # the floor wide open and median-split the per-request
+                # min probe scores (same seeds + packing as the real
+                # pass, so pass-1 outputs are bit-identical to pass 2)
+                probe = WarmStartScheduler(
+                    **sched_kw, distilled_model=dmodel,
+                    distilled_params=dparams,
+                    distilled_nfe=args.distilled_nfe,
+                    distilled_accept_score=-1e9)
+                prids = [probe.submit(seq_len=L, num_samples=1,
+                                      seed=100 + i, t0=None,
+                                      tier="distilled")
+                         for i, L in enumerate(sizes)]
+                pres, _ = probe.run()
+                mins = sorted(
+                    float(np.asarray(t0_policy.scorer(
+                        pres[rid].tokens)).min()) for rid in prids)
+                if mins[0] == mins[-1]:
+                    gate = mins[0]
+                    print("warning: every request scored "
+                          f"{gate:.3f} under the distilled head; the "
+                          "quality floor cannot split this set")
+                else:
+                    mid = len(mins) // 2
+                    gate = (mins[mid - 1] + mins[mid]) / 2.0
+                print(f"distilled quality floor calibrated: "
+                      f"score >= {gate:.3f} "
+                      f"(min scores {mins[0]:.3f}..{mins[-1]:.3f})")
+            distilled_kw = dict(
+                distilled_model=dmodel, distilled_params=dparams,
+                distilled_nfe=args.distilled_nfe,
+                distilled_accept_score=gate)
+        sched = WarmStartScheduler(**sched_kw, tracer=tracer, **distilled_kw)
+
+        def check_distilled(rep, *, stream):
+            """--check-distilled gate: the tier must have really served,
+            really fallen back, conserved every admission, and shipped
+            at NFE <= 2."""
+            d = rep.get("distilled") or {}
+            fails = []
+            if not d.get("enabled"):
+                fails.append("distilled tier not enabled")
+            if d.get("served", 0) <= 0:
+                fails.append("distilled served 0 requests")
+            if d.get("fallbacks", 0) <= 0:
+                fails.append("quality floor never fell back")
+            if d.get("nfe", 99) > 2:
+                fails.append(f"distilled NFE {d.get('nfe')} > 2")
+            if stream:
+                if not rep["conservation"]["balanced"]:
+                    fails.append("conservation ledger unbalanced")
+                if rep["terminal"]["distilled"] != d.get("served"):
+                    fails.append("terminal ledger != distilled served")
+            else:
+                if d.get("served", 0) + d.get("fallbacks", 0) \
+                        != d.get("requests", -1):
+                    fails.append("served + fallbacks != distilled requests")
+            status = "FAILED" if fails else "OK"
+            print(f"check-distilled: {status}"
+                  + ("".join(f"\n  - {f}" for f in fails)))
+            if fails:
+                raise SystemExit(1)
 
         def write_telemetry():
             """Flush trace / metrics artifacts at the end of a run."""
@@ -286,13 +440,11 @@ def main():
         if args.speculative:
             print(f"speculative accept threshold: "
                   f"score >= {sched.accept_score:.3f}")
-        rng_sizes = np.random.default_rng(args.seed + 1)
-        sizes = [int(rng_sizes.integers(max_bucket // 2, max_bucket + 1))
-                 for _ in range(args.num)]
 
         if args.stream:
             from repro.serving import (
-                ACCEPTED_DRAFT, COMPLETED, AdmissionQueue, QueueFull,
+                ACCEPTED_DRAFT, COMPLETED, DISTILLED, AdmissionQueue,
+                QueueFull,
             )
 
             queue = AdmissionQueue(
@@ -316,7 +468,8 @@ def main():
                         queue.submit(seq_len=L, num_samples=1, seed=100 + i,
                                      t0=None,  # None -> policy / default
                                      priority=args.priority,
-                                     timeout_s=timeout_s)
+                                     timeout_s=timeout_s,
+                                     tier=args.tier)
                     except QueueFull:
                         pass            # counted in the admission ledger
                 queue.close()
@@ -333,6 +486,11 @@ def main():
                                           idle_timeout_s=0.02):
                 if res.status == ACCEPTED_DRAFT:
                     print(f"  [{res.request_id}] ACCEPTED_DRAFT nfe=0 "
+                          f"latency={res.latency_s * 1e3:.0f}ms  "
+                          f"{decode(np.asarray(res.tokens[0]))}")
+                    continue
+                if res.status == DISTILLED:
+                    print(f"  [{res.request_id}] DISTILLED nfe={res.nfe} "
                           f"latency={res.latency_s * 1e3:.0f}ms  "
                           f"{decode(np.asarray(res.tokens[0]))}")
                     continue
@@ -354,8 +512,10 @@ def main():
             rep = sched.stream_report
             lat = rep["latency_s"]
             att = rep["slo_attainment"]
-            print(f"\nstream: {rep['completed'] + rep['accepted_draft']} "
-                  f"results ({rep['accepted_draft']} accepted drafts) in "
+            print(f"\nstream: "
+                  f"{rep['completed'] + rep['accepted_draft'] + rep['distilled_served']} "
+                  f"results ({rep['accepted_draft']} accepted drafts, "
+                  f"{rep['distilled_served']} distilled) in "
                   f"{rep['num_micro_batches']} micro-batches, "
                   f"first result at {rep['time_to_first_result_s']:.3f}s, "
                   f"latency p50/p95/p99 = {lat['p50'] * 1e3:.0f}/"
@@ -370,20 +530,28 @@ def main():
                       f"threshold {spec['accept_score']:.3f})")
             if rep.get("bandit"):
                 print(f"bandit arms: {len(rep['bandit'])} contexts learned")
+            if (rep.get("distilled") or {}).get("enabled"):
+                d = rep["distilled"]
+                print(f"distilled: {d['served']} served at NFE={d['nfe']} "
+                      f"({d['fallbacks']} quality-floor fallbacks, "
+                      f"floor {d['gate_score']:.3f})")
             term = rep["terminal"]
             if any(v for k, v in term.items()
-                   if k not in (COMPLETED, ACCEPTED_DRAFT)):
+                   if k not in (COMPLETED, ACCEPTED_DRAFT, DISTILLED)):
                 print(f"terminal: {term}; admission {rep['admission']}; "
                       f"conservation "
                       f"{'OK' if rep['conservation']['balanced'] else 'BROKEN'}")
             if engine is not None:
                 print(f"draft engine: {engine.stats.as_dict()}")
             write_telemetry()
+            if args.check_distilled:
+                check_distilled(rep, stream=True)
             return
 
         for i, L in enumerate(sizes):
             sched.submit(seq_len=L, num_samples=1, seed=100 + i,
-                         t0=None)          # None -> policy / default
+                         t0=None,          # None -> policy / default
+                         tier=args.tier)
         results, rep = sched.run()
         print(f"\nscheduler: {rep['num_requests']} requests in "
               f"{rep['num_micro_batches']} micro-batches, "
@@ -400,6 +568,11 @@ def main():
                   f"threshold {spec['accept_score']:.3f})")
         if rep.get("bandit"):
             print(f"bandit arms: {len(rep['bandit'])} contexts learned")
+        if (rep.get("distilled") or {}).get("enabled"):
+            d = rep["distilled"]
+            print(f"distilled: {d['served']}/{d['requests']} served at "
+                  f"NFE={d['nfe']} ({d['fallbacks']} quality-floor "
+                  f"fallbacks, floor {d['gate_score']:.3f})")
         if engine is not None:
             print(f"draft engine: {engine.stats.as_dict()}")
         for rid in sorted(results)[:4]:
@@ -407,6 +580,8 @@ def main():
             print(f"[{rid}] t0={r.t0:.2f} nfe={r.nfe} bucket={r.bucket_len} "
                   f"{decode(np.asarray(r.tokens[0]))}")
         write_telemetry()
+        if args.check_distilled:
+            check_distilled(rep, stream=False)
         return
 
     t0 = float(args.t0)

@@ -1,6 +1,7 @@
 from repro.serving.batcher import (
-    ACCEPTED_DRAFT, CANCELLED, COMPLETED, DEADLINE_ARMED, DISPATCHED, FAILED,
-    FILLING, PRIORITY_CLASSES, SHED, TERMINAL_STATUSES, TIMED_OUT, CancelToken,
+    ACCEPTED_DRAFT, CANCELLED, COMPLETED, DEADLINE_ARMED, DISPATCHED,
+    DISTILLED, DISTILLED_TIER, FAILED, FILLING, GUARANTEED_TIER,
+    PRIORITY_CLASSES, SHED, TERMINAL_STATUSES, TIERS, TIMED_OUT, CancelToken,
     FillingBucket, MicroBatch, RowSpan, ServeRequest, bucket_seq_len,
     pack_requests, pad_rows, priority_rank, split_request, t0_bin,
     usable_rows,
@@ -25,8 +26,9 @@ __all__ = [
     "pack_requests", "t0_bin", "usable_rows", "split_request",
     "FillingBucket", "FILLING", "DEADLINE_ARMED", "DISPATCHED",
     "PRIORITY_CLASSES", "priority_rank", "CancelToken",
-    "COMPLETED", "ACCEPTED_DRAFT", "CANCELLED", "TIMED_OUT", "SHED",
-    "FAILED", "TERMINAL_STATUSES",
+    "COMPLETED", "ACCEPTED_DRAFT", "DISTILLED", "CANCELLED", "TIMED_OUT",
+    "SHED", "FAILED", "TERMINAL_STATUSES",
+    "GUARANTEED_TIER", "DISTILLED_TIER", "TIERS",
     "WarmStartScheduler", "RequestResult", "CompletedRequest",
     "AdmissionQueue", "QueueClosed", "QueueFull",
     "DEFAULT_CLASS_SLO_FACTOR",

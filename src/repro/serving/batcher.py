@@ -36,6 +36,7 @@ from repro.core import guarantees
 # fold_in tags separating the draft-stage and flow-stage key streams
 DRAFT_STREAM = 0
 FLOW_STREAM = 1
+DISTILL_STREAM = 2
 
 # priority classes, best first. Shedding under overload walks this tuple
 # BACKWARDS (best_effort is shed first, premium last); dispatch ordering
@@ -61,12 +62,28 @@ def priority_rank(priority: str) -> int:
 # timed_out + failed) is gated by the overload bench.
 COMPLETED = "completed"     # tokens delivered, guarantee enforced
 ACCEPTED_DRAFT = "accepted_draft"   # speculative accept: draft shipped, 0 NFE
+DISTILLED = "distilled"     # distilled tier: K-step head output passed the
+                            # quality floor and shipped (NFE = K in {1, 2})
 CANCELLED = "cancelled"     # caller cancelled via CancelToken
 TIMED_OUT = "timed_out"     # per-request timeout_s expired
 SHED = "shed"               # evicted from a full bounded AdmissionQueue
 FAILED = "failed"           # refine dispatch failed after retry budget
-TERMINAL_STATUSES = (COMPLETED, ACCEPTED_DRAFT, CANCELLED, TIMED_OUT, SHED,
-                     FAILED)
+TERMINAL_STATUSES = (COMPLETED, ACCEPTED_DRAFT, DISTILLED, CANCELLED,
+                     TIMED_OUT, SHED, FAILED)
+
+
+# request tiers (SLO classes with different pricing):
+#   guaranteed — the paper path: warm_nfe(cold_nfe, t0) refine steps with
+#     the 1/(1-t0) guarantee enforced per row;
+#   distilled  — the cheap class: a distilled few-step head collapses the
+#     whole [t0, 1] trajectory into K in {1, 2} steps, behind a calibrated
+#     probe-score quality floor. Requests scoring below the floor FALL
+#     BACK to the guaranteed path, re-entering packing bit-identical to a
+#     fresh guaranteed request (per-row PRNG streams and t0 resolution are
+#     pure functions of the request, never of the attempt history).
+GUARANTEED_TIER = "guaranteed"
+DISTILLED_TIER = "distilled"
+TIERS = (GUARANTEED_TIER, DISTILLED_TIER)
 
 
 class CancelToken:
@@ -140,6 +157,10 @@ class ServeRequest:
     # batcher groups by and the guarantee bound is derived from; rows with
     # deeper t0 enter the shared masked refine schedule later.
     row_t0s: Tuple[float, ...] = ()
+    # SLO tier (one of TIERS): distilled-tier requests are served by the
+    # K-step distilled head behind a quality floor, falling back to the
+    # guaranteed path when the floor rejects them.
+    tier: str = GUARANTEED_TIER
 
     def __post_init__(self):
         if self.seq_len < 1:
@@ -153,6 +174,9 @@ class ServeRequest:
         if self.t0 is not None and not (0.0 <= self.t0 < 1.0):
             raise ValueError(f"t0 override must lie in [0, 1), got {self.t0}")
         priority_rank(self.priority)    # raises on unknown classes
+        if self.tier not in TIERS:
+            raise ValueError(
+                f"unknown tier {self.tier!r}; expected one of {TIERS}")
         if self.timeout_s is not None and self.timeout_s <= 0.0:
             raise ValueError(
                 f"timeout_s must be > 0, got {self.timeout_s}")
@@ -226,6 +250,10 @@ class MicroBatch:
     # per-span per-ROW t0 tuples (heterogeneous rows inside one request);
     # empty tuples mean "homogeneous at the span's t0_spans value"
     row_t0_spans: Tuple[Tuple[float, ...], ...] = ()
+    # SLO tier of every span (micro-batches never mix tiers): a distilled
+    # micro-batch runs the K-step distilled head instead of the guaranteed
+    # refine scan, and n_steps is K rather than warm_nfe(cold_nfe, t0).
+    tier: str = GUARANTEED_TIER
 
     def __post_init__(self):
         if not self.t0_spans:
@@ -275,9 +303,13 @@ class MicroBatch:
         return mask
 
     @property
-    def compile_key(self) -> Tuple[int, int, int]:
-        """The jit-cache key: everything shape- or trace-relevant."""
-        return (self.bucket_len, self.padded_rows, self.n_steps)
+    def compile_key(self) -> Tuple:
+        """The jit-cache key: everything shape- or trace-relevant. The
+        distilled tier gets its OWN entries — a distilled 2-step dispatch
+        never shares a trace with a guaranteed n_steps=2 one (different
+        backbone, different schedule builder)."""
+        key = (self.bucket_len, self.padded_rows, self.n_steps)
+        return key if self.tier == GUARANTEED_TIER else key + (self.tier,)
 
 
 def bucket_seq_len(seq_len: int, *, min_bucket: int = 8,
@@ -512,6 +544,7 @@ def pack_requests(
     row_quantum: int = 4,
     row_multiple: int = 1,
     t0_bin_width: float = 0.0,
+    distilled_nfe: int = 1,
 ) -> List[MicroBatch]:
     """Group requests into micro-batches.
 
@@ -535,6 +568,12 @@ def pack_requests(
     apart (and a class's latency is never coupled to a lower class's
     batch). Compile keys are unaffected — priority changes grouping,
     not shapes.
+
+    Tier is part of the group key too: distilled-tier requests form
+    their own (bucket, t0-bin, priority) bins whose micro-batches run
+    ``distilled_nfe`` (K in {1, 2}) steps of the distilled head instead
+    of ``warm_nfe(cold_nfe, t0)`` refine steps, and whose compile keys
+    carry the tier so the jit cache never mixes tiers.
     """
     unit = math.lcm(row_quantum, row_multiple)
     if unit > max_rows:
@@ -555,21 +594,22 @@ def pack_requests(
         blen = bucket_seq_len(req.seq_len, min_bucket=min_bucket,
                               max_bucket=max_bucket)
         groups.setdefault(
-            (blen, t0_bin(t0, t0_bin_width), req.priority), []).append(
-            (req, t0))
+            (blen, t0_bin(t0, t0_bin_width), req.priority, req.tier),
+            []).append((req, t0))
 
     batches: List[MicroBatch] = []
 
-    def emit(blen, spans, t0s, row_t0s, used):
+    def emit(blen, tier, spans, t0s, row_t0s, used):
         t0_min = min(t0s)
+        n_steps = (distilled_nfe if tier == DISTILLED_TIER
+                   else guarantees.warm_nfe(cold_nfe, t0_min))
         batches.append(MicroBatch(
-            bucket_len=blen, t0=t0_min,
-            n_steps=guarantees.warm_nfe(cold_nfe, t0_min),
+            bucket_len=blen, t0=t0_min, n_steps=n_steps,
             spans=tuple(spans), padded_rows=pad_rows(used, unit),
-            t0_spans=tuple(t0s), row_t0_spans=tuple(row_t0s),
+            t0_spans=tuple(t0s), row_t0_spans=tuple(row_t0s), tier=tier,
         ))
 
-    for (blen, _bin, _cls), reqs in groups.items():
+    for (blen, _bin, _cls, tier), reqs in groups.items():
         spans: List[RowSpan] = []
         t0s: List[float] = []
         row_t0s: List[Tuple[float, ...]] = []
@@ -578,12 +618,12 @@ def pack_requests(
             # flush BEFORE the padded row count would exceed max_rows, so
             # padded_rows (the actual dispatch size) respects the cap
             if used and pad_rows(used + req.num_samples, unit) > max_rows:
-                emit(blen, spans, t0s, row_t0s, used)
+                emit(blen, tier, spans, t0s, row_t0s, used)
                 spans, t0s, row_t0s, used = [], [], [], 0
             spans.append(RowSpan(request=req, row_offset=used))
             t0s.append(t0)
             row_t0s.append(req.row_t0s)
             used += req.num_samples
         if spans:
-            emit(blen, spans, t0s, row_t0s, used)
+            emit(blen, tier, spans, t0s, row_t0s, used)
     return batches

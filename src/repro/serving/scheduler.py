@@ -46,11 +46,12 @@ import numpy as np
 from repro.core import guarantees
 from repro.core.paths import WarmStartPath
 from repro.core.sampler import (
-    make_euler_one_step_rows, refine_schedule, refine_schedule_rows,
-    scan_refine_loop, scan_refine_loop_rows,
+    distill_schedule_rows, make_euler_one_step_rows, refine_schedule,
+    refine_schedule_rows, scan_refine_loop, scan_refine_loop_rows,
 )
 from repro.serving.batcher import (
-    ACCEPTED_DRAFT, CANCELLED, COMPLETED, DRAFT_STREAM, FAILED, FLOW_STREAM,
+    ACCEPTED_DRAFT, CANCELLED, COMPLETED, DISTILL_STREAM, DISTILLED,
+    DISTILLED_TIER, DRAFT_STREAM, FAILED, FLOW_STREAM, GUARANTEED_TIER,
     PRIORITY_CLASSES, SHED, TIMED_OUT, CancelToken, FillingBucket, MicroBatch,
     ServeRequest, bucket_seq_len, pack_requests, pad_rows, priority_rank,
     split_request, usable_rows,
@@ -269,7 +270,8 @@ class AdmissionQueue:
     def submit(self, *, seq_len: int, num_samples: int = 1, seed: int = 0,
                t0: Optional[float] = None, priority: str = "standard",
                timeout_s: Optional[float] = None,
-               arrival_s: Optional[float] = None) -> int:
+               arrival_s: Optional[float] = None,
+               tier: str = GUARANTEED_TIER) -> int:
         """Enqueue one request; returns its request_id.
 
         Raises :class:`QueueClosed` after :meth:`close`, and
@@ -286,7 +288,7 @@ class AdmissionQueue:
             self._admit_locked(ServeRequest(
                 request_id=rid, seq_len=seq_len, num_samples=num_samples,
                 seed=seed, t0=t0, priority=priority, timeout_s=timeout_s,
-                cancel_token=token,
+                cancel_token=token, tier=tier,
                 arrival_s=(self._clock.time() if arrival_s is None
                            else arrival_s)))
         return rid
@@ -384,6 +386,23 @@ def _derive_row_keys(seeds: jax.Array, sample_idx: jax.Array):
     return jax.vmap(one)(seeds, sample_idx)
 
 
+@partial(jax.jit, static_argnums=())
+def _derive_distill_keys(seeds: jax.Array, sample_idx: jax.Array):
+    """(B,) keys on the distilled tier's own stream (DISTILL_STREAM).
+
+    Same (seed, sample index) folding as :func:`_derive_row_keys` but a
+    third, disjoint stream: distilled sampling never consumes a key the
+    guaranteed path's DRAFT/FLOW streams would, so a quality-floor
+    fallback re-enters the guaranteed path with untouched streams —
+    bit-identical to never having tried the distilled tier."""
+
+    def one(s, i):
+        base = jax.random.fold_in(jax.random.key(s), i)
+        return jax.random.fold_in(base, DISTILL_STREAM)
+
+    return jax.vmap(one)(seeds, sample_idx)
+
+
 class WarmStartScheduler:
     """Request scheduler over the draft/flow warm-start pipeline.
 
@@ -438,6 +457,22 @@ class WarmStartScheduler:
       accept_score: speculative acceptance threshold on the probe score;
         ``None`` uses the policy's own (bandit) or the calibration's top
         anchor score (the pretty-good tier's mean).
+      distilled_model / distilled_params: optional distilled few-step
+        head (see :mod:`repro.drafting.distill`) enabling the
+        ``tier="distilled"`` request class: K = ``distilled_nfe`` steps
+        of the head instead of the full guaranteed refine, behind a
+        probe-score quality floor. Needs ``t0_policy`` (the floor IS the
+        policy's probe).
+      distilled_nfe: steps the distilled tier runs (1 or 2).
+      distilled_accept_score: the tier's quality floor — a distilled
+        output whose min row probe score falls below it is re-served on
+        the guaranteed path, bit-identical to a fresh guaranteed
+        request. Defaults to ``accept_score`` (the speculative
+        acceptance anchor).
+      pair_buffer: optional :class:`repro.drafting.distill.PairBuffer`;
+        when set, every guaranteed refine dispatch harvests its
+        ``(draft, refined, t0)`` rows into it (the self-distillation
+        training set — the guaranteed path is the teacher).
       tracer: optional :class:`repro.obs.SpanTracer` recording pipeline
         spans (draft worker, refine dispatch, scoring pre-pass, flush
         decisions) and per-request admission→terminal flow events for
@@ -473,6 +508,11 @@ class WarmStartScheduler:
         per_row_t0: bool = False,
         speculative: bool = False,
         accept_score: Optional[float] = None,
+        distilled_model: Optional[Any] = None,
+        distilled_params: Optional[Any] = None,
+        distilled_nfe: int = 1,
+        distilled_accept_score: Optional[float] = None,
+        pair_buffer: Optional[Any] = None,
         tracer: Optional[Any] = None,
         metrics: Optional[MetricsRegistry] = None,
     ):
@@ -516,6 +556,30 @@ class WarmStartScheduler:
             raise ValueError(
                 "speculative serving needs an accept_score (none given "
                 "and the policy carries no calibration to derive one)")
+        # distilled tier: a self-distilled K-step head served as a cheap
+        # SLO class behind a calibrated probe-score quality floor
+        self.distilled_model = distilled_model
+        self.distilled_params = distilled_params
+        self.distilled_nfe = int(distilled_nfe)
+        self.pair_buffer = pair_buffer
+        if distilled_model is not None:
+            if not 1 <= self.distilled_nfe <= 2:
+                raise ValueError(
+                    f"distilled_nfe must be 1 or 2 (the tier's whole point "
+                    f"is a 1-2 step refine), got {distilled_nfe}")
+            if t0_policy is None:
+                raise ValueError(
+                    "the distilled tier needs a t0_policy: its quality "
+                    "floor is the policy's probe score")
+            if distilled_accept_score is None:
+                distilled_accept_score = self.accept_score
+            if distilled_accept_score is None:
+                raise ValueError(
+                    "distilled tier needs a quality floor "
+                    "(distilled_accept_score, or a policy calibration to "
+                    "derive one)")
+        self.distilled_accept_score = (None if distilled_accept_score is None
+                                       else float(distilled_accept_score))
         # bandit mode: the policy learns online from refined outcomes
         self._bandit_mode = (t0_policy is not None
                              and hasattr(t0_policy, "update")
@@ -539,6 +603,9 @@ class WarmStartScheduler:
         self._c_fused_steps = m.counter("fused.steps_fused")
         self._c_dispatch_retries = m.counter("dispatch.retries")
         self._c_dispatch_failures = m.counter("dispatch.failures")
+        self._c_distill_fallbacks = m.counter("distilled.fallbacks")
+        self._c_distill_gate_evals = m.counter("distilled.gate_evals")
+        self._c_distill_downgrades = m.counter("distilled.oversize_downgrades")
         if t0_policy is not None and hasattr(t0_policy, "bind_metrics"):
             t0_policy.bind_metrics(m)
 
@@ -621,6 +688,22 @@ class WarmStartScheduler:
                 donate_argnums=donate,
             )
 
+        # distilled tier: the SAME masked row scan, the distilled head's
+        # logits, a K-step schedule, and a third key stream
+        # (DISTILL_STREAM) — so a fallback request's guaranteed refine
+        # consumes exactly the keys a fresh guaranteed request would.
+        # The head is tiny; it runs unsharded even under a mesh.
+        if distilled_model is not None:
+            def distill(params, keys, x, ts, hs, active, key_idx):
+                logits_fn = lambda xt, tb: distilled_model.dfm_apply(
+                    params, xt, tb)
+                return scan_refine_loop_rows(
+                    logits_fn, one_step, x, keys, ts, hs, active, key_idx)
+
+            self._distill_loop = jax.jit(distill, donate_argnums=donate)
+        else:
+            self._distill_loop = None
+
     # ---- registry-backed counter views (lifetime totals) -----------------
 
     @property
@@ -654,13 +737,17 @@ class WarmStartScheduler:
     # ---- request intake --------------------------------------------------
 
     def submit(self, *, seq_len: int, num_samples: int = 1, seed: int = 0,
-               t0: Optional[float] = None) -> int:
+               t0: Optional[float] = None, tier: str = GUARANTEED_TIER) -> int:
         """Enqueue one request; returns its request_id.
 
         ``t0=None`` means "engine decides": the adaptive policy scores
         the request's drafts when ``t0_policy`` is set, else
         ``default_t0``. An explicit t0 is always honoured verbatim (and
         never scored).
+
+        ``tier="distilled"`` asks for the cheap K-step distilled head
+        behind its quality floor (needs ``distilled_model``); it falls
+        back to the guaranteed path when the floor rejects the output.
 
         Rejects unservable requests HERE (bucket overflow, too many
         samples) so one bad request can never poison a queued batch.
@@ -673,11 +760,15 @@ class WarmStartScheduler:
                 f"num_samples {num_samples} pads to "
                 f"{pad_rows(num_samples, unit)} rows > max_rows "
                 f"{self.max_rows} (split the request)")
+        if tier == DISTILLED_TIER and self._distill_loop is None:
+            raise ValueError(
+                "tier='distilled' needs distilled_model/distilled_params "
+                "on the scheduler")
         rid = self._next_id
         self._next_id += 1
         self._queue.append(ServeRequest(
             request_id=rid, seq_len=seq_len, num_samples=num_samples,
-            seed=seed, t0=t0))
+            seed=seed, t0=t0, tier=tier))
         return rid
 
     # ---- stages ----------------------------------------------------------
@@ -775,10 +866,18 @@ class WarmStartScheduler:
 
     def _stage_refine(self, mb: MicroBatch, x, flow_keys):
         """Flow stage for one micro-batch: one jitted scan dispatch over
-        the per-row masked schedule."""
+        the per-row masked schedule. Distilled-tier micro-batches route
+        to :meth:`_stage_distill` instead."""
+        if mb.tier == DISTILLED_TIER:
+            return self._stage_distill(mb, x)
+        harvest = None
+        if self.pair_buffer is not None:
+            # snapshot the drafts BEFORE dispatch: the refine loop
+            # donates the token buffer off-CPU
+            harvest = np.asarray(x)
         span = self.tracer.span("refine", track="refine_dispatch",
                                 bucket=mb.bucket_len, rows=mb.rows,
-                                padded_rows=mb.padded_rows,
+                                padded_rows=mb.padded_rows, tier=mb.tier,
                                 key=str(mb.compile_key))
         with span as sp:
             t0 = time.perf_counter()
@@ -828,7 +927,73 @@ class WarmStartScheduler:
                 with self.tracer.span("reward_probe", track="refine_dispatch",
                                       bucket=mb.bucket_len):
                     self._observe_rewards(mb, x)
+            # self-distillation harvest, also after the cost observation:
+            # every guaranteed dispatch feeds (draft, refined, t0) rows to
+            # the pair buffer — the guaranteed path IS the teacher, no
+            # extra forward passes
+            if harvest is not None:
+                self.pair_buffer.add_batch(
+                    harvest, np.asarray(x), mb.row_t0s, mask=mb.row_mask)
         return x, t_flow
+
+    def _stage_distill(self, mb: MicroBatch, x):
+        """Distilled-tier flow stage: K = ``distilled_nfe`` steps of the
+        distilled head through the same masked row scan, keyed on the
+        disjoint DISTILL_STREAM. No NFE-guarantee gates run here — the
+        tier's contract is the probe-score quality floor (checked by the
+        caller via :meth:`_distill_gate`), not a schedule bound."""
+        span = self.tracer.span("distill", track="refine_dispatch",
+                                bucket=mb.bucket_len, rows=mb.rows,
+                                padded_rows=mb.padded_rows, tier=mb.tier,
+                                key=str(mb.compile_key))
+        with span as sp:
+            t0 = time.perf_counter()
+            key = mb.compile_key
+            if key in self._compiled:
+                self._c_cache_hits.inc()
+                self.metrics.counter("jit_cache.per_key",
+                                     key=_key_label(key), kind="hit").inc()
+                was_miss = False
+            else:
+                self._compiled.add(key)
+                self._c_cache_misses.inc()
+                self.metrics.counter("jit_cache.per_key",
+                                     key=_key_label(key), kind="miss").inc()
+                was_miss = True
+            sp["cache"] = "miss" if was_miss else "hit"
+            ts, hs, active, key_idx, _ = distill_schedule_rows(
+                mb.row_t0s, self.distilled_nfe)
+            sp["nfe"] = len(ts)
+            seeds, idx = self._mb_row_streams(mb)
+            dkeys = _derive_distill_keys(jnp.asarray(seeds), jnp.asarray(idx))
+            try:
+                out = self._distill_loop(
+                    self.distilled_params, dkeys, x, jnp.asarray(ts),
+                    jnp.asarray(hs), jnp.asarray(active), jnp.asarray(key_idx))
+                x = jax.block_until_ready(out)
+            except Exception as err:  # noqa: BLE001 — device faults vary
+                self._c_dispatch_failures.inc()
+                raise DispatchFailure(mb.compile_key, 1, err) from err
+            t_flow = time.perf_counter() - t0
+            self.cost_model.observe(key, t_flow, len(ts), compiled=was_miss)
+        return x, t_flow
+
+    def _distill_gate(self, mb: MicroBatch, x) -> Dict[int, Tuple[bool, float]]:
+        """The distilled tier's quality floor: score the distilled output
+        rows with the policy's probe and compare each REQUEST's minimum
+        row score against ``distilled_accept_score`` (the same min-over-
+        rows shape as speculative acceptance). Returns
+        ``request_id -> (passed, min_score)``; failing requests fall back
+        to the guaranteed path."""
+        self._c_distill_gate_evals.inc()
+        scores = np.asarray(self.t0_policy.scorer(x))
+        out: Dict[int, Tuple[bool, float]] = {}
+        for span in mb.spans:
+            rs = scores[span.row_offset:span.row_offset + span.rows]
+            mn = float(rs.min())
+            out[span.request.request_id] = (
+                mn >= self.distilled_accept_score, mn)
+        return out
 
     def _observe_rewards(self, mb: MicroBatch, x) -> None:
         """Bandit reward observation for one refined micro-batch (the
@@ -989,7 +1154,13 @@ class WarmStartScheduler:
                     sc = (None if scores_rows is None
                           else scores_rows[at:at + r.num_samples])
                     at += r.num_samples
-                    if self.speculative and sc is not None:
+                    # distilled-tier requests are never speculatively
+                    # accepted: their cheap path is the distilled head
+                    # (quality-gated AFTER it runs), and excluding them
+                    # keeps the guaranteed path's accept stream identical
+                    # with the tier on or off
+                    if (self.speculative and sc is not None
+                            and r.tier != DISTILLED_TIER):
                         eligible += 1
                         if float(sc.min()) >= self.accept_score:
                             accepted_info[r.request_id] = {
@@ -1001,7 +1172,8 @@ class WarmStartScheduler:
                                     self.t0_policy.observe_accept(
                                         blen, float(s))
                             continue
-                    if self._bandit_mode and sc is not None:
+                    if (self._bandit_mode and sc is not None
+                            and r.tier != DISTILLED_TIER):
                         self._row_scores[r.request_id] = (blen, np.array(sc))
                     if self.per_row_t0:
                         resolved_rows[r.request_id] = tuple(
@@ -1054,54 +1226,52 @@ class WarmStartScheduler:
         # wall_time_s / requests_per_s must pay for it
         wall0 = time.perf_counter()
         policy_report = None
-        predrafted = None
         accepted: List[dict] = []
-        if self.t0_policy is not None:
-            requests_resolved, predrafted, policy_report, accepted = \
-                self._policy_prepass(requests)
-        else:
-            requests_resolved = list(requests)
-
-        batches = pack_requests(
-            requests_resolved, cold_nfe=self.cold_nfe,
-            default_t0=self.default_t0,
-            max_rows=self.max_rows, min_bucket=self.min_bucket,
-            max_bucket=self.max_bucket, row_quantum=self.row_quantum,
-            row_multiple=self._row_multiple,
-            t0_bin_width=self.t0_bin_width)
-
+        # as-submitted requests, pre-resolution: a distilled request that
+        # fails its quality floor re-enters the guaranteed path from THIS
+        # object (t0 unresolved again), so the fallback round is
+        # indistinguishable from a fresh guaranteed submission
+        originals = {r.request_id: r for r in requests}
         results: Dict[int, RequestResult] = {}
-        # speculatively accepted requests terminate HERE: the pre-pass
-        # drafts (sliced to the request's own seq_len) are the result,
-        # zero refine steps, never packed (micro_batch == -1)
-        for acc in accepted:
-            req = acc["request"]
-            results[req.request_id] = RequestResult(
-                request_id=req.request_id,
-                tokens=np.asarray(acc["tokens"])[:, :req.seq_len],
-                nfe=0, t0=acc["t0"],
-                bucket_len=bucket_seq_len(req.seq_len,
-                                          min_bucket=self.min_bucket,
-                                          max_bucket=self.max_bucket),
-                micro_batch=-1)
         batch_reports: List[dict] = []
         cache_snap = self._jit_cache_snapshot()
-        # pre-pass drafting+scoring counts as draft-stage time; it is
-        # serial (never hidden behind a refine), which the overlap
-        # arithmetic below reflects automatically since it sits in both
-        # draft_total and the wall clock
-        draft_total = (policy_report["prepass_time_s"]
-                       if policy_report is not None else 0.0)
+        draft_total = 0.0
         flow_total = 0.0
+        all_batches: List[MicroBatch] = []
+        distill_stats = {"requests": 0, "served": 0, "fallbacks": 0,
+                         "min_served_score": None}
+        fallback: List[ServeRequest] = []
 
         def finish(k: int, mb: MicroBatch, x, t_draft: float, t_flow: float):
             nonlocal draft_total, flow_total
             draft_total += t_draft
             flow_total += t_flow
+            gate = (self._distill_gate(mb, x)
+                    if mb.tier == DISTILLED_TIER else None)
             x_host = np.asarray(x)
             for span, span_t0, span_rows in zip(mb.spans, mb.t0_spans,
                                                 mb.row_t0_spans):
                 req = span.request
+                if gate is not None:
+                    passed, mn = gate[req.request_id]
+                    if not passed:
+                        self._c_distill_fallbacks.inc()
+                        distill_stats["fallbacks"] += 1
+                        fallback.append(dataclasses.replace(
+                            originals[req.request_id], tier=GUARANTEED_TIER))
+                        continue
+                    distill_stats["served"] += 1
+                    ms = distill_stats["min_served_score"]
+                    distill_stats["min_served_score"] = (
+                        mn if ms is None else min(ms, mn))
+                    results[req.request_id] = RequestResult(
+                        request_id=req.request_id,
+                        tokens=x_host[span.row_offset:
+                                      span.row_offset + span.rows,
+                                      :req.seq_len],
+                        nfe=self.distilled_nfe, t0=span_t0,
+                        bucket_len=mb.bucket_len, micro_batch=k)
+                    continue
                 results[req.request_id] = RequestResult(
                     request_id=req.request_id,
                     tokens=x_host[span.row_offset:span.row_offset + span.rows,
@@ -1118,27 +1288,86 @@ class WarmStartScheduler:
                 "t0": mb.t0,
                 "t0_spans": list(mb.t0_spans),
                 "nfe": mb.n_steps,
+                "tier": mb.tier,
                 "draft_time_s": t_draft,
                 "flow_time_s": t_flow,
             })
 
-        stage_draft = partial(self._stage_keys_and_draft,
-                              predrafted=predrafted)
-        if not self.overlap or len(batches) <= 1:
-            for k, mb in enumerate(batches):
-                x, flow_keys, t_draft = stage_draft(mb)
-                x, t_flow = self._stage_refine(mb, x, flow_keys)
-                finish(k, mb, x, t_draft, t_flow)
-        else:
-            with ThreadPoolExecutor(max_workers=1) as pool:
-                fut = pool.submit(stage_draft, batches[0])
-                for k, mb in enumerate(batches):
-                    x, flow_keys, t_draft = fut.result()
-                    if k + 1 < len(batches):
-                        fut = pool.submit(stage_draft, batches[k + 1])
-                    x, t_flow = self._stage_refine(mb, x, flow_keys)
-                    finish(k, mb, x, t_draft, t_flow)
+        # round 0 serves the submitted mix; round 1 (only reached when a
+        # distilled request misses its quality floor) re-serves the
+        # fallbacks as guaranteed requests — they are guaranteed-tier by
+        # construction, so the loop terminates after at most two rounds
+        pending = list(requests)
+        while pending:
+            distill_stats["requests"] += sum(
+                1 for r in pending if r.tier == DISTILLED_TIER)
+            predrafted = None
+            if self.t0_policy is not None:
+                pending_resolved, predrafted, pr, acc_round = \
+                    self._policy_prepass(pending)
+                accepted.extend(acc_round)
+                if policy_report is None:
+                    policy_report = pr
+                else:
+                    policy_report["scored_requests"] += pr["scored_requests"]
+                    policy_report["prepass_time_s"] += pr["prepass_time_s"]
+                    if (policy_report.get("speculative")
+                            and pr.get("speculative")):
+                        for f in ("eligible", "accepted"):
+                            policy_report["speculative"][f] += \
+                                pr["speculative"][f]
+                # pre-pass drafting+scoring counts as draft-stage time; it
+                # is serial (never hidden behind a refine), which the
+                # overlap arithmetic below reflects automatically since it
+                # sits in both draft_total and the wall clock
+                draft_total += pr["prepass_time_s"]
+            else:
+                pending_resolved = list(pending)
 
+            batches = pack_requests(
+                pending_resolved, cold_nfe=self.cold_nfe,
+                default_t0=self.default_t0,
+                max_rows=self.max_rows, min_bucket=self.min_bucket,
+                max_bucket=self.max_bucket, row_quantum=self.row_quantum,
+                row_multiple=self._row_multiple,
+                t0_bin_width=self.t0_bin_width,
+                distilled_nfe=self.distilled_nfe)
+            k0 = len(all_batches)
+            all_batches.extend(batches)
+
+            stage_draft = partial(self._stage_keys_and_draft,
+                                  predrafted=predrafted)
+            if not self.overlap or len(batches) <= 1:
+                for k, mb in enumerate(batches):
+                    x, flow_keys, t_draft = stage_draft(mb)
+                    x, t_flow = self._stage_refine(mb, x, flow_keys)
+                    finish(k0 + k, mb, x, t_draft, t_flow)
+            else:
+                with ThreadPoolExecutor(max_workers=1) as pool:
+                    fut = pool.submit(stage_draft, batches[0])
+                    for k, mb in enumerate(batches):
+                        x, flow_keys, t_draft = fut.result()
+                        if k + 1 < len(batches):
+                            fut = pool.submit(stage_draft, batches[k + 1])
+                        x, t_flow = self._stage_refine(mb, x, flow_keys)
+                        finish(k0 + k, mb, x, t_draft, t_flow)
+            pending, fallback = fallback, []
+
+        # speculatively accepted requests terminate HERE: the pre-pass
+        # drafts (sliced to the request's own seq_len) are the result,
+        # zero refine steps, never packed (micro_batch == -1)
+        for acc in accepted:
+            req = acc["request"]
+            results[req.request_id] = RequestResult(
+                request_id=req.request_id,
+                tokens=np.asarray(acc["tokens"])[:, :req.seq_len],
+                nfe=0, t0=acc["t0"],
+                bucket_len=bucket_seq_len(req.seq_len,
+                                          min_bucket=self.min_bucket,
+                                          max_bucket=self.max_bucket),
+                micro_batch=-1)
+
+        batches = all_batches
         wall = time.perf_counter() - wall0
         overlapped = max(0.0, draft_total + flow_total - wall)
         denom = min(draft_total, flow_total)
@@ -1189,6 +1418,12 @@ class WarmStartScheduler:
             }),
             "bandit": (self.t0_policy.arm_stats()
                        if self._bandit_mode else None),
+            "distilled": (None if self.distilled_model is None else {
+                "enabled": True,
+                "nfe": self.distilled_nfe,
+                "gate_score": self.distilled_accept_score,
+                **distill_stats,
+            }),
             "batches": batch_reports,
         }
         self._row_scores.clear()
@@ -1223,9 +1458,16 @@ class WarmStartScheduler:
         per-NFE refine cost x worst-case steps (compile surcharge when
         the compile key is novel). Zero until the first measurement —
         the admission loop then flushes on the raw deadline."""
-        t0_lb = min(self._t0_lower_bound(r) for r in fb.requests)
-        n_steps = guarantees.warm_nfe(self.cold_nfe, t0_lb)
-        key = (fb.bucket_len, pad_rows(fb.rows, unit), n_steps)
+        if fb.requests and fb.requests[0].tier == DISTILLED_TIER:
+            # tier-homogeneous buckets (the filling key includes the
+            # tier): a distilled bucket runs exactly K head steps
+            n_steps = self.distilled_nfe
+            key = (fb.bucket_len, pad_rows(fb.rows, unit), n_steps,
+                   DISTILLED_TIER)
+        else:
+            t0_lb = min(self._t0_lower_bound(r) for r in fb.requests)
+            n_steps = guarantees.warm_nfe(self.cold_nfe, t0_lb)
+            key = (fb.bucket_len, pad_rows(fb.rows, unit), n_steps)
         est = self.cost_model.estimate_s(key, n_steps, include_compile=True)
         return backlog_s + (self._draft_cost_ewma or 0.0) + (est or 0.0)
 
@@ -1288,7 +1530,8 @@ class WarmStartScheduler:
             reqs, cold_nfe=self.cold_nfe, default_t0=self.default_t0,
             max_rows=self.max_rows, min_bucket=self.min_bucket,
             max_bucket=self.max_bucket, row_quantum=self.row_quantum,
-            row_multiple=self._row_multiple, t0_bin_width=self.t0_bin_width)
+            row_multiple=self._row_multiple, t0_bin_width=self.t0_bin_width,
+            distilled_nfe=self.distilled_nfe)
         for mb in batches:
             for span in mb.spans:
                 self.tracer.instant(
@@ -1390,11 +1633,12 @@ class WarmStartScheduler:
             # no external producer: the pre-known set IS the stream
             source.close()
 
-        # filling buckets are keyed by (bucket_len, priority): a class
-        # never waits on (or pads into) another class's bucket, so the
-        # flush pricing and the dispatch ordering both see pure-class
-        # micro-batches
-        filling: Dict[Tuple[int, str], FillingBucket] = {}
+        # filling buckets are keyed by (bucket_len, priority, tier): a
+        # class never waits on (or pads into) another class's bucket, and
+        # distilled traffic never perturbs a guaranteed bucket's flush
+        # timing (or vice versa) — every micro-batch is pure-class and
+        # pure-tier
+        filling: Dict[Tuple[int, str, str], FillingBucket] = {}
         ready: List[dict] = []          # flushed micro-batches -> pipeline
         partials: Dict[int, dict] = {}  # parent_id -> chunk reassembly
         stats = {"prepass_time_s": 0.0, "accepted_pending": []}
@@ -1403,6 +1647,12 @@ class WarmStartScheduler:
         class_latencies: Dict[str, List[float]] = {
             c: [] for c in PRIORITY_CLASSES}
         spec_min_score: Optional[float] = None
+        distill_min_score: Optional[float] = None
+        # as-admitted distilled requests, pre-resolution: a quality-floor
+        # fallback re-enters the guaranteed path from THIS object, so its
+        # re-pack (t0 scoring, PRNG streams, bucket choice) is
+        # indistinguishable from a fresh guaranteed submission
+        originals: Dict[int, ServeRequest] = {}
         draft_total = flow_total = 0.0
         t_first: Optional[float] = None
         first_arrival_s: Optional[float] = None
@@ -1445,6 +1695,7 @@ class WarmStartScheduler:
             if root in resolved:
                 return None
             resolved.add(root)
+            originals.pop(root, None)
             part = partials.pop(root, None)
             n_chunks = part["num_chunks"] if part is not None else 1
             count_terminal(status, req.priority)
@@ -1468,7 +1719,7 @@ class WarmStartScheduler:
                 deadline_s=None, slo_met=None, chunks=n_chunks,
                 status=status, priority=req.priority)
 
-        def admit(req: ServeRequest, now: float):
+        def admit(req: ServeRequest, now: float, *, fallback: bool = False):
             nonlocal first_arrival_s
             if req.parent_id is not None:
                 # chunk metadata is minted by THIS loop's splitter; an
@@ -1477,7 +1728,24 @@ class WarmStartScheduler:
                     f"request {req.request_id} carries chunk metadata "
                     f"(parent_id={req.parent_id}); submit the parent "
                     f"request whole — the admission loop splits it")
-            m.counter("serve.admitted").inc()
+            if not fallback:
+                # a quality-floor fallback was already admitted once:
+                # conservation sees one offer and exactly one terminal
+                m.counter("serve.admitted").inc()
+            if req.tier == DISTILLED_TIER:
+                if self._distill_loop is None:
+                    raise ValueError(
+                        "tier='distilled' request admitted but the "
+                        "scheduler has no distilled model")
+                if req.num_samples > usable_rows(self.max_rows, unit):
+                    # oversize requests split into chunks that must share
+                    # one terminal fate; a per-chunk quality gate could
+                    # strand a parent half-distilled, so oversize
+                    # distilled requests serve on the guaranteed path
+                    self._c_distill_downgrades.inc()
+                    req = dataclasses.replace(req, tier=GUARANTEED_TIER)
+                else:
+                    originals[req.request_id] = req
             if first_arrival_s is None or req.arrival_s < first_arrival_s:
                 first_arrival_s = req.arrival_s
             pieces = [req]
@@ -1498,7 +1766,7 @@ class WarmStartScheduler:
                 blen = bucket_seq_len(piece.seq_len,
                                       min_bucket=self.min_bucket,
                                       max_bucket=self.max_bucket)
-                fkey = (blen, piece.priority)
+                fkey = (blen, piece.priority, piece.tier)
                 fb = filling.get(fkey)
                 if fb is not None and fb.would_overflow(
                         piece.num_samples, max_rows=self.max_rows,
@@ -1539,11 +1807,15 @@ class WarmStartScheduler:
             shape and the NFE schedule are functions of each request
             alone, so the surviving rows' bytes are identical either
             way."""
-            nonlocal draft_total, flow_total, t_first
+            nonlocal draft_total, flow_total, t_first, distill_min_score
             draft_total += t_draft
             flow_total += t_flow
             mb = pending["mb"]
             k = next(mb_index)
+            # quality floor for distilled micro-batches, BEFORE the clock
+            # reads: the probe eval is part of serving the micro-batch
+            gate = (self._distill_gate(mb, x)
+                    if mb.tier == DISTILLED_TIER else None)
             finished_s = clock.time()
             m.histogram("serve.queue_wait_s").observe(
                 finished_s - pending["flushed_s"])
@@ -1551,7 +1823,8 @@ class WarmStartScheduler:
                 "micro_batch": k, "bucket_len": mb.bucket_len,
                 "rows": mb.rows, "padded_rows": mb.padded_rows,
                 "t0": mb.t0, "t0_spans": list(mb.t0_spans),
-                "nfe": mb.n_steps, "flush_reason": pending["reason"],
+                "nfe": mb.n_steps, "tier": mb.tier,
+                "flush_reason": pending["reason"],
                 "queue_wait_s": finished_s - pending["flushed_s"],
                 "draft_time_s": t_draft, "flow_time_s": t_flow,
             })
@@ -1572,6 +1845,36 @@ class WarmStartScheduler:
                     if item is not None:
                         out.append(item)
                     continue
+                status, nfe = COMPLETED, guarantees.warm_nfe(
+                    self.cold_nfe, span_t0)
+                if gate is not None:
+                    # distilled requests are never chunked (oversize ones
+                    # were downgraded at admission), so the gate decides
+                    # the whole request right here
+                    passed, mn = gate[req.request_id]
+                    if not passed:
+                        # quality floor missed: fall back to the
+                        # guaranteed path. Re-admission starts from the
+                        # AS-ADMITTED request (t0 unresolved, untouched
+                        # DRAFT/FLOW streams), so the re-pack is
+                        # bit-identical to a fresh guaranteed request —
+                        # and serve.admitted is NOT recounted, keeping
+                        # conservation at one offer, one terminal.
+                        self._c_distill_fallbacks.inc()
+                        tracer.instant(
+                            "request_fallback", track="flush",
+                            flow_id=req.root_id, flow_ph="t",
+                            request_id=req.root_id, score=mn,
+                            gate_score=self.distilled_accept_score)
+                        admit(dataclasses.replace(
+                            originals.pop(req.request_id),
+                            tier=GUARANTEED_TIER), finished_s,
+                            fallback=True)
+                        continue
+                    originals.pop(req.request_id, None)
+                    distill_min_score = (mn if distill_min_score is None
+                                         else min(distill_min_score, mn))
+                    status, nfe = DISTILLED, self.distilled_nfe
                 toks = x_host[span.row_offset:span.row_offset + span.rows,
                               :req.seq_len]
                 if req.parent_id is not None:
@@ -1597,7 +1900,7 @@ class WarmStartScheduler:
                 latency = finished_s - arrival
                 latencies.append(latency)
                 class_latencies[req.priority].append(latency)
-                count_terminal(COMPLETED, req.priority)
+                count_terminal(status, req.priority)
                 m.histogram("serve.latency_s",
                             priority=req.priority).observe(latency)
                 if deadline is not None:
@@ -1608,19 +1911,19 @@ class WarmStartScheduler:
                                   priority=req.priority).inc()
                 tracer.instant("request_terminal", track="terminal",
                                flow_id=rid, flow_ph="f", request_id=rid,
-                               status=COMPLETED, priority=req.priority,
+                               status=status, priority=req.priority,
                                latency_ms=latency * 1e3)
                 if t_first is None:
                     t_first = finished_s
                 out.append(CompletedRequest(
-                    request_id=rid, tokens=tokens,
-                    nfe=guarantees.warm_nfe(self.cold_nfe, span_t0),
+                    request_id=rid, tokens=tokens, nfe=nfe,
                     t0=span_t0, bucket_len=mb.bucket_len, micro_batch=k,
-                    row_t0s=(span_rows if chunks == 1 else ()),
+                    row_t0s=(span_rows if chunks == 1 and status != DISTILLED
+                             else ()),
                     arrival_s=arrival, finished_s=finished_s,
                     latency_s=latency, flush_reason=pending["reason"],
                     deadline_s=deadline, slo_met=met, chunks=chunks,
-                    status=COMPLETED, priority=req.priority))
+                    status=status, priority=req.priority))
             return out
 
         draft_fut = None
@@ -1823,8 +2126,8 @@ class WarmStartScheduler:
                                             for mk, mv in want.items()))
 
         admission = source.stats()
-        statuses = (COMPLETED, ACCEPTED_DRAFT, CANCELLED, TIMED_OUT, SHED,
-                    FAILED)
+        statuses = (COMPLETED, ACCEPTED_DRAFT, DISTILLED, CANCELLED,
+                    TIMED_OUT, SHED, FAILED)
         terminal_counts = {s: dsum("serve.terminal", status=s)
                            for s in statuses}
         completed_n = terminal_counts[COMPLETED]
@@ -1846,6 +2149,7 @@ class WarmStartScheduler:
             by_class_report[cname] = {
                 "completed": counts[COMPLETED],
                 "accepted_draft": counts[ACCEPTED_DRAFT],
+                "distilled": counts[DISTILLED],
                 "shed": counts[SHED],
                 "cancelled": counts[CANCELLED],
                 "timed_out": counts[TIMED_OUT],
@@ -1861,6 +2165,7 @@ class WarmStartScheduler:
             "num_requests": dsum("serve.admitted"),
             "completed": completed_n,
             "accepted_draft": terminal_counts[ACCEPTED_DRAFT],
+            "distilled_served": terminal_counts[DISTILLED],
             "num_micro_batches": len(mb_reports),
             "split_requests": dsum("serve.split_requests"),
             "flush_reasons": dict(sorted(flush_reasons.items())),
@@ -1900,6 +2205,18 @@ class WarmStartScheduler:
             }),
             "bandit": (self.t0_policy.arm_stats()
                        if self._bandit_mode else None),
+            "distilled": (None if self.distilled_model is None else {
+                "enabled": True,
+                "nfe": self.distilled_nfe,
+                "gate_score": self.distilled_accept_score,
+                "served": terminal_counts[DISTILLED],
+                "fallbacks": dsum("distilled.fallbacks"),
+                "gate_evals": dsum("distilled.gate_evals"),
+                "oversize_downgrades": dsum("distilled.oversize_downgrades"),
+                # worst probe score that shipped distilled — must sit at
+                # or above gate_score (benches gate on this)
+                "min_served_score": distill_min_score,
+            }),
             # overload-hardening sections: the admission ledger, terminal
             # status counts, per-class outcomes/latency and the exact
             # conservation check (offered == rejected + every terminal)

@@ -1,0 +1,461 @@
+"""Distilled few-step refiner tier: the cheap SLO class.
+
+Covers the PR's core invariants end to end:
+
+  * :class:`PairBuffer` harvesting semantics (bounded FIFO, padding-row
+    masking, rectangular length-grouped batches);
+  * :func:`distill_schedule_rows` — K equal steps spanning [t0, 1] per
+    row, all-active, same return shape as ``refine_schedule_rows``;
+  * the self-distillation training loop converges on pairs harvested
+    from the real serving pipeline and checkpoints round-trip;
+  * ``tier="distilled"`` requests serve at NFE = K in {1, 2} behind the
+    probe-score quality floor, in their own micro-batches / jit-cache
+    entries, with ``DISTILLED`` as a first-class terminal status in the
+    conservation ledger;
+  * the quality-floor FALLBACK re-enters the guaranteed path
+    bit-identical to a fresh guaranteed request (per-row PRNG streams on
+    a disjoint DISTILL_STREAM — the speculative re-pack proof, replayed
+    for the distilled tier), on both the batch and streaming paths;
+  * the guaranteed path is byte- and count-identical with the distilled
+    tier on or off, with speculative serving and tracing enabled on top
+    (the full cross-subsystem integration), and admission→terminal trace
+    chains cover 100% of the conservation ledger.
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.guarantees import warm_nfe
+from repro.core.sampler import distill_schedule_rows, refine_schedule_rows
+from repro.drafting import (
+    AdaptiveT0Policy, DistilledRefiner, PairBuffer, T0Calibration,
+    distilled_checkpoint_exists, restore_distilled, save_distilled,
+    train_distilled,
+)
+from repro.obs import SpanTracer, validate_trace, write_chrome_trace
+from repro.serving import (
+    ACCEPTED_DRAFT, COMPLETED, DISTILLED, DISTILLED_TIER, GUARANTEED_TIER,
+    TERMINAL_STATUSES, AdmissionQueue, ServeRequest, WarmStartScheduler,
+    uniform_draft,
+)
+
+VOCAB = 11
+
+
+class ToyFlow:
+    def dfm_apply(self, params, x, t, extras=None):
+        return jnp.zeros(x.shape + (VOCAB,)).at[..., 2].set(30.0)
+
+
+def fake_scorer(toks):
+    # deterministic per-row score: mean token value scaled into [0, 1.1)
+    return jnp.asarray(toks, jnp.float32).mean(axis=-1) / 10.0
+
+
+CALIB = T0Calibration(scores=(0.1, 0.9), t0s=(0.5, 0.9),
+                      t0_floor=0.5, t0_ceil=0.9)
+
+
+def make_policy(bin_width=0.1):
+    return AdaptiveT0Policy(scorer=fake_scorer, calibration=CALIB,
+                            bin_width=bin_width)
+
+
+def make_scheduler(**kw):
+    return WarmStartScheduler(
+        flow_model=ToyFlow(), flow_params={},
+        draft_fn=kw.pop("draft_fn", uniform_draft(VOCAB)),
+        cold_nfe=kw.pop("cold_nfe", 20),
+        default_t0=kw.pop("default_t0", 0.8), **kw)
+
+
+REQS = [dict(seq_len=8, num_samples=2, seed=i) for i in range(6)]
+
+
+def _head():
+    """An UNTRAINED head: the copy-gate init makes it a near-copier, so
+    distilled outputs track the drafts and per-request gate scores vary
+    deterministically (a trained head would collapse every output onto
+    the toy flow's single mode and give every request the same score)."""
+    model = DistilledRefiner(vocab_size=VOCAB)
+    return model, model.init(jax.random.key(42))
+
+
+def _distilled_gate_split(model, params):
+    """A distilled_accept_score that deterministically splits REQS by
+    their distilled-output min row score (between the extremes)."""
+    sched = make_scheduler(t0_policy=make_policy(), distilled_model=model,
+                           distilled_params=params,
+                           distilled_accept_score=-100.0)
+    rids = [sched.submit(**r, tier=DISTILLED_TIER) for r in REQS]
+    results, _ = sched.run()
+    # seq_len 8 == the bucket length, so result tokens ARE the gated rows
+    mins = [float(np.asarray(fake_scorer(results[rid].tokens)).min())
+            for rid in rids]
+    lo, hi = min(mins), max(mins)
+    assert hi > lo                     # seeds give distinct output scores
+    return (lo + hi) / 2.0
+
+
+# ---------------------------------------------------------------------------
+# PairBuffer
+# ---------------------------------------------------------------------------
+
+def test_pair_buffer_bounded_fifo_eviction():
+    buf = PairBuffer(capacity=3)
+    d = np.arange(10, dtype=np.int32).reshape(5, 2)
+    buf.add_batch(d, d + 1, np.linspace(0.1, 0.5, 5))
+    assert len(buf) == 3
+    st = buf.stats()
+    assert (st["added"], st["evicted"]) == (5, 2)
+    # oldest-first eviction: rows 2..4 survive
+    (draft, refined, t0), = buf.snapshot().values()
+    np.testing.assert_array_equal(draft, d[2:])
+    np.testing.assert_array_equal(refined, d[2:] + 1)
+    np.testing.assert_allclose(t0, [0.3, 0.4, 0.5])
+
+
+def test_pair_buffer_mask_skips_padding_rows():
+    buf = PairBuffer()
+    d = np.zeros((4, 3), np.int32)
+    added = buf.add_batch(d, d, np.zeros(4), mask=[True, False, True, False])
+    assert added == 2 and len(buf) == 2
+
+
+def test_pair_buffer_batches_are_rectangular_per_length():
+    buf = PairBuffer()
+    for n, count in [(4, 5), (8, 3)]:
+        d = np.full((count, n), n, np.int32)
+        buf.add_batch(d, d, np.zeros(count))
+    shapes = [b[0].shape for b in buf.batches(batch_size=2)]
+    assert shapes == [(2, 4), (2, 4), (1, 4), (2, 8), (1, 8)]
+
+
+def test_pair_buffer_validates_shapes():
+    buf = PairBuffer()
+    with pytest.raises(ValueError, match="shape"):
+        buf.add_batch(np.zeros((2, 3)), np.zeros((2, 4)), np.zeros(2))
+    with pytest.raises(ValueError, match="t0_rows"):
+        buf.add_batch(np.zeros((2, 3)), np.zeros((2, 3)), np.zeros(3))
+    with pytest.raises(ValueError, match="capacity"):
+        PairBuffer(capacity=0)
+
+
+def test_scheduler_harvests_real_rows_only():
+    """Every guaranteed dispatch feeds the buffer its REAL rows (padding
+    masked out), and the harvested refined tokens equal the served
+    outputs."""
+    buf = PairBuffer()
+    sched = make_scheduler(t0_policy=make_policy(), pair_buffer=buf)
+    rids = [sched.submit(**r) for r in REQS]
+    results, rep = sched.run()
+    rows = sum(r["num_samples"] for r in REQS)
+    assert len(buf) == rows            # no padding rows harvested
+    refined_tokens = {
+        tuple(np.asarray(row)) for _, x, _ in
+        (pair for g in buf.snapshot().values() for pair in zip(*g))
+        for row in [x]}
+    served = {tuple(t) for rid in rids for t in results[rid].tokens}
+    assert served <= refined_tokens
+
+
+# ---------------------------------------------------------------------------
+# distill_schedule_rows
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("num_steps", [1, 2])
+def test_distill_schedule_spans_t0_to_one(num_steps):
+    t0_rows = np.array([0.0, 0.5, 0.9, 1.0 - 1e-12])
+    ts, hs, active, key_idx, nfe_rows = distill_schedule_rows(
+        t0_rows, num_steps)
+    assert ts.shape == hs.shape == active.shape == (num_steps, 4)
+    assert active.all()                 # every row steps at every index
+    np.testing.assert_array_equal(nfe_rows, num_steps)
+    np.testing.assert_allclose(ts[0], t0_rows.astype(np.float32))
+    # the last step lands exactly at t=1 for every row
+    np.testing.assert_allclose(np.asarray(ts[-1] + hs[-1]), 1.0, atol=1e-6)
+    # same return shape contract as refine_schedule_rows
+    ref = refine_schedule_rows(t0_rows, 0.05, 20)
+    assert len(ref) == 5
+    assert ref[0].ndim == ts.ndim and ref[4].shape == nfe_rows.shape
+
+
+def test_distill_schedule_validates_inputs():
+    with pytest.raises(ValueError, match="num_steps"):
+        distill_schedule_rows(np.array([0.5]), 0)
+    with pytest.raises(ValueError, match="1-D"):
+        distill_schedule_rows(np.zeros((2, 2)), 1)
+    with pytest.raises(ValueError, match=r"\[0, 1\)"):
+        distill_schedule_rows(np.array([1.0]), 1)
+
+
+# ---------------------------------------------------------------------------
+# training + checkpointing
+# ---------------------------------------------------------------------------
+
+@pytest.mark.slow
+def test_train_distilled_converges_and_checkpoints(tmp_path):
+    buf = PairBuffer()
+    sched = make_scheduler(t0_policy=make_policy(), pair_buffer=buf)
+    for r in REQS:
+        sched.submit(**r)
+    sched.run()
+    model = DistilledRefiner(vocab_size=VOCAB)
+    params, report = train_distilled(model, buf, key=jax.random.key(0),
+                                     epochs=8)
+    assert report.steps == 8 and report.pairs == len(buf)
+    assert report.final_loss < report.first_loss
+    assert report.final_agreement >= 0.9   # the head learned the teacher
+
+    ckpt = tmp_path / "distilled"
+    assert not distilled_checkpoint_exists(ckpt)
+    save_distilled(ckpt, params, step=report.steps)
+    assert distilled_checkpoint_exists(ckpt)
+    restored = restore_distilled(ckpt, model)
+    toks = jnp.zeros((2, 8), jnp.int32)
+    np.testing.assert_array_equal(
+        model.dfm_apply(params, toks, jnp.array([0.5, 0.9])),
+        model.dfm_apply(restored, toks, jnp.array([0.5, 0.9])))
+
+
+def test_train_distilled_rejects_empty_buffer():
+    with pytest.raises(ValueError, match="empty"):
+        train_distilled(DistilledRefiner(vocab_size=VOCAB), PairBuffer(),
+                        key=jax.random.key(0))
+
+
+# ---------------------------------------------------------------------------
+# batch path: distilled serving, gate, fallback parity
+# ---------------------------------------------------------------------------
+
+def test_distilled_tier_requires_model_and_policy():
+    sched = make_scheduler(t0_policy=make_policy())
+    with pytest.raises(ValueError, match="distilled_model"):
+        sched.submit(seq_len=8, tier=DISTILLED_TIER)
+    with pytest.raises(ValueError, match="unknown tier"):
+        ServeRequest(request_id=0, seq_len=8, num_samples=1, seed=0,
+                     tier="gold")
+    model, params = _head()
+    with pytest.raises(ValueError, match="t0_policy"):
+        make_scheduler(distilled_model=model, distilled_params=params)
+    with pytest.raises(ValueError, match="distilled_nfe"):
+        make_scheduler(t0_policy=make_policy(), distilled_model=model,
+                       distilled_params=params, distilled_nfe=3)
+
+
+def test_distilled_serves_at_k_nfe_behind_gate_batch():
+    model, params = _head()
+    thr = _distilled_gate_split(model, params)
+    sched = make_scheduler(t0_policy=make_policy(), distilled_model=model,
+                           distilled_params=params, distilled_nfe=1,
+                           distilled_accept_score=thr)
+    rids = [sched.submit(**r, tier=DISTILLED_TIER) for r in REQS]
+    results, rep = sched.run()
+    d = rep["distilled"]
+    assert d["requests"] == len(REQS)
+    assert 0 < d["served"] < len(REQS)         # the gate really splits
+    assert d["served"] + d["fallbacks"] == len(REQS)
+    assert d["min_served_score"] >= thr
+    for rid in rids:
+        r = results[rid]
+        if r.nfe == 1:                          # distilled-served
+            assert float(np.asarray(fake_scorer(r.tokens)).min()) >= thr
+        else:                                   # quality-floor fallback
+            assert r.nfe == warm_nfe(20, r.t0)
+
+
+def test_fallback_bit_identical_to_fresh_guaranteed_batch():
+    """Satellite: rejected distilled requests re-enter the guaranteed
+    path with per-row PRNG streams bit-identical to never having tried
+    the distilled tier (the speculative re-pack proof, distilled
+    edition). Gate = +100 rejects everything deterministically."""
+    model, params = _head()
+    sched = make_scheduler(t0_policy=make_policy(), distilled_model=model,
+                           distilled_params=params,
+                           distilled_accept_score=100.0)
+    on = [sched.submit(**r, tier=DISTILLED_TIER) for r in REQS]
+    res_on, rep_on = sched.run()
+    ref = make_scheduler(t0_policy=make_policy())
+    off = [ref.submit(**r) for r in REQS]
+    res_off, _ = ref.run()
+    assert rep_on["distilled"]["fallbacks"] == len(REQS)
+    assert rep_on["distilled"]["served"] == 0
+    for a, b in zip(on, off):
+        np.testing.assert_array_equal(res_on[a].tokens, res_off[b].tokens)
+        assert res_on[a].nfe == res_off[b].nfe
+        assert res_on[a].t0 == res_off[b].t0
+
+
+def test_distilled_micro_batches_get_own_jit_cache_keys():
+    model, params = _head()
+    sched = make_scheduler(t0_policy=make_policy(), distilled_model=model,
+                           distilled_params=params,
+                           distilled_accept_score=-100.0)
+    sched.submit(seq_len=8, num_samples=2, seed=0)
+    sched.submit(seq_len=8, num_samples=2, seed=0, tier=DISTILLED_TIER)
+    _, rep = sched.run()
+    keys = {k for k in sched._compiled}
+    tiers = {k[-1] for k in keys if isinstance(k[-1], str)}
+    assert DISTILLED_TIER in tiers              # distilled key is suffixed
+    assert any(not isinstance(k[-1], str) for k in keys)  # guaranteed isn't
+    assert {b["tier"] for b in rep["batches"]} == {GUARANTEED_TIER,
+                                                   DISTILLED_TIER}
+
+
+# ---------------------------------------------------------------------------
+# streaming path: the full cross-subsystem integration
+# ---------------------------------------------------------------------------
+
+def _stream(reqs, *, tracer=None, **kw):
+    model, params = kw.pop("head", (None, None))
+    sched = make_scheduler(
+        t0_policy=make_policy(),
+        **({} if model is None else dict(distilled_model=model,
+                                         distilled_params=params)),
+        **kw, **({} if tracer is None else {"tracer": tracer}))
+    out = {c.request_id: c for c in sched.serve_stream(
+        [dataclasses.replace(r) for r in reqs])}
+    return out, sched
+
+
+def test_stream_distilled_tier_everything_on(tmp_path):
+    """The integration test: distilled tier + speculative + tracing all
+    enabled in one stream. Guaranteed requests' tokens are bit-identical
+    to the distilled-tier-off run, every admitted request resolves
+    through the DISTILLED-aware conservation ledger, admission→terminal
+    trace chains cover 100% of it (including fallbacks), and the report
+    equals the registry."""
+    model, params = _head()
+    thr = _distilled_gate_split(model, params)
+    mixed = [ServeRequest(request_id=i, **r,
+                          tier=DISTILLED_TIER if i % 2 else GUARANTEED_TIER)
+             for i, r in enumerate(REQS)]
+    spec_thr = 0.25                     # splits the guaranteed half
+    tracer = SpanTracer()
+    out_on, sched = _stream(
+        mixed, head=(model, params), tracer=tracer, speculative=True,
+        accept_score=spec_thr, distilled_accept_score=thr, distilled_nfe=1)
+    rep = sched.stream_report
+    m0 = {}                             # registry deltas from birth
+
+    # 1) conservation with DISTILLED as a first-class terminal
+    assert set(rep["terminal"]) == set(TERMINAL_STATUSES)
+    assert rep["conservation"]["balanced"]
+    assert rep["terminal"][DISTILLED] > 0
+    assert rep["distilled"]["fallbacks"] > 0    # the gate really rejected
+    assert rep["distilled"]["served"] == rep["terminal"][DISTILLED]
+    assert rep["distilled"]["min_served_score"] >= thr
+    assert sum(rep["terminal"].values()) == len(REQS)
+
+    # 2) report == registry, status by status (and the fallback counter)
+    for status, n in rep["terminal"].items():
+        assert sched.metrics.sum_counters(
+            "serve.terminal", m0, status=status) == n, status
+    assert sched.metrics.sum_counters("distilled.fallbacks", m0) \
+        == rep["distilled"]["fallbacks"]
+    assert sched.metrics.sum_counters("serve.admitted", m0) \
+        == rep["num_requests"] == len(REQS)
+
+    # 3) distilled terminals ship at NFE = K
+    for c in out_on.values():
+        if c.status == DISTILLED:
+            assert c.nfe == 1
+            assert float(np.asarray(fake_scorer(c.tokens)).min()) >= thr
+
+    # 4) guaranteed-path byte/count identity with the tier off: the same
+    #    stream minus the distilled head serves the guaranteed half with
+    #    identical tokens, statuses, and speculative accepts
+    out_off, sched_off = _stream(mixed_to_guaranteed(mixed), speculative=True,
+                                 accept_score=spec_thr)
+    g_ids = [r.request_id for r in mixed if r.tier == GUARANTEED_TIER]
+    assert any(out_on[i].status == ACCEPTED_DRAFT for i in g_ids) or \
+        all(out_off[i].status == out_on[i].status for i in g_ids)
+    for i in g_ids:
+        assert out_on[i].status == out_off[i].status
+        np.testing.assert_array_equal(out_on[i].tokens, out_off[i].tokens)
+        assert out_on[i].nfe == out_off[i].nfe
+
+    # 5) admission→terminal chains cover 100% of the ledger
+    doc = write_chrome_trace(str(tmp_path / "t.json"), tracer)
+    assert validate_trace(doc, expected_requests=len(REQS)) == []
+    statuses = sorted(e["args"]["status"] for e in doc["traceEvents"]
+                      if e.get("name") == "request_terminal")
+    assert DISTILLED in statuses
+    # fallbacks keep their flow chain alive through a request_fallback hop
+    fb = [e for e in doc["traceEvents"]
+          if e.get("name") == "request_fallback"]
+    assert len(fb) == rep["distilled"]["fallbacks"]
+
+
+def mixed_to_guaranteed(reqs):
+    return [dataclasses.replace(r, tier=GUARANTEED_TIER) for r in reqs]
+
+
+def test_stream_fallback_bit_identical_to_guaranteed():
+    """Streaming edition of the fallback parity proof: every distilled
+    request misses the floor (gate +100), so the whole stream must be
+    indistinguishable from an all-guaranteed one."""
+    model, params = _head()
+    reqs = [ServeRequest(request_id=i, **r, tier=DISTILLED_TIER)
+            for i, r in enumerate(REQS)]
+    out_on, s_on = _stream(reqs, head=(model, params),
+                           distilled_accept_score=100.0)
+    out_off, s_off = _stream(mixed_to_guaranteed(reqs))
+    rep = s_on.stream_report
+    assert rep["distilled"]["fallbacks"] == len(REQS)
+    assert rep["terminal"][DISTILLED] == 0
+    assert rep["conservation"]["balanced"]
+    for i in out_off:
+        assert out_on[i].status == out_off[i].status == COMPLETED
+        np.testing.assert_array_equal(out_on[i].tokens, out_off[i].tokens)
+        assert out_on[i].nfe == out_off[i].nfe
+        assert out_on[i].t0 == out_off[i].t0
+
+
+def test_stream_guaranteed_untouched_by_distilled_traffic():
+    """Guaranteed tokens with distilled traffic interleaved == guaranteed
+    tokens served alone: tier-keyed filling buckets and the disjoint
+    DISTILL_STREAM keep the tiers from perturbing each other."""
+    model, params = _head()
+    mixed = [ServeRequest(request_id=i, **r,
+                          tier=DISTILLED_TIER if i % 2 else GUARANTEED_TIER)
+             for i, r in enumerate(REQS)]
+    out_mixed, _ = _stream(mixed, head=(model, params),
+                           distilled_accept_score=-100.0)
+    alone = [r for r in mixed if r.tier == GUARANTEED_TIER]
+    out_alone, _ = _stream(alone)
+    for r in alone:
+        np.testing.assert_array_equal(out_mixed[r.request_id].tokens,
+                                      out_alone[r.request_id].tokens)
+
+
+def test_oversize_distilled_request_downgrades_to_guaranteed():
+    model, params = _head()
+    sched = make_scheduler(t0_policy=make_policy(), max_rows=4,
+                           distilled_model=model, distilled_params=params,
+                           distilled_accept_score=-100.0)
+    # 6 samples > max_rows 4: must split, so it serves guaranteed
+    reqs = [ServeRequest(request_id=0, seq_len=8, num_samples=6, seed=3,
+                         tier=DISTILLED_TIER)]
+    out = {c.request_id: c for c in sched.serve_stream(reqs)}
+    rep = sched.stream_report
+    assert out[0].status == COMPLETED and out[0].chunks == 2
+    assert rep["distilled"]["oversize_downgrades"] == 1
+    assert rep["terminal"][DISTILLED] == 0
+    assert rep["conservation"]["balanced"]
+
+
+def test_admission_queue_carries_tier():
+    model, params = _head()
+    sched = make_scheduler(t0_policy=make_policy(), distilled_model=model,
+                           distilled_params=params,
+                           distilled_accept_score=-100.0)
+    q = AdmissionQueue(metrics=sched.metrics)
+    rid = q.submit(seq_len=8, num_samples=2, seed=1, tier=DISTILLED_TIER)
+    q.close()
+    out = {c.request_id: c for c in sched.serve_stream(source=q)}
+    assert out[rid].status == DISTILLED and out[rid].nfe == 1

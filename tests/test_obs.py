@@ -427,6 +427,60 @@ def test_tracing_does_not_perturb_served_tokens():
             "flush", "terminal"} <= tracks
 
 
+def test_distilled_tier_spans_and_counters_in_registry():
+    """Distilled micro-batches record tier-labelled `distill` spans and
+    their gate/fallback counters in the registry, and the stream report's
+    distilled section equals the registry deltas."""
+    import jax
+    import numpy as np
+
+    from repro.drafting import (
+        AdaptiveT0Policy, DistilledRefiner, T0Calibration,
+    )
+    from repro.serving import DISTILLED, DISTILLED_TIER, ServeRequest
+
+    def scorer(toks):
+        import jax.numpy as jnp
+        return jnp.asarray(toks, jnp.float32).mean(axis=-1) / 10.0
+
+    policy = AdaptiveT0Policy(
+        scorer=scorer,
+        calibration=T0Calibration(scores=(0.1, 0.9), t0s=(0.5, 0.9),
+                                  t0_floor=0.5, t0_ceil=0.9),
+        bin_width=0.1)
+    model = DistilledRefiner(vocab_size=11)
+    tracer = SpanTracer()
+    sched = _make_scheduler(
+        t0_policy=policy, tracer=tracer, distilled_model=model,
+        distilled_params=model.init(jax.random.key(0)),
+        distilled_accept_score=-100.0)
+    m0 = sched.metrics.snapshot()
+    reqs = [ServeRequest(request_id=i, seq_len=8, num_samples=2, seed=i,
+                         tier=DISTILLED_TIER if i % 2 else "guaranteed")
+            for i in range(4)]
+    out = {c.request_id: c for c in sched.serve_stream(reqs)}
+    rep = sched.stream_report
+
+    assert out[1].status == out[3].status == DISTILLED
+    assert rep["distilled"]["served"] == 2 == sched.metrics.sum_counters(
+        "serve.terminal", m0, status=DISTILLED)
+    assert rep["distilled"]["gate_evals"] == sched.metrics.sum_counters(
+        "distilled.gate_evals", m0) > 0
+    # the distill stage records its own tier-labelled span, separate
+    # from the guaranteed refine span
+    names = {(r.name, r.args.get("tier")) for r in tracer.records()
+             if r.name in ("refine", "distill")}
+    assert ("distill", DISTILLED_TIER) in names
+    assert ("refine", "guaranteed") in names
+    # distilled compile keys are tier-suffixed in the per-key cache view
+    per_key = [parse_metric_key(k)[1]
+               for k in sched.metrics.counter_deltas(m0)
+               if k.startswith("jit_cache.per_key")]
+    assert any(DISTILLED_TIER in lbl.get("key", "") for lbl in per_key)
+    np.testing.assert_array_equal(  # tracing really served tokens
+        out[1].tokens.shape, (2, 8))
+
+
 def test_admission_queue_ledger_lives_in_registry():
     from repro.serving import AdmissionQueue, QueueFull, ServeRequest
 

@@ -10,7 +10,7 @@ import numpy as np
 import pytest
 
 from repro.serving import (
-    ACCEPTED_DRAFT, CANCELLED, COMPLETED, FAILED, SHED, TIMED_OUT,
+    ACCEPTED_DRAFT, CANCELLED, COMPLETED, DISTILLED, FAILED, SHED, TIMED_OUT,
     AdmissionQueue,
     CancelToken, DispatchFailure, DispatchRetryPolicy, FillingBucket,
     QueueClosed, QueueFull, ServeRequest, WarmStartScheduler, priority_rank,
@@ -156,8 +156,8 @@ def test_stream_surfaces_shed_requests_and_balances_conservation():
     assert by_status[SHED][0].tokens.shape == (0, 8)
     assert {c.request_id for c in by_status[COMPLETED]} == {0, kept}
     rep = sched.stream_report
-    assert rep["terminal"] == {COMPLETED: 2, ACCEPTED_DRAFT: 0, CANCELLED: 0,
-                               TIMED_OUT: 0, SHED: 1, FAILED: 0}
+    assert rep["terminal"] == {COMPLETED: 2, ACCEPTED_DRAFT: 0, DISTILLED: 0,
+                               CANCELLED: 0, TIMED_OUT: 0, SHED: 1, FAILED: 0}
     assert rep["admission"]["shed_by_class"] == {"best_effort": 1}
     assert rep["conservation"]["balanced"]
     assert rep["by_class"]["best_effort"]["shed"] == 1
@@ -222,8 +222,8 @@ def test_cancel_after_packing_masks_row_out_of_micro_batch():
     for rid in (0, 2):
         np.testing.assert_array_equal(got[rid].tokens, baseline[rid].tokens)
     rep = sched.stream_report
-    assert rep["terminal"] == {COMPLETED: 2, ACCEPTED_DRAFT: 0, CANCELLED: 1,
-                               TIMED_OUT: 0, SHED: 0, FAILED: 0}
+    assert rep["terminal"] == {COMPLETED: 2, ACCEPTED_DRAFT: 0, DISTILLED: 0,
+                               CANCELLED: 1, TIMED_OUT: 0, SHED: 0, FAILED: 0}
     assert rep["conservation"]["balanced"]
 
 

@@ -1,0 +1,155 @@
+"""Property-test hardening of the t0-grid / schedule edge cases.
+
+Promotes the hand-picked float-edge tests (``bin_t0`` grid fixed points,
+``refine_schedule_rows`` step accounting, ``warm_nfe`` boundaries) to
+hypothesis properties over arbitrary grid widths, floors, t0 in [0, 1)
+up to one ulp below 1, and cold_nfe in {1..32} — the exact domains the
+serving pipeline feeds these functions from calibration and policy
+output.
+
+hypothesis is a dev-only extra (``pip install -e .[dev]``); without it
+this module skips rather than fails, so the tier-1 suite stays runnable
+on a bare environment.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core.guarantees import warm_nfe, warm_nfe_rows
+from repro.core.sampler import distill_schedule_rows, refine_schedule_rows
+from repro.drafting import bin_t0
+from repro.serving import t0_bin
+
+try:
+    from hypothesis import example, given, settings, strategies as st
+    HAS_HYPOTHESIS = True
+except ModuleNotFoundError:      # pragma: no cover - CI installs it
+    HAS_HYPOTHESIS = False
+
+def test_pinned_edge_examples_without_hypothesis():
+    """The pinned @example edge cases, runnable with or without
+    hypothesis — keeps this module collecting (and the float edges
+    covered) on a bare environment."""
+    one_ulp_under = 1.0 - 1e-12
+    assert bin_t0(one_ulp_under, width=0.05) == pytest.approx(0.95)
+    assert bin_t0(0.3 + 5011 * 1e-4, width=1e-4, floor=0.3) == pytest.approx(
+        0.3 + 5011 * 1e-4, abs=1e-9)
+    assert t0_bin(bin_t0(one_ulp_under, width=0.05), 0.05) == pytest.approx(
+        0.95, abs=1e-9)
+    assert warm_nfe_rows(20, [one_ulp_under, 0.0, 0.75]) == [1, 20, 5]
+    ts, hs, active, _, nfe = refine_schedule_rows(
+        [one_ulp_under, 0.0, 0.75], 1.0 / 20, 20)
+    np.testing.assert_array_equal(nfe, [1, 20, 5])
+    np.testing.assert_array_equal(active.sum(axis=0), nfe)
+    assert (hs >= 0.0).all()
+    ts, hs, active, _, nfe = distill_schedule_rows([one_ulp_under, 0.0], 1)
+    assert active.all() and (nfe == 1).all()
+    assert float(ts[-1, 0] + hs[-1, 0]) == pytest.approx(1.0, abs=1e-5)
+
+
+if HAS_HYPOTHESIS:
+    T0S = st.floats(min_value=0.0, max_value=1.0 - 1e-12,
+                    allow_nan=False, allow_infinity=False)
+    WIDTHS = st.floats(min_value=1e-4, max_value=0.5,
+                       allow_nan=False, allow_infinity=False)
+    FLOORS = st.floats(min_value=0.0, max_value=0.9,
+                       allow_nan=False, allow_infinity=False)
+    COLD_NFES = st.integers(min_value=1, max_value=32)
+
+    @given(t0=T0S, width=WIDTHS, floor=FLOORS)
+    @example(t0=1.0 - 1e-12, width=0.05, floor=0.0)
+    @example(t0=0.3 + 5011 * 1e-4, width=1e-4, floor=0.3)
+    @settings(max_examples=200, deadline=None)
+    def test_bin_t0_lands_on_grid_and_is_idempotent(t0, width, floor):
+        got = bin_t0(t0, width=width, floor=floor)
+        # on the grid: floor + k * width for an integer k >= 0
+        k = round((got - floor) / width)
+        assert k >= 0
+        assert got == pytest.approx(floor + k * width, abs=1e-9)
+        # never above the input (modulo the one-ulp forgiveness), never
+        # below the floor — the serve-side guarantee can only deepen
+        assert got <= max(t0, floor) + width * 1e-6
+        assert got >= floor
+        # grid points are fixed points (idempotence)
+        assert bin_t0(got, width=width, floor=floor) == pytest.approx(
+            got, abs=1e-12)
+
+    @given(a=T0S, b=T0S, width=WIDTHS, floor=FLOORS)
+    @settings(max_examples=200, deadline=None)
+    def test_bin_t0_is_monotone(a, b, width, floor):
+        lo, hi = sorted((a, b))
+        assert bin_t0(lo, width=width, floor=floor) \
+            <= bin_t0(hi, width=width, floor=floor) + 1e-15
+
+    @given(t0=T0S, width=st.one_of(st.just(0.0), WIDTHS))
+    @example(t0=1.0 - 1e-12, width=0.05)
+    @settings(max_examples=200, deadline=None)
+    def test_batcher_t0_bin_agrees_with_policy_grid(t0, width):
+        """The batcher's group-key bin and the policy's snap share one
+        epsilon policy: a policy-binned t0 is already a batcher bin edge,
+        so every policy bin maps to exactly one micro-batch group."""
+        snapped = bin_t0(t0, width=width)
+        if width == 0.0:
+            assert t0_bin(snapped, width) == snapped
+        else:
+            assert t0_bin(snapped, width) == pytest.approx(snapped, abs=1e-9)
+
+    @given(t0_rows=st.lists(T0S, min_size=1, max_size=8), cold_nfe=COLD_NFES)
+    @example(t0_rows=[1.0 - 1e-12, 0.0, 0.75], cold_nfe=20)
+    @example(t0_rows=[0.7], cold_nfe=10)          # 10*0.3 = 2.999...8 fp
+    @settings(max_examples=200, deadline=None)
+    def test_refine_schedule_rows_invariants(t0_rows, cold_nfe):
+        ts, hs, active, key_idx, nfe = refine_schedule_rows(
+            t0_rows, 1.0 / cold_nfe, cold_nfe)
+        want = warm_nfe_rows(cold_nfe, t0_rows)
+        # per-row active-step count == that row's own guarantee bound
+        np.testing.assert_array_equal(nfe, want)
+        np.testing.assert_array_equal(active.sum(axis=0), want)
+        # the shared scan is as long as the worst row, never longer
+        assert ts.shape == (max(want), len(t0_rows))
+        assert (hs >= 0.0).all()
+        # inactive steps must be inert (h == 0: the row is masked out)
+        assert (np.asarray(hs)[~np.asarray(active)] == 0.0).all()
+        for b, t0 in enumerate(t0_rows):
+            rows_active = np.flatnonzero(active[:, b])
+            # a row's active steps are a contiguous tail of the scan
+            np.testing.assert_array_equal(
+                rows_active, np.arange(ts.shape[0] - want[b], ts.shape[0]))
+            # local per-row key indices: 0..nfe-1 over the active tail
+            np.testing.assert_array_equal(
+                key_idx[rows_active, b], np.arange(want[b]))
+            # the row enters at (or below, by bin snap) its own t0 and
+            # its last step lands on t = 1
+            assert ts[rows_active[0], b] <= t0 + 1e-6
+            last = rows_active[-1]
+            assert float(ts[last, b] + hs[last, b]) == pytest.approx(
+                1.0, abs=1e-5)
+
+    @given(t0_rows=st.lists(T0S, min_size=1, max_size=8),
+           num_steps=st.integers(min_value=1, max_value=2))
+    @example(t0_rows=[1.0 - 1e-12, 0.0], num_steps=1)
+    @settings(max_examples=200, deadline=None)
+    def test_distill_schedule_rows_invariants(t0_rows, num_steps):
+        ts, hs, active, key_idx, nfe = distill_schedule_rows(
+            t0_rows, num_steps)
+        assert active.all()                  # every row runs every step
+        np.testing.assert_array_equal(nfe, num_steps)
+        assert (hs >= 0.0).all()
+        for b, t0 in enumerate(t0_rows):
+            assert ts[0, b] == pytest.approx(t0, abs=1e-6)
+            assert float(ts[-1, b] + hs[-1, b]) == pytest.approx(
+                1.0, abs=1e-5)
+
+    @given(a=T0S, b=T0S, cold_nfe=COLD_NFES)
+    @example(a=0.75, b=0.75 + 1e-12, cold_nfe=20)
+    @settings(max_examples=200, deadline=None)
+    def test_warm_nfe_monotone_non_increasing_in_t0(a, b, cold_nfe):
+        """The paper's guarantee shape: a warmer start can never cost
+        more steps. warm_nfe_rows is monotone non-increasing in t0."""
+        lo, hi = sorted((a, b))
+        n_lo, n_hi = warm_nfe_rows(cold_nfe, [lo, hi])
+        assert n_lo >= n_hi
+        assert 1 <= n_hi and n_lo <= cold_nfe
+        # and the rows variant is exactly the scalar, element-wise
+        assert [n_lo, n_hi] == [warm_nfe(cold_nfe, lo),
+                                warm_nfe(cold_nfe, hi)]

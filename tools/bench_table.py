@@ -119,6 +119,15 @@ def main(root: Path) -> None:
             f"(−{d['speculative_nfe_reduction_pct']:.0f}%), accept rate "
             f"{bs['accept_rate']:.0%} ({bs['accepted']}/{bs['eligible']})",
             "BENCH_drafting.json"))
+    dt = d.get("distilled")
+    if dt:
+        rows.append(row(
+            "distilled tier (self-distilled few-step head + quality floor)",
+            f"{dt['served']}/{dt['requests']} served at NFE={dt['nfe']} "
+            f"({dt['fallbacks']} quality-floor fallbacks, floor "
+            f"{dt['gate_score']:.2f}; blended stream mean "
+            f"{dt['mean_stream_nfe']:.1f} NFE)",
+            "BENCH_drafting.json"))
 
     print("| metric | current number (CPU smoke run) | source |")
     print("|---|---|---|")
